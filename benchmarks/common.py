@@ -1,0 +1,24 @@
+"""Shared benchmark utilities. CSV rows: name,us_per_call,derived."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall-clock microseconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def emit(rows: list[tuple[str, float, str]]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,53 @@
+"""Paper §V-B (Table I FP16 rows) + the paper's deferred question.
+
+Runtime: fp32 vs bf16 vs fp16 evaluation of the same problem.
+Quality (the paper's explicit future-work item): how far do low-precision
+function values drift, and does Greedy select different exemplars / lose
+function value when run entirely in low precision?
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import (EvalConfig, ExemplarClustering, evaluate_multiset,
+                        greedy, pack_sets)
+from repro.data.synthetic import blobs
+
+
+def run(quick: bool = False):
+    n, l, k, d = (2000, 200, 10, 100) if quick else (8000, 800, 10, 100)
+    X, _ = blobs(n, d, centers=16, seed=3)
+    V = jnp.asarray(X)
+    rng = np.random.default_rng(4)
+    sets = [X[rng.choice(n, size=k, replace=False)] for _ in range(l)]
+    pk = pack_sets(sets)
+
+    rows = []
+    vals = {}
+    for pol in ("fp32", "bf16", "fp16", "fp16_strict"):
+        cfg = EvalConfig(policy=pol)
+        t = time_call(lambda cfg=cfg: evaluate_multiset(V, pk, cfg))
+        v = np.asarray(evaluate_multiset(V, pk, cfg))
+        vals[pol] = v
+        drift = (np.max(np.abs(v - vals["fp32"])
+                        / np.maximum(np.abs(vals["fp32"]), 1e-9))
+                 if pol != "fp32" else 0.0)
+        rows.append((f"precision_{pol}", t, f"max_rel_drift={drift:.2e}"))
+
+    # quality: full greedy runs per precision (paper future work)
+    kk = 16 if quick else 24
+    Vq = V[:4000] if not quick else V
+    base = greedy(ExemplarClustering(Vq, EvalConfig(policy="fp32")), kk)
+    f32 = ExemplarClustering(Vq, EvalConfig(policy="fp32"))
+    for pol in ("bf16", "fp16", "fp16_strict"):
+        res = greedy(ExemplarClustering(Vq, EvalConfig(policy=pol)), kk)
+        # evaluate the low-precision selection under the fp32 objective
+        v_under_fp32 = f32.value(Vq[np.asarray(res.indices)])
+        overlap = len(set(res.indices) & set(base.indices)) / kk
+        rows.append((f"greedy_quality_{pol}", 0.0,
+                     f"value_ratio={v_under_fp32 / base.value:.6f};"
+                     f"overlap={overlap:.2f}"))
+    emit(rows)
+    return rows

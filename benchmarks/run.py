@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only name]``
+
+CSV rows: name,us_per_call,derived. Mapping to the paper:
+  sweeps          — Fig. 3/4 + Table I (vary N / l / k; naive vs work-matrix)
+  precision       — §V-B FP16 runtimes + the deferred quality question
+  chunking        — §IV-B-3 memory-budgeted evaluation
+  greedy_modes    — beyond-paper optimizer-aware greedy + engine modes
+  kernel_roofline — TPU roofline of the Pallas kernels at paper sizes
+  optimizers      — §IV-A optimizer evaluation-count profile
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+
+MODULES = ["sweeps", "precision", "chunking", "greedy_modes",
+           "kernel_roofline", "optimizers"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    print("name,us_per_call,derived")
+    for m in mods:
+        mod = importlib.import_module(f"benchmarks.{m}")
+        mod.run(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

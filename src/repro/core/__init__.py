@@ -1,0 +1,34 @@
+"""Core submodular exemplar-clustering library (the paper's contribution)."""
+from repro.core.evaluator import (
+    ChunkingError,
+    EvalConfig,
+    bytes_per_set,
+    evaluate_multiset,
+    plan_chunks,
+    work_matrix,
+)
+from repro.core.functions import ExemplarClustering
+from repro.core.multiset import PackedMultiset, pack_base_plus_candidates, pack_sets
+from repro.core.optimizers import (
+    OPTIMIZERS,
+    OptResult,
+    greedy,
+    lazy_greedy,
+    salsa,
+    sieve_streaming,
+    sieve_streaming_pp,
+    stochastic_greedy,
+    three_sieves,
+)
+from repro.core.clustering import ExemplarModel, fit_exemplar_clustering
+from repro.core.precision import BF16, FP16, FP16_STRICT, FP32, PrecisionPolicy
+
+__all__ = [
+    "BF16", "FP16", "FP16_STRICT", "FP32", "PrecisionPolicy",
+    "ChunkingError", "EvalConfig", "bytes_per_set", "evaluate_multiset",
+    "plan_chunks", "work_matrix", "ExemplarClustering", "PackedMultiset",
+    "pack_base_plus_candidates", "pack_sets", "OPTIMIZERS", "OptResult",
+    "greedy", "lazy_greedy", "salsa", "sieve_streaming", "sieve_streaming_pp",
+    "stochastic_greedy", "three_sieves", "ExemplarModel",
+    "fit_exemplar_clustering",
+]

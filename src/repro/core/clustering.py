@@ -1,0 +1,57 @@
+"""Clustering front-end: exemplar selection → cluster assignment.
+
+The paper frames exemplar clustering as "select S, then partition the data
+space by nearest exemplar". This module is the user-facing API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_mod
+from repro.core.evaluator import EvalConfig
+from repro.core.functions import ExemplarClustering
+from repro.core.optimizers import OPTIMIZERS, OptResult
+from repro.core.precision import resolve as resolve_policy
+
+
+@dataclasses.dataclass
+class ExemplarModel:
+    """Fitted exemplar clustering model."""
+
+    exemplar_indices: list[int]
+    exemplars: np.ndarray
+    value: float
+    result: OptResult
+    cfg: EvalConfig
+
+    def assign(self, X: jax.Array) -> np.ndarray:
+        """Nearest-exemplar label for each row of X."""
+        pair = dist_mod.resolve_pairwise(self.cfg.distance)
+        D = pair(jnp.asarray(X), jnp.asarray(self.exemplars),
+                 resolve_policy(self.cfg.policy))
+        return np.asarray(jnp.argmin(D, axis=1))
+
+
+def fit_exemplar_clustering(
+    X: jax.Array,
+    k: int,
+    optimizer: str = "greedy",
+    cfg: EvalConfig = EvalConfig(),
+    e0: Optional[jax.Array] = None,
+    **opt_kwargs,
+) -> ExemplarModel:
+    """Select k exemplars from X by submodular maximization and return a model."""
+    f = ExemplarClustering(jnp.asarray(X), cfg, e0=e0)
+    try:
+        opt = OPTIMIZERS[optimizer]
+    except KeyError as e:
+        raise ValueError(f"unknown optimizer {optimizer!r}; "
+                         f"options {sorted(OPTIMIZERS)}") from e
+    res = opt(f, k, **opt_kwargs)
+    ex = np.asarray(jax.device_get(f.V))[res.indices]
+    return ExemplarModel(res.indices, ex, res.value, res, cfg)

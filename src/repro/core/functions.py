@@ -1,0 +1,130 @@
+"""Submodular functions: exemplar-based clustering (paper Def. 5) and friends.
+
+``ExemplarClustering`` is the paper's function
+
+    f(S) = L({e0}) − L(S ∪ {e0})
+
+wrapped around the multiset evaluation engine. It additionally exposes the
+*optimizer-aware incremental interface* (min-distance cache) used by Greedy —
+see DESIGN.md §2 "one step further".
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_mod
+from repro.core.evaluator import EvalConfig, e0_distances, evaluate_multiset
+from repro.core.multiset import PackedMultiset, pack_base_plus_candidates, pack_sets
+from repro.core.precision import resolve as resolve_policy
+
+
+@partial(jax.jit, static_argnames=("distance", "policy_name"))
+def _gains_vs_cache(V, cands, mincache, distance, policy_name):
+    """Δ(c_j | S) = |V|⁻¹ Σ_i relu(m_i − d(v_i, c_j)) for all candidates."""
+    pair = dist_mod.resolve_pairwise(distance)
+    D = pair(V, cands, resolve_policy(policy_name))  # (n, m)
+    gains = jnp.sum(jnp.maximum(mincache[:, None] - D, 0.0), axis=0)
+    return gains / V.shape[0]
+
+
+@partial(jax.jit, static_argnames=("distance", "policy_name"))
+def _update_cache(V, new_point, mincache, distance, policy_name):
+    pair = dist_mod.resolve_pairwise(distance)
+    D = pair(V, new_point[None, :], resolve_policy(policy_name))[:, 0]
+    return jnp.minimum(mincache, D)
+
+
+class ExemplarClustering:
+    """Monotone submodular exemplar-clustering function over a ground set V.
+
+    Args:
+      V: (n, d) ground set.
+      cfg: evaluation configuration (distance, precision, mode, backend).
+      e0: auxiliary vector (paper: the all-zero vector). None → zeros.
+    """
+
+    def __init__(self, V: jax.Array, cfg: EvalConfig = EvalConfig(),
+                 e0: Optional[jax.Array] = None):
+        self.V = jnp.asarray(V)
+        self.cfg = cfg
+        self.e0 = e0
+        # L({e0}) is S-independent; computed "conventionally" once (paper §IV-B-1)
+        self.d_e0 = e0_distances(self.V, e0, cfg.distance)
+        self.L0 = float(jnp.mean(self.d_e0))
+
+    # -- generic multiset interface (the paper's engine) --------------------
+
+    def loss_multi(self, packed: PackedMultiset) -> jax.Array:
+        """L(S_j ∪ {e0}) for all sets — (l,)."""
+        return evaluate_multiset(self.V, packed, self.cfg, d_e0=self.d_e0)
+
+    def value_multi(self, packed: PackedMultiset) -> jax.Array:
+        """f(S_j) for all sets — (l,)."""
+        return self.L0 - self.loss_multi(packed)
+
+    def value(self, S: jax.Array) -> float:
+        """f(S) for a single (k, d) set. Empty S → 0 (paper §IV)."""
+        S = jnp.asarray(S)
+        if S.ndim != 2:
+            raise ValueError(f"S must be (k, d), got {S.shape}")
+        if S.shape[0] == 0:
+            return 0.0
+        packed = PackedMultiset(S[None], jnp.array([S.shape[0]], jnp.int32))
+        return float(self.value_multi(packed)[0])
+
+    def value_sets(self, sets: Sequence[np.ndarray]) -> jax.Array:
+        return self.value_multi(pack_sets(sets, dtype=self.cfg.resolved_policy().compute_dtype))
+
+    def greedy_step_values(self, base: jax.Array, candidates: jax.Array) -> jax.Array:
+        """Paper-faithful greedy step: f(S ∪ {c_j}) for all candidates."""
+        packed = pack_base_plus_candidates(base, candidates)
+        return self.value_multi(packed)
+
+    # -- optimizer-aware incremental interface (beyond paper) ---------------
+
+    def init_mincache(self) -> jax.Array:
+        """m_i = d(v_i, e0): the min-dist cache of S = ∅ (e0 always included)."""
+        return self.d_e0
+
+    def marginal_gains(self, candidates: jax.Array, mincache: jax.Array,
+                       use_kernel: bool = False) -> jax.Array:
+        """Δ(c_j | S) for all candidates given S's min-dist cache. O(n·m·d)."""
+        policy = self.cfg.resolved_policy()
+        if use_kernel or self.cfg.backend in ("pallas", "pallas_interpret"):
+            from repro.kernels import ops as kops
+
+            return kops.marginal_gain(
+                self.V, candidates, mincache, policy=policy,
+                interpret=(self.cfg.backend != "pallas"),
+            )
+        return _gains_vs_cache(self.V, candidates, mincache,
+                               self.cfg.distance, policy.name)
+
+    def update_mincache(self, mincache: jax.Array, new_point: jax.Array) -> jax.Array:
+        return _update_cache(self.V, new_point, mincache,
+                             self.cfg.distance, self.cfg.resolved_policy().name)
+
+    def value_from_mincache(self, mincache: jax.Array) -> float:
+        return self.L0 - float(jnp.mean(mincache))
+
+    def point_distances(self, x: jax.Array) -> jax.Array:
+        """d(v_i, x) for all i — one streaming element against the ground set."""
+        pair = dist_mod.resolve_pairwise(self.cfg.distance)
+        policy = self.cfg.resolved_policy()
+        return pair(self.V, x[None, :], policy)[:, 0]
+
+    # -- metadata ------------------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.V.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.V.shape[1]

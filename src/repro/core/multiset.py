@@ -1,0 +1,113 @@
+"""Packed representation of a *multiset of evaluation sets* (paper §IV-B-2).
+
+The paper packs ``S_multi = {S_1 … S_l}`` into one dense device buffer so that
+(a) the host→device copy is a single large transaction and (b) on-device access
+is coalesced. Sets of unequal size leave blank fields ("not absolutely
+space-efficient", §IV-B-2) — the same trade-off here becomes zero-padding plus
+a validity mask.
+
+TPU adaptation (DESIGN.md §2/§6): the CUDA code interleaves vectors round-robin
+so that *warp* lanes touching ``s_j[k]`` hit one memory segment. On TPU the
+consumer is a matmul over a ``(l·k_max, d)`` operand, so the optimal layout is
+the dense row-major ``(l, k_max, d)`` block itself — interleaving would destroy
+the contraction layout. The padding-fraction accounting (``pad_fraction``)
+matches the paper's blank-field accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedMultiset:
+    """Dense ``(l, k_max, d)`` payload + per-set lengths.
+
+    Attributes:
+      data: ``(l, k_max, d)`` array; rows past ``lengths[j]`` are padding.
+      lengths: ``(l,)`` int32 number of valid vectors per set.
+    """
+
+    data: jax.Array
+    lengths: jax.Array
+
+    @property
+    def num_sets(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[2]
+
+    def mask(self) -> jax.Array:
+        """(l, k_max) bool — True where a slot holds a real vector."""
+        return jnp.arange(self.k_max)[None, :] < self.lengths[:, None]
+
+    def pad_fraction(self) -> float:
+        """Fraction of allocated slots that are blank (paper's unused fields)."""
+        total = self.num_sets * self.k_max
+        used = int(np.asarray(jax.device_get(jnp.sum(self.lengths))))
+        return 1.0 - used / max(total, 1)
+
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize + self.lengths.size * 4
+
+    def slice_sets(self, start: int, stop: int) -> "PackedMultiset":
+        """Chunking support: a view of sets [start, stop) (paper §IV-B-3)."""
+        return PackedMultiset(self.data[start:stop], self.lengths[start:stop])
+
+
+def pack_sets(sets: Sequence[np.ndarray], dtype=jnp.float32) -> PackedMultiset:
+    """Pack a list of ``(k_j, d)`` arrays into a PackedMultiset."""
+    if not sets:
+        raise ValueError("cannot pack an empty multiset")
+    dims = {s.shape[-1] for s in sets}
+    if len(dims) != 1:
+        raise ValueError(f"inconsistent dims across sets: {dims}")
+    d = dims.pop()
+    lengths = np.array([s.shape[0] for s in sets], dtype=np.int32)
+    k_max = int(lengths.max())
+    l = len(sets)
+    buf = np.zeros((l, k_max, d), dtype=np.float32)
+    for j, s in enumerate(sets):
+        buf[j, : s.shape[0]] = np.asarray(s, dtype=np.float32)
+    return PackedMultiset(jnp.asarray(buf, dtype=dtype), jnp.asarray(lengths))
+
+
+def pack_base_plus_candidates(
+    base: jax.Array, candidates: jax.Array, base_len: int | None = None
+) -> PackedMultiset:
+    """Greedy-step multiset: ``S_j = S ∪ {c_j}`` without an l× copy of S.
+
+    Returns a PackedMultiset with ``data[j] = concat(S, c_j)``. The base is
+    broadcast (XLA materializes it lazily under jit), matching the paper's
+    observation that Greedy's equal-size sets make the dense layout free of
+    blank fields.
+
+    Args:
+      base: ``(k, d)`` current set (k may be 0).
+      candidates: ``(m, d)``.
+      base_len: valid prefix length of ``base`` if it is itself padded.
+    """
+    m = candidates.shape[0]
+    k = base.shape[0]
+    blen = k if base_len is None else base_len
+    tiled = jnp.broadcast_to(base[None], (m, k, base.shape[-1]))
+    data = jnp.concatenate([tiled, candidates[:, None, :]], axis=1)
+    lengths = jnp.full((m,), blen + 1, dtype=jnp.int32)
+    # Move each candidate into the first padding slot when base is padded:
+    # slot order is irrelevant to min-reduction, so leaving the candidate at
+    # position k with mask length blen+1 would be wrong only if blen < k.
+    if base_len is not None and base_len < k:
+        # place candidate at index blen instead of k
+        data = data.at[:, blen, :].set(candidates)
+        data = data[:, : blen + 1, :]
+    return PackedMultiset(data, lengths)

@@ -1,0 +1,378 @@
+"""Submodular maximizers built on the multiset evaluation engine.
+
+Every optimizer here evaluates *many* sets per step — the paper's central
+observation ("optimizer-aware", §IV-A). Two evaluation styles are used:
+
+* **multiset** — the paper-faithful path: each step packs
+  ``{S ∪ {c_1}, …, S ∪ {c_m}}`` and calls the work-matrix engine. O(n·k·l).
+* **mincache** — the beyond-paper incremental path: gains against the
+  min-distance cache. O(n·l·d) per step (k drops out).
+
+Optimizers:
+  greedy               Nemhauser–Wolsey–Fisher (1−1/e); both styles.
+  lazy_greedy          CELF lazy evaluation with stale upper bounds.
+  stochastic_greedy    Mirzasoleiman et al. sampled candidates.
+  sieve_streaming      Badanidiyuru et al. (1/2 − ε), streaming.
+  sieve_streaming_pp   Kazemi et al., LB-pruned sieves (1/2 − ε), less memory.
+  three_sieves         Buschjäger et al., single adaptive sieve ((1−ε)(1−1/e)
+                       w.h.p.), minimal memory.
+  salsa                Norouzi-Fard et al. dense-threshold ensemble
+                       (simplified: fixed dense schedules, no OPT oracle).
+
+All return an :class:`OptResult` (indices into V, value, trajectory, and the
+number of *set-function evaluations* — the paper's cost unit l).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Iterable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.functions import ExemplarClustering
+
+
+@dataclasses.dataclass
+class OptResult:
+    indices: list[int]
+    value: float
+    trajectory: list[float]
+    evaluations: int
+
+    def exemplars(self, V) -> np.ndarray:
+        return np.asarray(V)[self.indices]
+
+
+# ---------------------------------------------------------------------------
+# Greedy family
+# ---------------------------------------------------------------------------
+
+
+def greedy(
+    f: ExemplarClustering,
+    k: int,
+    mode: str = "mincache",
+    candidates: Optional[np.ndarray] = None,
+) -> OptResult:
+    """Algorithm 1 of the paper. ``mode`` picks the evaluation style."""
+    n = f.n
+    cand_idx = np.arange(n) if candidates is None else np.asarray(candidates)
+    selected: list[int] = []
+    traj: list[float] = []
+    evals = 0
+    if mode == "mincache":
+        cache = f.init_mincache()
+        for _ in range(k):
+            gains = np.array(f.marginal_gains(f.V[cand_idx], cache))
+            evals += len(cand_idx)
+            gains[np.isin(cand_idx, selected)] = -np.inf
+            j = int(cand_idx[int(np.argmax(gains))])
+            selected.append(j)
+            cache = f.update_mincache(cache, f.V[j])
+            traj.append(f.value_from_mincache(cache))
+    elif mode == "multiset":
+        for _ in range(k):
+            base = f.V[np.asarray(selected, dtype=np.int64)] if selected else \
+                jnp.zeros((0, f.dim), f.V.dtype)
+            vals = np.array(f.greedy_step_values(base, f.V[cand_idx]))
+            evals += len(cand_idx)
+            vals[np.isin(cand_idx, selected)] = -np.inf
+            j = int(cand_idx[int(np.argmax(vals))])
+            selected.append(j)
+            traj.append(float(vals.max()))
+    else:
+        raise ValueError(f"unknown greedy mode {mode!r}")
+    return OptResult(selected, traj[-1] if traj else 0.0, traj, evals)
+
+
+def lazy_greedy(f: ExemplarClustering, k: int, batch: int = 256) -> OptResult:
+    """CELF: maintain stale upper bounds (submodularity ⇒ gains only shrink).
+
+    Re-evaluates the top-``batch`` stale candidates at once so the evaluation
+    engine still sees multiset-sized problems (optimizer-awareness preserved).
+    """
+    n = f.n
+    cache = f.init_mincache()
+    gains = np.asarray(f.marginal_gains(f.V, cache))
+    evals = n
+    # max-heap of (-upper_bound, index, round_evaluated)
+    heap = [(-g, i, 0) for i, g in enumerate(gains)]
+    heapq.heapify(heap)
+    selected: list[int] = []
+    traj: list[float] = []
+    for rnd in range(1, k + 1):
+        while True:
+            top = [heapq.heappop(heap) for _ in range(min(batch, len(heap)))]
+            fresh_mask = [t[2] == rnd for t in top]
+            if fresh_mask[0]:
+                # best candidate is fresh — take it, push the rest back
+                _, j, _ = top[0]
+                for t in top[1:]:
+                    heapq.heappush(heap, t)
+                break
+            idx = np.array([t[1] for t in top])
+            new_gains = np.asarray(f.marginal_gains(f.V[idx], cache))
+            evals += len(idx)
+            for g, i in zip(new_gains, idx):
+                heapq.heappush(heap, (-float(g), int(i), rnd))
+        selected.append(int(j))
+        cache = f.update_mincache(cache, f.V[j])
+        traj.append(f.value_from_mincache(cache))
+    return OptResult(selected, traj[-1], traj, evals)
+
+
+def stochastic_greedy(
+    f: ExemplarClustering, k: int, eps: float = 0.05, seed: int = 0
+) -> OptResult:
+    """Sample ⌈(n/k)·ln(1/ε)⌉ candidates per round; (1−1/e−ε) in expectation."""
+    n = f.n
+    rng = np.random.default_rng(seed)
+    m = min(n, int(math.ceil(n / k * math.log(1.0 / eps))))
+    cache = f.init_mincache()
+    selected: list[int] = []
+    traj: list[float] = []
+    evals = 0
+    for _ in range(k):
+        pool = np.setdiff1d(np.arange(n), np.asarray(selected, dtype=np.int64))
+        cand = rng.choice(pool, size=min(m, len(pool)), replace=False)
+        gains = np.asarray(f.marginal_gains(f.V[cand], cache))
+        evals += len(cand)
+        j = int(cand[int(np.argmax(gains))])
+        selected.append(j)
+        cache = f.update_mincache(cache, f.V[j])
+        traj.append(f.value_from_mincache(cache))
+    return OptResult(selected, traj[-1], traj, evals)
+
+
+# ---------------------------------------------------------------------------
+# Streaming sieves — all share a vectorized multi-sieve state so that one
+# arriving element is evaluated against *all* sieves in a single engine call
+# (this is exactly the paper's multiset-parallelized problem).
+# ---------------------------------------------------------------------------
+
+
+class _SieveState:
+    """Vectorized state for a dynamic collection of threshold sieves."""
+
+    def __init__(self, f: ExemplarClustering, k: int):
+        self.f = f
+        self.k = k
+        self.thresholds: list[float] = []
+        self.caches = np.zeros((0, f.n), np.float32)  # per-sieve min-dist cache
+        self.members: list[list[int]] = []
+
+    def add_sieve(self, tau: float):
+        self.thresholds.append(tau)
+        base = np.asarray(self.f.init_mincache(), np.float32)[None]
+        self.caches = np.concatenate([self.caches, base], axis=0)
+        self.members.append([])
+
+    def drop(self, keep: np.ndarray):
+        self.thresholds = [t for t, m in zip(self.thresholds, keep) if m]
+        self.caches = self.caches[keep]
+        self.members = [s for s, m in zip(self.members, keep) if m]
+
+    def values(self) -> np.ndarray:
+        if not self.thresholds:
+            return np.zeros((0,), np.float32)
+        return self.f.L0 - self.caches.mean(axis=1)
+
+    def offer(self, idx: int, dvec: np.ndarray, accept_rule) -> np.ndarray:
+        """Offer element ``idx`` to every sieve; accept per ``accept_rule``.
+
+        accept_rule(gains, sizes, values) -> bool mask. Returns the mask.
+        """
+        if not self.thresholds:
+            return np.zeros((0,), bool)
+        gains = np.maximum(self.caches - dvec[None, :], 0.0).mean(axis=1)
+        sizes = np.array([len(m) for m in self.members])
+        accept = accept_rule(gains, sizes, self.values()) & (sizes < self.k)
+        if accept.any():
+            upd = np.minimum(self.caches[accept], dvec[None, :])
+            self.caches[accept] = upd
+            for si in np.nonzero(accept)[0]:
+                self.members[si].append(idx)
+        return accept
+
+    def best(self) -> tuple[list[int], float]:
+        vals = self.values()
+        if len(vals) == 0:
+            return [], 0.0
+        b = int(np.argmax(vals))
+        return self.members[b], float(vals[b])
+
+
+def _threshold_grid(lo: float, hi: float, eps: float) -> list[float]:
+    """{(1+eps)^i} ∩ [lo, hi] (paper refs [4], [19])."""
+    if hi <= 0 or lo <= 0:
+        return []
+    i_lo = math.ceil(math.log(lo) / math.log1p(eps))
+    i_hi = math.floor(math.log(hi) / math.log1p(eps))
+    return [(1 + eps) ** i for i in range(i_lo, i_hi + 1)]
+
+
+def _stream(f: ExemplarClustering, order: Optional[Sequence[int]], seed: int) -> Iterable[int]:
+    idx = np.arange(f.n)
+    if order is None:
+        np.random.default_rng(seed).shuffle(idx)
+        return idx
+    return np.asarray(order)
+
+
+def sieve_streaming(
+    f: ExemplarClustering, k: int, eps: float = 0.1,
+    order: Optional[Sequence[int]] = None, seed: int = 0,
+) -> OptResult:
+    """SieveStreaming [4]: thresholds (1+ε)^i ∈ [m, 2km], m = max singleton."""
+    st = _SieveState(f, k)
+    m_seen = 0.0
+    evals = 0
+    for idx in _stream(f, order, seed):
+        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
+        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
+        if singleton > m_seen:
+            m_seen = singleton
+            want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
+            have = set(st.thresholds)
+            keep = np.array([t >= m_seen for t in st.thresholds], bool)
+            if len(keep) and not keep.all():
+                st.drop(keep)
+            for t in want:
+                if t not in have:
+                    st.add_sieve(t)
+
+        taus = np.array(st.thresholds)
+        def rule(gains, sizes, values, taus=taus):
+            need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
+            return gains >= need
+        st.offer(int(idx), dvec, rule)
+        evals += max(len(st.thresholds), 1)
+    members, value = st.best()
+    return OptResult(members, value, [value], evals)
+
+
+def sieve_streaming_pp(
+    f: ExemplarClustering, k: int, eps: float = 0.1,
+    order: Optional[Sequence[int]] = None, seed: int = 0,
+) -> OptResult:
+    """SieveStreaming++ [19]: prune sieves below LB = best current value."""
+    st = _SieveState(f, k)
+    m_seen, lb = 0.0, 0.0
+    evals = 0
+    for idx in _stream(f, order, seed):
+        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
+        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
+        m_seen = max(m_seen, singleton)
+        lo = max(lb, m_seen)
+        want = _threshold_grid(lo, 2.0 * k * m_seen, eps)
+        have = set(st.thresholds)
+        if st.thresholds:
+            keep = np.array([t >= lo / (1 + eps) for t in st.thresholds], bool)
+            if not keep.all():
+                st.drop(keep)
+                have = set(st.thresholds)
+        for t in want:
+            if t not in have:
+                st.add_sieve(t)
+        taus = np.array(st.thresholds)
+        def rule(gains, sizes, values, taus=taus):
+            need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
+            return gains >= need
+        st.offer(int(idx), dvec, rule)
+        evals += max(len(st.thresholds), 1)
+        vals = st.values()
+        if len(vals):
+            lb = max(lb, float(vals.max()))
+    members, value = st.best()
+    return OptResult(members, value, [value], evals)
+
+
+def three_sieves(
+    f: ExemplarClustering, k: int, eps: float = 0.1, T: int = 50,
+    order: Optional[Sequence[int]] = None, seed: int = 0,
+) -> OptResult:
+    """ThreeSieves [18]: one sieve, threshold lowered after T rejections."""
+    cache = np.asarray(f.init_mincache(), np.float32)
+    members: list[int] = []
+    evals = 0
+    m_seen = 0.0
+    tau_idx: Optional[int] = None  # current exponent into the (1+eps) grid
+    rejections = 0
+    for idx in _stream(f, order, seed):
+        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
+        gain = float(np.maximum(cache - dvec, 0.0).mean())
+        evals += 1
+        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
+        if singleton > m_seen:
+            m_seen = singleton
+            hi = k * m_seen
+            tau_idx = math.floor(math.log(hi) / math.log1p(eps)) if hi > 0 else None
+            rejections = 0
+        if tau_idx is None or len(members) >= k:
+            continue
+        tau = (1 + eps) ** tau_idx
+        f_cur = f.L0 - float(cache.mean())
+        need = (tau - f_cur) / max(k - len(members), 1)
+        if gain >= need:
+            members.append(int(idx))
+            cache = np.minimum(cache, dvec)
+            rejections = 0
+        else:
+            rejections += 1
+            if rejections >= T:
+                tau_idx -= 1
+                rejections = 0
+                if (1 + eps) ** tau_idx < m_seen / (2 * k):
+                    break  # threshold exhausted
+    value = f.L0 - float(cache.mean())
+    return OptResult(members, value, [value], evals)
+
+
+def salsa(
+    f: ExemplarClustering, k: int, eps: float = 0.1,
+    order: Optional[Sequence[int]] = None, seed: int = 0,
+) -> OptResult:
+    """Salsa [20], simplified: an ensemble of dense-threshold passes.
+
+    The full Salsa interleaves several threshold policies tuned to an OPT
+    guess. We run, per OPT guess on the (1+ε) grid, a *dense* policy that
+    accepts element e into sieve S when Δ(e|S) ≥ r·OPT_guess/k with r
+    following the original schedule (1/2 early, 1/(2e) late), and return the
+    best sieve. Single pass, same memory as SieveStreaming.
+    """
+    st = _SieveState(f, k)
+    m_seen = 0.0
+    evals = 0
+    early, late = 0.5, 1.0 / (2.0 * math.e)
+    for idx in _stream(f, order, seed):
+        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
+        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
+        if singleton > m_seen:
+            m_seen = singleton
+            want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
+            have = set(st.thresholds)
+            for t in want:
+                if t not in have:
+                    st.add_sieve(t)
+        taus = np.array(st.thresholds)
+        def rule(gains, sizes, values, taus=taus):
+            r = np.where(sizes < k // 2, early, late)
+            return gains >= r * taus / k
+        st.offer(int(idx), dvec, rule)
+        evals += max(len(st.thresholds), 1)
+    members, value = st.best()
+    return OptResult(members, value, [value], evals)
+
+
+OPTIMIZERS = {
+    "greedy": greedy,
+    "lazy_greedy": lazy_greedy,
+    "stochastic_greedy": stochastic_greedy,
+    "sieve_streaming": sieve_streaming,
+    "sieve_streaming_pp": sieve_streaming_pp,
+    "three_sieves": three_sieves,
+    "salsa": salsa,
+}

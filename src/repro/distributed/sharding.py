@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every tensor in the model stack annotates its dims with *logical* names
+(``"batch"``, ``"tp"``, ``"fsdp"``, …). A :class:`MeshRules` object maps those
+to physical mesh axes and — crucially for heterogeneous architectures — drops
+or relocates axes that don't divide (e.g. gemma3's 1 KV head cannot be
+16-way tensor-parallel, so the ``"tp"`` assignment falls through to the
+head_dim dimension, which *is* divisible).
+
+Dim spec format: each tensor dim is a tuple of logical names tried in
+priority rounds; round p tries every dim's p-th alternative. ``None`` skips a
+round, so ``(None, "tp")`` means "take the model axis only if no earlier dim
+claimed it" — the fallback mechanism.
+
+Example (GQA KV cache, kv_heads=1 on a (data=16, model=16) mesh)::
+
+    dims = (("batch",), (), ("tp",), ((None, "tp")))
+    # round 0: batch→data; tp on kv_heads fails (1 % 16 != 0)
+    # round 1: head_dim claims "model" instead → P("data", None, None, "model")
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# A dim spec: tuple of (logical name | None) tried in priority rounds.
+DimSpec = Sequence[Optional[str]]
+
+
+def default_logical_rules(mesh: Mesh) -> dict[str, tuple[str, ...]]:
+    """Map logical names → physical mesh axes, for any of our meshes."""
+    axes = set(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = ("model",) if "model" in axes else ()
+    return {
+        "batch": dp,          # activations' batch dim
+        "fsdp": dp,           # parameter / optimizer-state sharding (ZeRO-3)
+        "pod": ("pod",) if "pod" in axes else (),
+        "data": ("data",) if "data" in axes else (),
+        "tp": tp,             # tensor parallel (heads / mlp / vocab / experts)
+        "sp": ("data",) if "data" in axes else (),  # sequence/context parallel
+        "expert": tp,         # expert parallel shares the model axis
+    }
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    logical: dict[str, tuple[str, ...]]
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh) -> "MeshRules":
+        return cls(mesh, default_logical_rules(mesh))
+
+    def _axis_size(self, phys: tuple[str, ...]) -> int:
+        return math.prod(self.mesh.shape[a] for a in phys)
+
+    def spec(self, shape: Sequence[int], dims: Sequence[DimSpec]) -> PartitionSpec:
+        """Build a PartitionSpec with the priority-round fallback algorithm."""
+        if len(shape) != len(dims):
+            raise ValueError(f"shape {shape} vs dims {dims} length mismatch")
+        out: list = [None] * len(shape)
+        used: set[str] = set()
+        rounds = max((len(d) for d in dims), default=0)
+        for p in range(rounds):
+            for i, alts in enumerate(dims):
+                if out[i] is not None or p >= len(alts) or alts[p] is None:
+                    continue
+                phys = self.logical.get(alts[p], ())
+                phys = tuple(a for a in phys if a in self.mesh.shape)
+                if not phys or any(a in used for a in phys):
+                    continue
+                if shape[i] % self._axis_size(phys) != 0:
+                    continue
+                out[i] = phys if len(phys) > 1 else phys[0]
+                used.update(phys)
+        return PartitionSpec(*out)
+
+    def sharding(self, shape, dims) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, dims))
+
+    def constraint(self, x: jax.Array, dims: Sequence[DimSpec]) -> jax.Array:
+        """with_sharding_constraint using the rule system; no-op off-mesh."""
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(x.shape, dims))
+        )
+
+
+class NoRules:
+    """Identity stand-in used for single-device smoke tests."""
+
+    def constraint(self, x, dims):
+        return x
+
+    def spec(self, shape, dims):
+        return PartitionSpec()
+
+
+def shard_activation(rules, x, kind: str):
+    """Common activation constraint shorthands."""
+    if rules is None or isinstance(rules, NoRules):
+        return x
+    table = {
+        "tokens": ((("batch",), ("sp",))),
+        "embed": (("batch",), ("sp",), (None,)),
+        "heads": (("batch",), (None,), ("tp",), ((None, "tp"))),
+        "logits": (("batch",), (None,), ("tp",)),
+    }
+    return rules.constraint(x, table[kind])

@@ -1,0 +1,252 @@
+"""Pallas TPU kernel for multiset exemplar-clustering evaluation.
+
+This is the TPU-native version of the paper's GPU kernel (Algorithm 3):
+
+* The CUDA kernel assigns one *thread* per work-matrix cell ``W[j,i]``; here
+  one *grid step* computes a ``(Bl × Bn)`` tile of cells.
+* Shared-memory staging of ``v_i`` becomes a ``BlockSpec``-driven HBM→VMEM
+  copy of a ``(Bn, d)`` tile of V (double-buffered by the Pallas pipeline).
+* The per-thread scalar loop ``min over s ∈ S_j`` becomes, per k-step, an MXU
+  contraction ``(Bn, d) · (d, Bl)`` through the Gram identity
+  ``‖v−s‖² = ‖v‖² + ‖s‖² − 2⟨v,s⟩`` — see DESIGN.md §2.
+
+Two data layouts (kernel *variants*):
+
+* ``loop`` — S stays ``(l, k, d)``; the kernel loops over k, issuing one
+  ``(Bn,d)·(d,Bl)`` matmul per step with a running elementwise min.
+* ``flat`` — S is pre-transposed to ``(k, l, d)`` ("k-major"). This is the
+  TPU analogue of the paper's round-robin interleave (§IV-B-2): vector
+  *lanes* hold consecutive sets for a fixed k, so a single
+  ``(Bn, d)·(d, k·Bl)`` matmul computes every (set, k) pair at once and the
+  min over k is a clean sublane reduction of a ``(Bn, k, Bl)`` tile.
+
+Two reduction modes:
+
+* ``fused`` (beyond paper) — the row-sum over n is accumulated across grid
+  steps directly in the output block; W never reaches HBM.
+* ``two_pass`` (paper-faithful) — W tiles are written to HBM and reduced by a
+  second pass, exactly like the paper's ``W·1`` GEMV.
+
+Grid: ``(l_tiles, n_tiles)`` with n innermost so the fused accumulator block
+(indexed by the l tile only) stays resident while n streams past.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.precision import PrecisionPolicy
+
+_BIG = 3.0e38  # +inf stand-in that survives fp32 math
+
+
+def _maybe_rbf(d2, rbf_gamma):
+    if rbf_gamma is None:
+        return d2
+    return 2.0 * (1.0 - jnp.exp(-rbf_gamma * d2))
+
+
+def _sq_norms(x, accum_dtype):
+    xa = x.astype(accum_dtype)
+    return jnp.sum(xa * xa, axis=-1)
+
+
+def _dist_tile(v, s, policy: PrecisionPolicy, rbf_gamma):
+    """(Bn, d)×(B, d) → (Bn, B) squared distances via the MXU."""
+    g = jax.lax.dot_general(
+        v, s, (((1,), (1,)), ((), ())),
+        preferred_element_type=policy.accum_dtype,
+    )
+    vn = _sq_norms(v, policy.accum_dtype)
+    sn = _sq_norms(s, policy.accum_dtype)
+    d2 = jnp.maximum(vn[:, None] + sn[None, :] - 2.0 * g, 0.0)
+    return _maybe_rbf(d2, rbf_gamma)
+
+
+# ---------------------------------------------------------------------------
+# fused kernels
+# ---------------------------------------------------------------------------
+
+
+def _fused_loop_kernel(v_ref, s_ref, len_ref, e0_ref, out_ref, *,
+                       k: int, n_total: int, policy: PrecisionPolicy,
+                       rbf_gamma, unroll: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = v_ref[...].astype(policy.compute_dtype)          # (Bn, d)
+    e0 = e0_ref[...].astype(policy.accum_dtype)          # (Bn, 1)
+    lens = len_ref[...][:, 0]                            # (Bl,)
+    bl = lens.shape[0]
+    bn = v.shape[0]
+    minval = jnp.broadcast_to(e0, (bn, bl))              # seed with d(v, e0)
+
+    def body(kk, minval):
+        s = s_ref[:, kk, :].astype(policy.compute_dtype)  # (Bl, d)
+        d2 = _dist_tile(v, s, policy, rbf_gamma)          # (Bn, Bl)
+        valid = (kk < lens)[None, :]
+        d2 = jnp.where(valid, d2, _BIG)
+        return jnp.minimum(minval, d2.astype(policy.accum_dtype))
+
+    if k <= unroll:
+        for kk in range(k):
+            minval = body(kk, minval)
+    else:
+        minval = jax.lax.fori_loop(0, k, body, minval)
+
+    partial = jnp.sum(minval.astype(jnp.float32), axis=0) / n_total  # (Bl,)
+    out_ref[...] += partial[:, None]
+
+
+def _fused_flat_kernel(v_ref, s_ref, len_ref, e0_ref, out_ref, *,
+                       k: int, n_total: int, policy: PrecisionPolicy,
+                       rbf_gamma):
+    """S tile is (k, Bl, d) "k-major": one matmul for all (set, k) pairs."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = v_ref[...].astype(policy.compute_dtype)          # (Bn, d)
+    s3 = s_ref[...].astype(policy.compute_dtype)         # (k, Bl, d)
+    kk, bl, d = s3.shape
+    bn = v.shape[0]
+    s2 = s3.reshape(kk * bl, d)                          # merge leading dims
+    d2 = _dist_tile(v, s2, policy, rbf_gamma)            # (Bn, k·Bl)
+    d2 = d2.reshape(bn, kk, bl)                          # lane dim (Bl) intact
+    lens = len_ref[...][:, 0]                            # (Bl,)
+    kidx = jax.lax.broadcasted_iota(jnp.int32, (1, kk, bl), 1)
+    valid = kidx < lens[None, None, :]
+    d2 = jnp.where(valid, d2, _BIG)
+    dmin = jnp.min(d2, axis=1)                           # (Bn, Bl)
+    e0 = e0_ref[...].astype(d2.dtype)                    # (Bn, 1)
+    dmin = jnp.minimum(dmin, e0)
+    partial = jnp.sum(dmin.astype(jnp.float32), axis=0) / n_total
+    out_ref[...] += partial[:, None]
+
+
+# ---------------------------------------------------------------------------
+# two-pass (paper-faithful) kernel: materialize W tiles
+# ---------------------------------------------------------------------------
+
+
+def _two_pass_kernel(v_ref, s_ref, len_ref, e0_ref, w_ref, *,
+                     k: int, n_total: int, policy: PrecisionPolicy,
+                     rbf_gamma, unroll: int):
+    v = v_ref[...].astype(policy.compute_dtype)
+    e0 = e0_ref[...].astype(policy.accum_dtype)
+    lens = len_ref[...][:, 0]
+    bl = lens.shape[0]
+    bn = v.shape[0]
+    minval = jnp.broadcast_to(e0, (bn, bl))
+
+    def body(kk, minval):
+        s = s_ref[:, kk, :].astype(policy.compute_dtype)
+        d2 = _dist_tile(v, s, policy, rbf_gamma)
+        valid = (kk < lens)[None, :]
+        d2 = jnp.where(valid, d2, _BIG)
+        return jnp.minimum(minval, d2.astype(policy.accum_dtype))
+
+    if k <= unroll:
+        for kk in range(k):
+            minval = body(kk, minval)
+    else:
+        minval = jax.lax.fori_loop(0, k, body, minval)
+    # W[j, i] = min-dist / n (paper eq. 5) — note transpose: out rows are sets
+    w_ref[...] = (minval.T / n_total).astype(w_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call builders
+# ---------------------------------------------------------------------------
+
+
+def fused_eval(
+    V: jax.Array,            # (n_pad, d_pad)
+    S: jax.Array,            # loop: (l_pad, k, d_pad); flat: (k, l_pad, d_pad)
+    lengths: jax.Array,      # (l_pad, 1) int32
+    d_e0: jax.Array,         # (n_pad, 1) float32 (already transformed)
+    *,
+    n_total: int,
+    policy: PrecisionPolicy,
+    block_n: int,
+    block_l: int,
+    variant: str = "flat",
+    rbf_gamma: Optional[float] = None,
+    unroll: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (l_pad, 1) float32 sums L(S_j ∪ {e0})."""
+    if variant == "flat":
+        k, l_pad, d_pad = S.shape
+        s_spec = pl.BlockSpec((k, block_l, d_pad), lambda i, j: (0, i, 0))
+        kern = functools.partial(
+            _fused_flat_kernel, k=k, n_total=n_total, policy=policy,
+            rbf_gamma=rbf_gamma)
+    elif variant == "loop":
+        l_pad, k, d_pad = S.shape
+        s_spec = pl.BlockSpec((block_l, k, d_pad), lambda i, j: (i, 0, 0))
+        kern = functools.partial(
+            _fused_loop_kernel, k=k, n_total=n_total, policy=policy,
+            rbf_gamma=rbf_gamma, unroll=unroll)
+    else:
+        raise ValueError(f"unknown variant {variant!r}")
+    n_pad = V.shape[0]
+    grid = (l_pad // block_l, n_pad // block_n)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, V.shape[1]), lambda i, j: (j, 0)),
+            s_spec,
+            pl.BlockSpec((block_l, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(V, S, lengths, d_e0)
+
+
+def two_pass_eval(
+    V: jax.Array,            # (n_pad, d_pad)
+    S: jax.Array,            # (l_pad, k, d_pad)
+    lengths: jax.Array,      # (l_pad, 1)
+    d_e0: jax.Array,         # (n_pad, 1)
+    *,
+    n_total: int,
+    policy: PrecisionPolicy,
+    block_n: int,
+    block_l: int,
+    rbf_gamma: Optional[float] = None,
+    unroll: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paper-faithful: materialize W (l_pad, n_pad) in HBM; caller reduces."""
+    l_pad, k, d_pad = S.shape
+    n_pad = V.shape[0]
+    grid = (l_pad // block_l, n_pad // block_n)
+    kern = functools.partial(
+        _two_pass_kernel, k=k, n_total=n_total, policy=policy,
+        rbf_gamma=rbf_gamma, unroll=unroll)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_l, k, d_pad), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_l, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_l, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((l_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(V, S, lengths, d_e0)

@@ -1,0 +1,234 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles everything the CUDA host code in the paper handles:
+
+* **kernel configuration** (paper's ``C = (D_g, D_b)`` formula): block sizes
+  are chosen from a VMEM budget exactly like the paper chooses ``b_x = min(
+  ⌊1024/b_y⌋, ⌊β/γ⌋)`` from the shared-memory budget β — see
+  :func:`kernel_config`.
+* **padding / layout** (paper's vectorization routine §IV-B-2): d is padded to
+  the 128-lane boundary, n/l to block multiples, and the ``flat`` variant
+  pre-transposes the multiset to k-major layout (the TPU analogue of
+  round-robin interleaving).
+* **chunking** (paper §IV-B-3): an optional memory budget splits the multiset.
+* **interpret fallback**: on CPU backends the kernels run in interpret mode
+  (bit-accurate Python execution of the kernel body).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.evaluator import plan_chunks
+from repro.core.precision import PrecisionPolicy, FP32
+from repro.kernels import exemplar_eval as _ee
+from repro.kernels import marginal_gain as _mg
+
+LANE = 128
+SUBLANE = 8
+#: default per-operand VMEM budget for the multiset tile (bytes)
+VMEM_S_BUDGET = 4 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """TPU analogue of the paper's kernel configuration C = (D_g, D_b)."""
+
+    block_n: int   # ground vectors per tile (paper: b_x)
+    block_l: int   # evaluation sets per tile (paper: b_y)
+
+    def grid(self, n_pad: int, l_pad: int) -> tuple[int, int]:
+        # paper eq. 8: g_x = ⌈|V|/b_x⌉, g_y = ⌈|S_multi|/b_y⌉
+        return (l_pad // self.block_l, n_pad // self.block_n)
+
+
+def kernel_config(k: int, d_pad: int, policy: PrecisionPolicy,
+                  l: int, n: int,
+                  s_budget_bytes: int = VMEM_S_BUDGET,
+                  mode: str = "traffic_opt") -> KernelConfig:
+    """Pick block dims (paper's b_x/b_y computation, then one step further).
+
+    ``mode="paper"`` reproduces the paper's greedy rule: maximize the number
+    of sets per block first (b_y), then fill b_x — optimal for reuse of the
+    shared-memory-staged V rows on a GPU.
+
+    ``mode="traffic_opt"`` (default, §Perf K4): minimize total HBM traffic
+      T(Bn, Bl) = n·d·cs·⌈l/Bl⌉  (V re-read per l-tile row)
+                + l·k·d·cs·⌈n/Bn⌉ (S re-read per n-tile column)
+    subject to the VMEM working set (V tile + S tile + distance tile). The
+    paper's rule fixes Bn=256 and spends all VMEM on Bl, which over-weights
+    the V term; for l·k ≫ n the S term dominates and a balanced split is up
+    to ~1.9× less traffic (see benchmarks/kernel_roofline.py).
+    """
+    cs = policy.itemsize
+    cap_l = min(512, _round_up(l, SUBLANE))
+    if mode == "paper":
+        per_set = k * d_pad * cs
+        bl = max(s_budget_bytes // per_set, SUBLANE)
+        bl = min(bl, cap_l)
+        bl = (bl // SUBLANE) * SUBLANE
+        return KernelConfig(block_n=min(256, _round_up(n, SUBLANE)), block_l=bl)
+
+    vmem_cap = 3 * s_budget_bytes  # total working-set budget (~12 MiB)
+    best, best_t = None, None
+    bn_opts = [b for b in (64, 128, 256, 512, 1024)
+               if b <= _round_up(n, SUBLANE)] or [SUBLANE]
+    bl_opts = [b for b in (8, 16, 32, 64, 128, 256, 512) if b <= cap_l] or [SUBLANE]
+    for bn in bn_opts:
+        for bl in bl_opts:
+            work = (bn * d_pad * cs + bl * k * d_pad * cs  # V + S tiles
+                    + bn * bl * k * 4)                     # distance tile
+            if work > vmem_cap:
+                continue
+            traffic = (n * d_pad * cs * math.ceil(l / bl)
+                       + l * k * d_pad * cs * math.ceil(n / bn))
+            if best_t is None or traffic < best_t:
+                best, best_t = (bn, bl), traffic
+    if best is None:
+        best = (SUBLANE, SUBLANE)
+    return KernelConfig(block_n=best[0], block_l=best[1])
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_axis(x: jax.Array, target: int, axis: int) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ---------------------------------------------------------------------------
+# exemplar_eval
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "mode", "variant", "interpret", "rbf_gamma",
+                     "n_total", "cfgk"),
+)
+def _exemplar_eval_padded(V, S, lengths, d_e0, *, policy, mode, variant,
+                          interpret, rbf_gamma, n_total, cfgk: KernelConfig):
+    l = lengths.shape[0]
+    k = S.shape[1]
+    d_pad = _round_up(S.shape[2], LANE)
+    bl, bn = cfgk.block_l, cfgk.block_n
+    l_pad = _round_up(l, bl)
+    n_pad = _round_up(V.shape[0], bn)
+
+    Vp = _pad_axis(_pad_axis(V, n_pad, 0), d_pad, 1)
+    Sp = _pad_axis(_pad_axis(S, l_pad, 0), d_pad, 2)
+    lens_p = _pad_axis(lengths.astype(jnp.int32), l_pad, 0)[:, None]
+    e0_p = _pad_axis(d_e0.astype(jnp.float32), n_pad, 0)[:, None]
+
+    if mode == "fused":
+        if variant == "flat":
+            Sp = jnp.transpose(Sp, (1, 0, 2))  # k-major (paper's interleave)
+        out = _ee.fused_eval(
+            Vp, Sp, lens_p, e0_p, n_total=n_total, policy=policy,
+            block_n=bn, block_l=bl, variant=variant, rbf_gamma=rbf_gamma,
+            interpret=interpret)
+        return out[:l, 0]
+    elif mode == "two_pass":
+        W = _ee.two_pass_eval(
+            Vp, Sp, lens_p, e0_p, n_total=n_total, policy=policy,
+            block_n=bn, block_l=bl, rbf_gamma=rbf_gamma, interpret=interpret)
+        # second pass: the paper's W·1 row reduction
+        return jnp.sum(W, axis=1)[:l]
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def exemplar_eval(
+    V: jax.Array,
+    S: jax.Array,            # (l, k, d)
+    lengths: jax.Array,      # (l,)
+    d_e0: jax.Array,         # (n,)
+    *,
+    policy: PrecisionPolicy = FP32,
+    mode: str = "fused",
+    variant: str = "flat",
+    interpret: Optional[bool] = None,
+    memory_budget_bytes: Optional[int] = None,
+    rbf_gamma: Optional[float] = None,
+) -> jax.Array:
+    """L(S_j ∪ {e0}) for the packed multiset — (l,) float32."""
+    if interpret is None:
+        interpret = _is_cpu()
+    n, d = V.shape
+    l, k, _ = S.shape
+    d_pad = _round_up(d, LANE)
+    cfgk = kernel_config(k, d_pad, policy, l, n)
+    chunks = plan_chunks(l, n, k, d, policy, mode, memory_budget_bytes)
+    outs = []
+    for start, stop in chunks:
+        outs.append(
+            _exemplar_eval_padded(
+                V, S[start:stop], lengths[start:stop], d_e0,
+                policy=policy, mode=mode, variant=variant,
+                interpret=interpret, rbf_gamma=rbf_gamma, n_total=n,
+                cfgk=cfgk,
+            )
+        )
+    return jnp.concatenate(outs) if len(outs) > 1 else outs[0]
+
+
+# ---------------------------------------------------------------------------
+# marginal_gain
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
+                     "block_n", "block_m"),
+)
+def _marginal_gain_padded(V, C, cache, *, policy, interpret, rbf_gamma,
+                          n_total, block_n, block_m):
+    m = C.shape[0]
+    d_pad = _round_up(V.shape[1], LANE)
+    n_pad = _round_up(V.shape[0], block_n)
+    m_pad = _round_up(m, block_m)
+    Vp = _pad_axis(_pad_axis(V, n_pad, 0), d_pad, 1)
+    Cp = _pad_axis(_pad_axis(C, m_pad, 0), d_pad, 1)
+    cache_p = _pad_axis(cache.astype(jnp.float32), n_pad, 0)[:, None]
+    out = _mg.gain_eval(
+        Vp, Cp, cache_p, n_total=n_total, policy=policy,
+        block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
+        interpret=interpret)
+    return out[:m, 0]
+
+
+def marginal_gain(
+    V: jax.Array,
+    C: jax.Array,
+    mincache: jax.Array,
+    *,
+    policy: PrecisionPolicy = FP32,
+    interpret: Optional[bool] = None,
+    rbf_gamma: Optional[float] = None,
+    block_n: int = 256,
+    block_m: int = 256,
+) -> jax.Array:
+    """Δ(c_j | S) for all candidates — (m,) float32."""
+    if interpret is None:
+        interpret = _is_cpu()
+    n = V.shape[0]
+    bn = min(block_n, _round_up(n, SUBLANE))
+    bm = min(block_m, _round_up(C.shape[0], SUBLANE))
+    return _marginal_gain_padded(
+        V, C, mincache, policy=policy, interpret=interpret,
+        rbf_gamma=rbf_gamma, n_total=n, block_n=bn, block_m=bm)

@@ -1,0 +1,254 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from placeholder host devices, lowers the real train/serve
+step with the real sharding specs, compiles, and records memory analysis,
+cost analysis, and the collective schedule for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs as C  # noqa: E402
+from repro.configs.shapes import SHAPES, Shape, cell_supported, input_specs  # noqa: E402
+from repro.distributed.sharding import MeshRules  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import roofline as R  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.train.optimizer import OptimizerConfig, init_opt_state  # noqa: E402
+from repro.train import step as St  # noqa: E402
+
+
+def _cfg_for_cell(arch: str, shape: Shape) -> ModelConfig:
+    cfg = C.get_config(arch)
+    if cfg.family == "encdec":
+        cfg = dataclasses.replace(cfg, max_seq_len=max(shape.seq_len, 2048))
+    return cfg
+
+
+def abstract_state(cfg: ModelConfig, with_opt: bool):
+    """Abstract (ShapeDtypeStruct) state + captured dim specs, no allocation."""
+    box = {}
+
+    def build(key):
+        params, dims = M.init_model(cfg, key)
+        box["dims"] = dims
+        if with_opt:
+            return {"params": params, "opt": init_opt_state(params)}
+        return params
+
+    abs_state = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return abs_state, box["dims"]
+
+
+def lower_cell(arch: str, shape: Shape, multi_pod: bool, unroll: bool = False,
+               cfg: ModelConfig | None = None, microbatches: int = 1):
+    """Returns (lowered, compiled, meta) for one cell."""
+    if cfg is None:
+        cfg = _cfg_for_cell(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = MeshRules.for_mesh(mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        state_abs, dims = abstract_state(cfg, with_opt=True)
+        sdims = St.state_dims(dims)
+        state_sh = St.tree_shardings(rules, state_abs, sdims)
+        batch_abs = specs
+        batch_sh = St.tree_shardings(rules, batch_abs, St.batch_dims(cfg, batch_abs))
+        step = St.make_train_step(cfg, OptimizerConfig(), rules, unroll=unroll,
+                                  microbatches=microbatches)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+        with mesh:
+            lowered = jitted.lower(state_abs, batch_abs)
+    elif shape.kind == "prefill":
+        params_abs, dims = abstract_state(cfg, with_opt=False)
+        p_sh = St.tree_shardings(rules, params_abs, dims)
+        batch_abs = specs
+        batch_sh = St.tree_shardings(rules, batch_abs, St.batch_dims(cfg, batch_abs))
+        step = St.make_prefill_step(cfg, rules, cache_len=shape.seq_len, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(p_sh, batch_sh))
+        with mesh:
+            lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        params_abs, dims = abstract_state(cfg, with_opt=False)
+        p_sh = St.tree_shardings(rules, params_abs, dims)
+        batch_abs = specs
+        batch_sh = {
+            "tokens": St.tree_shardings(
+                rules, {"t": batch_abs["tokens"]},
+                {"t": (("batch",), (None,))})["t"],
+            "caches": St.tree_shardings(
+                rules, batch_abs["caches"],
+                St.cache_dims_tree(cfg, batch_abs["caches"], rules)),
+            "pos": NamedSharding(rules.mesh, P()),
+        }
+        step = St.make_serve_step(cfg, rules, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(p_sh, batch_sh),
+                         donate_argnums=(1,))
+        with mesh:
+            lowered = jitted.lower(params_abs, batch_abs)
+
+    n_params = cfg.approx_params()
+    meta = {"arch": arch, "shape": shape.name, "kind": shape.kind,
+            "multi_pod": multi_pod, "chips": mesh.size,
+            "approx_params": n_params}
+    return lowered, meta
+
+
+def extrapolated_costs(arch: str, shape: Shape, microbatches: int = 1) -> dict:
+    """Exact depth-extrapolated FLOPs/bytes/collective bytes (see extrapolate.py)."""
+    from repro.launch import extrapolate as X
+
+    base_cfg = _cfg_for_cell(arch, shape)
+    real = X.layer_kind_counts(base_cfg)
+    counts, flops, bytes_, coll, times = [], [], [], [], []
+    for cfg_v, cnt in X.depth_variants(base_cfg):
+        t0 = time.time()
+        lowered, _ = lower_cell(arch, shape, False, unroll=True, cfg=cfg_v,
+                                microbatches=microbatches)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        cb = R.collective_bytes(compiled.as_text())
+        counts.append(cnt)
+        flops.append(float(cost.get("flops", 0.0)))
+        bytes_.append(float(cost.get("bytes accessed", 0.0)))
+        coll.append(float(cb["total_bytes"]))
+        times.append(round(time.time() - t0, 1))
+    return {
+        "variant_counts": counts,
+        "variant_flops": flops,
+        "variant_compile_s": times,
+        "real_counts": real,
+        "flops": X.solve_and_extrapolate(counts, flops, real),
+        "bytes": X.solve_and_extrapolate(counts, bytes_, real),
+        "collective_bytes": X.solve_and_extrapolate(counts, coll, real),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+             unroll: bool = False, extrapolate: bool = False,
+             microbatches: int = 1) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = C.get_config(arch)
+    ok, reason = cell_supported(cfg, shape)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    out = pathlib.Path(outdir)
+    out.mkdir(parents=True, exist_ok=True)
+    tag = mesh_tag + ("_unroll" if unroll else "")
+    path = out / f"{arch}__{shape_name}__{tag}.json"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "skipped", "reason": reason}
+        path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] SKIP {arch} × {shape_name} ({mesh_tag}): {reason}")
+        return rec
+
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape, multi_pod, unroll=unroll,
+                                   microbatches=microbatches)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        coll = R.collective_bytes(compiled.as_text())
+        tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                       else (shape.seq_len if shape.kind == "prefill" else 1))
+        mf = R.model_flops(meta["approx_params"], tokens, shape.kind)
+        if extrapolate and not multi_pod:
+            xc = extrapolated_costs(arch, shape, microbatches=microbatches)
+            terms = R.roofline_terms(
+                {"flops": xc["flops"], "bytes accessed": xc["bytes"]},
+                int(xc["collective_bytes"]))
+            terms["source"] = "depth_extrapolated"
+            terms["extrapolation"] = xc
+        else:
+            terms = R.roofline_terms(cost, coll["total_bytes"])
+            terms["source"] = "scanned_cost_analysis (while bodies counted once)"
+        hlo_flops_global = terms["device_flops"] * meta["chips"]
+        rec = {
+            **meta,
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                          + mem.temp_size_in_bytes),
+            },
+            "cost": {k: cost.get(k) for k in
+                     ("flops", "bytes accessed", "transcendentals")
+                     if k in cost},
+            "collectives": coll,
+            "roofline": terms,
+            "model_flops_global": mf,
+            "useful_flops_ratio": (mf / hlo_flops_global
+                                   if hlo_flops_global else None),
+            "tokens_per_step": tokens,
+        }
+        path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] OK   {arch} × {shape_name} ({mesh_tag}) "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"bottleneck={terms['bottleneck']} "
+              f"peak/dev={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB")
+        return rec
+    except Exception as e:  # record failures — they are bugs to fix
+        rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=2))
+        print(f"[dryrun] FAIL {arch} × {shape_name} ({mesh_tag}): {e}")
+        return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=C.ARCH_IDS + ["all"])
+    ap.add_argument("--shape", default="all",
+                    choices=list(SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer scans (accurate cost_analysis flops)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="depth-extrapolated exact roofline terms (single-pod)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = C.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out, unroll=args.unroll,
+                               extrapolate=args.extrapolate,
+                               microbatches=args.microbatches)
+                n_fail += rec.get("status") == "error"
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

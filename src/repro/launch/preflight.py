@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Lower-only pre-flight across all cells — catches structural bugs fast."""
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+from repro import configs as C  # noqa: E402
+from repro.configs.shapes import SHAPES, cell_supported  # noqa: E402
+from repro.launch.dryrun import lower_cell  # noqa: E402
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    args = ap.parse_args()
+    archs = C.ARCH_IDS if args.arch == "all" else [args.arch]
+    n_bad = 0
+    for arch in archs:
+        cfg = C.get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, reason = cell_supported(cfg, shape)
+            if not ok:
+                print(f"SKIP {arch} × {sname}: {reason}")
+                continue
+            for mp in (False, True):
+                t0 = time.time()
+                try:
+                    lower_cell(arch, shape, mp)
+                    print(f"OK   {arch} × {sname} mp={mp} "
+                          f"({time.time()-t0:.1f}s)")
+                except Exception as e:
+                    n_bad += 1
+                    print(f"FAIL {arch} × {sname} mp={mp}: "
+                          f"{type(e).__name__}: {e}")
+                    traceback.print_exc(limit=8)
+    print(f"preflight: {n_bad} failures")
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Hardware model (TPU v5e, per task spec):
+  peak bf16 compute 197 TFLOP/s/chip, HBM 819 GB/s/chip, ICI ~50 GB/s/link.
+
+``cost_analysis()`` is per-device (the SPMD module is the per-device
+program), so the three terms are computed per device:
+
+  compute_s    = device_flops / 197e12
+  memory_s     = device_bytes / 819e9
+  collective_s = device_collective_bytes / 50e9
+
+collective bytes are parsed from the post-SPMD optimized HLO: the summed
+result sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute ops (async *-start counted once, *-done skipped).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# result type of an HLO instruction: `%name = <ty> opname(` where <ty> may be
+# a tuple `(f32[8,128]{1,0}, f32[8]{0})`
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|"
+                       r"u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+([a-z0-9-]+)(\.[0-9]+)?\(")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-op byte totals from optimized HLO text."""
+    out = {op: 0 for op in _COLL_OPS}
+    counts = {op: 0 for op in _COLL_OPS}
+    for m in _INSTR_RE.finditer(hlo_text):
+        ty, opname = m.group(1), m.group(2)
+        base = opname
+        if base.endswith("-start"):
+            base = base[:-6]
+        elif base.endswith("-done"):
+            continue
+        if base in _COLL_OPS:
+            out[base] += _shape_bytes(ty)
+            counts[base] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def roofline_terms(cost: dict, coll_total_bytes: int) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_total_bytes / ICI_BW
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", collective_s)), key=lambda kv: kv[1])
+    return {
+        "device_flops": flops,
+        "device_bytes": bytes_acc,
+        "device_collective_bytes": float(coll_total_bytes),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": dom[0],
+        "bound_s": dom[1],
+    }
+
+
+def model_flops(n_params: int, tokens: int, kind: str) -> float:
+    """6·N·D for training; 2·N·D forward-only for prefill/decode."""
+    if kind == "train":
+        return 6.0 * n_params * tokens
+    return 2.0 * n_params * tokens

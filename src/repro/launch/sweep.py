@@ -1,0 +1,44 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Full dry-run sweep: every (arch × shape) × {single-pod, multi-pod}.
+
+Single-pod cells also run the depth-extrapolated roofline (§Roofline source).
+Writes one JSON per cell into --out; idempotent (--resume skips existing).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+
+from repro import configs as C  # noqa: E402
+from repro.configs.shapes import SHAPES  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--archs", default="all")
+    args = ap.parse_args()
+    archs = C.ARCH_IDS if args.archs == "all" else args.archs.split(",")
+    out = pathlib.Path(args.out)
+    done = errors = 0
+    for arch in archs:
+        for sname in SHAPES:
+            for mp in (False, True):
+                tag = "pod2x16x16" if mp else "pod16x16"
+                path = out / f"{arch}__{sname}__{tag}.json"
+                if args.resume and path.exists():
+                    rec = json.loads(path.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        continue
+                rec = run_cell(arch, sname, mp, args.out,
+                               extrapolate=not mp)
+                done += 1
+                errors += rec.get("status") == "error"
+    print(f"[sweep] finished: {done} cells run, {errors} errors")
+
+
+if __name__ == "__main__":
+    main()

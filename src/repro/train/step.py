@@ -1,0 +1,197 @@
+"""Jittable train / prefill / serve step builders with full sharding specs.
+
+These are the functions the dry-run lowers and the trainer executes. Sharding
+comes from the dim specs attached at parameter creation plus the cache/batch
+dim tables below — one rule system end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import MeshRules
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.params import map_with_dims
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+KV_DIMS = (("batch",), (None,), ("tp",), (None, "tp"))
+KV_DIMS_SEQSHARD = (("batch",), ("tp",), (None,), (None,))
+_CACHE_DIMS_BY_RANK_HINT = {}
+
+
+def batch_dims(cfg: ModelConfig, batch_tree):
+    """Dim specs for an input batch tree (tokens/labels/frontend/pos)."""
+    def dims_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("tokens", "labels"):
+            return (("batch",), ("sp",))
+        if name == "frontend":
+            return (("batch",), (None,), (None,))
+        if name == "pos":
+            return ()
+        raise KeyError(name)
+
+    return jax.tree_util.tree_map_with_path(dims_for, batch_tree)
+
+
+def cache_dims_tree(cfg: ModelConfig, cache_tree, rules=None):
+    """Dim specs for a decode-cache tree, keyed on group kind + leaf rank.
+
+    When kv heads don't divide the model axis, KV caches are *sequence*
+    sharded over it and decode uses the flash-decoding shard_map path
+    (layers._decode_attn_seqshard) — see EXPERIMENTS.md §Perf B.
+    """
+    seqshard = False
+    if rules is not None and hasattr(rules, "mesh") and \
+            "model" in rules.mesh.shape and rules.mesh.shape["model"] > 1:
+        seqshard = cfg.num_kv_heads % rules.mesh.shape["model"] != 0
+    kv_dims = KV_DIMS_SEQSHARD if seqshard else KV_DIMS
+
+    def dims_for(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        if keys and keys[0] == "enc_out":
+            return (("batch",), (None,), (None,))
+        kind = keys[0].split("_", 1)[1] if keys else ""
+        leafname = keys[-1] if keys else ""
+        r = leaf.ndim
+        if leafname in ("k", "v"):
+            return ((None,),) + kv_dims        # stacked layer dim first
+        if leafname == "conv":
+            return ((None,), ("batch",), (None,), ("tp",))
+        # ssm states (tuple leaves have no key for the tuple index)
+        if kind == "mlstm" or kind == "slstm":
+            # ranks: 5=(L,B,H,Dh,Dh), 4=(L,B,H,Dh), 3=(L,B,H)
+            if r == 5:
+                return ((None,), ("batch",), (None,), (None,), ("tp",))
+            if r == 4:
+                return ((None,), ("batch",), (None,), (None, "tp"))
+            return ((None,), ("batch",), (None,))
+        if kind in ("hybrid_full", "hybrid_sw"):
+            if leafname == "ssm" or r == 4:
+                return ((None,), ("batch",), ("tp",), (None,))
+        return ((None,),) * r
+
+    return jax.tree_util.tree_map_with_path(dims_for, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig, rules,
+                    unroll: bool = False, microbatches: int = 1,
+                    accum_dtype: str = "float32"):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``microbatches > 1`` scans gradient accumulation over batch slices —
+    activation memory drops by the microbatch factor (the knob for cells that
+    exceed per-device HBM). ``accum_dtype="bfloat16"`` halves the accumulator
+    memory (gradient compression at the accumulation level; the wire-level
+    int8 path lives in distributed.compression).
+    """
+    param_dtype = jnp.dtype(cfg.dtype)
+    adt = jnp.dtype(accum_dtype)
+
+    def loss_fn(params, mb):
+        logits, _ = M.forward(params, cfg, mb, rules=rules,
+                              mode="train", remat=True, unroll=unroll)
+        return M.lm_loss(logits, mb["labels"])
+
+    def train_step(state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, adt),
+                                state["params"])
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(state["params"], mb)
+                acc = jax.tree.map(lambda a, gi: a + gi.astype(adt), acc, g)
+                return (acc, loss_acc + loss), None
+
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, grads, state["opt"], param_dtype)
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params_l, dims = M.init_model(cfg, key)
+    state = {"params": params_l, "opt": init_opt_state(params_l)}
+    return state, dims
+
+
+def state_dims(dims):
+    """Dim-spec tree matching the train state structure."""
+    return {
+        "params": dims,
+        "opt": {"master": dims, "m": dims, "v": dims, "step": ()},
+    }
+
+
+def state_shardings(rules: MeshRules, state_tree, sdims):
+    def leaf(x, d):
+        shape = x.shape if hasattr(x, "shape") else ()
+        return NamedSharding(rules.mesh, rules.spec(shape, d)) if shape or d == () \
+            else NamedSharding(rules.mesh, P())
+
+    flat_x, treedef = jax.tree.flatten(state_tree)
+    flat_d = treedef.flatten_up_to(sdims)
+    return treedef.unflatten([leaf(x, d) for x, d in zip(flat_x, flat_d)])
+
+
+def tree_shardings(rules: MeshRules, tree, dims_tree):
+    flat_x, treedef = jax.tree.flatten(tree)
+    flat_d = treedef.flatten_up_to(dims_tree)
+    return treedef.unflatten([
+        NamedSharding(rules.mesh, rules.spec(x.shape, d))
+        for x, d in zip(flat_x, flat_d)
+    ])
+
+
+# ---------------------------------------------------------------------------
+# serve (prefill + decode)
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, rules, cache_len: int, unroll: bool = False):
+    def prefill_step(params, batch):
+        logits, caches = M.forward(params, cfg, batch, rules=rules,
+                                   mode="prefill", cache_len=cache_len,
+                                   remat=False, unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, rules, unroll: bool = False):
+    """One greedy decode step against the KV/state caches."""
+    def serve_step(params, batch):
+        logits, caches = M.forward(
+            params, cfg, {"tokens": batch["tokens"]}, rules=rules,
+            mode="decode", caches=batch["caches"], pos_offset=batch["pos"],
+            remat=False, unroll=unroll)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, caches  # next_tok: (B, 1), feedable to the next step
+
+    return serve_step

@@ -1,0 +1,116 @@
+"""Training loop: checkpoint/resume, straggler monitor, SIGTERM safety.
+
+Deliberately host-driven and restart-oriented: every ``ckpt_every`` steps the
+full state is snapshotted (async); on start, ``resume="auto"`` picks up the
+latest complete checkpoint — possibly onto a *different mesh* (elastic
+scaling), since checkpoints store unsharded leaves and restore re-places them
+with the current sharding rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.train import step as St
+from repro.train.checkpoint import CheckpointManager, config_hash
+from repro.train.monitor import StepMonitor
+from repro.train.optimizer import OptimizerConfig
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    resume: str = "never"  # never | auto
+    log_every: int = 10
+    microbatches: int = 1
+    seed: int = 0
+    unroll: bool = False
+
+
+def train(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    opt_cfg: OptimizerConfig,
+    batches: Iterable[dict],
+    mesh=None,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+):
+    """Run the loop; returns (final state, history list)."""
+    rules = None
+    if mesh is not None:
+        from repro.distributed.sharding import MeshRules
+        rules = MeshRules.for_mesh(mesh)
+
+    key = jax.random.PRNGKey(tcfg.seed)
+    state, dims = St.init_train_state(cfg, key)
+    chash = config_hash((cfg, opt_cfg))
+
+    ckpt = None
+    start_step = 0
+    if tcfg.ckpt_dir:
+        ckpt = CheckpointManager(tcfg.ckpt_dir)
+        ckpt.clean_incomplete()
+        if tcfg.resume == "auto" and ckpt.latest_step() is not None:
+            shardings = None
+            if rules is not None:
+                shardings = St.tree_shardings(
+                    rules, state, St.state_dims(dims))
+            state, manifest = ckpt.restore(state, shardings=shardings,
+                                           cfg_hash=chash)
+            start_step = manifest["step"]
+
+    step_fn = St.make_train_step(cfg, opt_cfg, rules, unroll=tcfg.unroll,
+                                 microbatches=tcfg.microbatches)
+    if mesh is not None:
+        sh = St.tree_shardings(rules, state, St.state_dims(dims))
+        step_fn = jax.jit(step_fn, in_shardings=(sh, None),
+                          out_shardings=(sh, None), donate_argnums=(0,))
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+    stop = {"now": False}
+
+    def _sigterm(sig, frame):  # checkpoint-then-exit on preemption
+        stop["now"] = True
+
+    old = signal.signal(signal.SIGTERM, _sigterm)
+
+    monitor = StepMonitor()
+    history = []
+    it = iter(batches)
+    step = start_step
+    try:
+        while step < tcfg.steps:
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            monitor.start()
+            state, metrics = step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            monitor.stop(step)
+            step += 1
+            if step % tcfg.log_every == 0 or step == tcfg.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step_time_s"] = monitor.mean
+                history.append({"step": step, **m})
+                if on_metrics:
+                    on_metrics(step, m)
+            if ckpt and (step % tcfg.ckpt_every == 0 or stop["now"]
+                         or step == tcfg.steps):
+                ckpt.save(step, state, cfg_hash=chash,
+                          extra={"stragglers": len(monitor.events)})
+            if stop["now"]:
+                break
+    finally:
+        signal.signal(signal.SIGTERM, old)
+        if ckpt:
+            ckpt.wait()
+    return state, history

@@ -1,0 +1,100 @@
+"""Property-based tests of the submodular-function invariants (hypothesis)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EvalConfig, ExemplarClustering, greedy
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _f(n=24, d=4, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    V = (rng.normal(size=(n, d)) + 1.5).astype(np.float32)
+    return ExemplarClustering(jnp.asarray(V), EvalConfig(**kw)), V
+
+
+@given(seed=st.integers(0, 50),
+       idx=st.lists(st.integers(0, 23), min_size=1, max_size=6, unique=True),
+       extra=st.integers(0, 23))
+@settings(**SETTINGS)
+def test_monotone(seed, idx, extra):
+    """f(A) ≤ f(A ∪ {e}) — Definition 3."""
+    f, V = _f(seed=seed)
+    A = V[np.array(idx)]
+    Ae = V[np.array(list(set(idx) | {extra}))]
+    assert f.value(A) <= f.value(Ae) + 1e-5
+
+
+@given(seed=st.integers(0, 50),
+       a_idx=st.lists(st.integers(0, 23), min_size=1, max_size=4, unique=True),
+       b_extra=st.lists(st.integers(0, 23), min_size=1, max_size=4,
+                        unique=True),
+       e=st.integers(0, 23))
+@settings(**SETTINGS)
+def test_diminishing_returns(seed, a_idx, b_extra, e):
+    """Δ(e|A) ≥ Δ(e|B) for A ⊆ B, e ∉ B — Definition 2 (submodularity)."""
+    f, V = _f(seed=seed)
+    a_set = set(a_idx)
+    b_set = a_set | set(b_extra)
+    if e in b_set:
+        b_set.discard(e)
+        a_set.discard(e)
+        if not a_set:
+            a_set = {(e + 1) % 24}
+            b_set |= a_set
+    A = V[np.array(sorted(a_set))]
+    B = V[np.array(sorted(b_set))]
+    ev = V[np.array([e])]
+    dA = f.value(np.concatenate([A, ev])) - f.value(A)
+    dB = f.value(np.concatenate([B, ev])) - f.value(B)
+    assert dA >= dB - 1e-4
+
+
+@given(seed=st.integers(0, 30))
+@settings(max_examples=10, deadline=None)
+def test_empty_set_is_zero(seed):
+    f, V = _f(seed=seed)
+    assert f.value(np.zeros((0, 4), np.float32)) == 0.0
+
+
+@given(seed=st.integers(0, 20), k=st.integers(2, 3))
+@settings(max_examples=8, deadline=None)
+def test_greedy_guarantee(seed, k):
+    """Greedy ≥ (1 − 1/e)·OPT on brute-forceable instances (Nemhauser)."""
+    f, V = _f(n=12, seed=seed)
+    res = greedy(f, k)
+    opt = max(
+        f.value(V[np.array(c)])
+        for c in itertools.combinations(range(12), k)
+    )
+    assert res.value >= (1 - 1 / np.e) * opt - 1e-5
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_mincache_matches_direct_value(seed):
+    """Incremental value tracking equals direct evaluation (beyond-paper path)."""
+    f, V = _f(seed=seed)
+    cache = f.init_mincache()
+    chosen = []
+    rng = np.random.default_rng(seed)
+    for j in rng.choice(24, size=5, replace=False):
+        chosen.append(int(j))
+        cache = f.update_mincache(cache, f.V[int(j)])
+        direct = f.value(V[np.array(chosen)])
+        assert abs(f.value_from_mincache(cache) - direct) < 1e-4
+
+
+@given(seed=st.integers(0, 20),
+       dist=st.sampled_from(["sqeuclidean", "manhattan", "cosine", "rbf"]))
+@settings(max_examples=16, deadline=None)
+def test_nonnegative_all_distances(seed, dist):
+    """f ≥ 0 and monotone for every supported dissimilarity (paper §IV)."""
+    f, V = _f(seed=seed, distance=dist)
+    s = f.value(V[:3])
+    assert s >= -1e-6
+    assert f.value(V[:5]) >= s - 1e-5

@@ -1,0 +1,108 @@
+"""Data pipeline, curation signal, trainer loop, straggler monitor."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EvalConfig
+from repro.data.pipeline import (CurationConfig, Curator, hashed_embedding,
+                                 token_batches)
+from repro.data.synthetic import TopicTokenStream, blobs, uniform_problem
+from repro.train.monitor import StepMonitor
+
+
+def test_pipeline_deterministic():
+    a = list(token_batches(512, 2, 16, steps=4, seed=3))
+    b = list(token_batches(512, 2, 16, steps=4, seed=3))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x["tokens"]),
+                                      np.asarray(y["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    (batch,) = list(token_batches(512, 2, 16, steps=1, seed=1))
+    assert batch["tokens"].shape == (2, 16)
+    assert batch["labels"].shape == (2, 16)
+
+
+def test_curation_selects_topic_diverse_exemplars():
+    """Selection covers more topics than a random window prefix."""
+    stream = TopicTokenStream(512, n_topics=8, seed=2)
+    pool, topics = stream.sample(128, 32, topic_skew=6.0)  # skewed/redundant
+    cur = Curator(CurationConfig(window=128, select=16), vocab=512)
+    idx = cur.select(pool)
+    sel_topics = len(set(topics[idx]))
+    prefix_topics = len(set(topics[:16]))
+    assert sel_topics >= prefix_topics
+    assert cur.last_value > 0
+
+
+def test_curated_batches_flow():
+    ccfg = CurationConfig(window=32, select=8)
+    batches = list(token_batches(256, 4, 16, steps=3, curation=ccfg, seed=5))
+    assert len(batches) == 3
+    for b in batches:
+        assert b["tokens"].shape == (4, 16)
+
+
+def test_hashed_embedding_shape_and_determinism():
+    toks = np.random.default_rng(0).integers(0, 100, size=(5, 12))
+    e1 = hashed_embedding(toks, dim=16, vocab=100)
+    e2 = hashed_embedding(toks, dim=16, vocab=100)
+    np.testing.assert_array_equal(e1, e2)
+    assert e1.shape == (5, 16)
+
+
+def test_trainer_loss_decreases():
+    from repro.configs import get_reduced_config
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.trainer import TrainConfig, train
+
+    cfg = get_reduced_config("qwen3-0.6b")
+    batches = token_batches(cfg.vocab_size, 4, 32, steps=30, seed=7,
+                            topic_skew=1.0)
+    _, hist = train(cfg, TrainConfig(steps=30, log_every=5),
+                    OptimizerConfig(lr=3e-3, warmup_steps=5,
+                                    total_steps=30), batches)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first, (first, last)
+
+
+def test_trainer_microbatch_equivalence():
+    """Gradient accumulation over microbatches ≈ full-batch step."""
+    import jax
+    from repro.configs import get_reduced_config
+    from repro.train.optimizer import OptimizerConfig
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = get_reduced_config("qwen3-0.6b")
+    opt = OptimizerConfig(warmup_steps=1, total_steps=5)
+    state1, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    state2, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    (batch,) = list(token_batches(cfg.vocab_size, 8, 16, steps=1, seed=9))
+    s1, m1 = jax.jit(make_train_step(cfg, opt, None))(state1, batch)
+    s2, m2 = jax.jit(make_train_step(cfg, opt, None,
+                                     microbatches=4))(state2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        s1["params"], s2["params"])
+    assert max(jax.tree.leaves(diffs)) < 1e-4
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StepMonitor(k_sigma=3.0, min_samples=4)
+    for i in range(20):
+        mon.observe(i, 1.0 + 0.01 * (i % 3))
+    ev = mon.observe(20, 5.0)  # injected straggler
+    assert ev is not None and ev.step == 20
+    assert mon.straggler_fraction > 0
+    # baseline not poisoned by the outlier
+    assert mon.mean < 1.5
+
+
+def test_blobs_and_uniform_generators():
+    X, labels = blobs(100, 8, centers=4, seed=0)
+    assert X.shape == (100, 8) and len(set(labels)) <= 4
+    U = uniform_problem(50, 8)
+    assert U.min() >= 0 and U.max() <= 1

@@ -1,0 +1,100 @@
+"""Evaluation-engine equivalence: modes × backends × chunking × precision."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChunkingError, EvalConfig, bytes_per_set,
+                        evaluate_multiset, pack_sets, plan_chunks,
+                        work_matrix)
+from repro.core.precision import FP16_STRICT, FP32
+
+
+@pytest.fixture(scope="module")
+def problem():
+    rng = np.random.default_rng(3)
+    V = jnp.asarray((rng.normal(size=(257, 33)) + 2.0).astype(np.float32))
+    sets = [np.asarray(V[rng.choice(257, size=rng.integers(1, 9),
+                                    replace=False)]) for _ in range(19)]
+    return V, pack_sets(sets)
+
+
+def _vals(V, pk, **kw):
+    return np.asarray(evaluate_multiset(V, pk, EvalConfig(**kw)))
+
+
+def test_fused_equals_two_pass(problem):
+    V, pk = problem
+    np.testing.assert_allclose(_vals(V, pk, mode="fused"),
+                               _vals(V, pk, mode="two_pass"), atol=1e-5)
+
+
+def test_fused_equals_naive_alg2(problem):
+    """The engine reproduces paper Algorithm 2 exactly."""
+    V, pk = problem
+    np.testing.assert_allclose(_vals(V, pk), _vals(V, pk, backend="naive"),
+                               atol=1e-5)
+
+
+def test_chunked_equals_unchunked(problem):
+    V, pk = problem
+    mu = bytes_per_set(V.shape[0], pk.k_max, pk.dim, FP32, "fused")
+    for budget in (mu * 3, mu * 7, mu * 100):
+        np.testing.assert_allclose(
+            _vals(V, pk, memory_budget_bytes=int(budget)), _vals(V, pk),
+            atol=1e-5)
+
+
+def test_chunk_plan_formula(problem):
+    """n_chunks = ⌈l / ⌊φ/μ_s⌋⌉ (paper §IV-B-3)."""
+    V, pk = problem
+    mu = bytes_per_set(V.shape[0], pk.k_max, pk.dim, FP32, "fused")
+    chunks = plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32, "fused",
+                         mu * 5)
+    assert len(chunks) == int(np.ceil(19 / 5))
+    assert chunks[0] == (0, 5) and chunks[-1][1] == 19
+
+
+def test_chunking_failure_raises(problem):
+    V, pk = problem
+    with pytest.raises(ChunkingError, match="lower floating-point"):
+        plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32, "fused", 10)
+
+
+def test_fp16_strict_reduces_mu():
+    """The paper's remediation: FP16 shrinks the per-set footprint."""
+    assert bytes_per_set(1000, 10, 100, FP16_STRICT, "fused") < \
+        bytes_per_set(1000, 10, 100, FP32, "fused")
+
+
+def test_nblock_streaming_equals(problem):
+    V, pk = problem
+    np.testing.assert_allclose(_vals(V, pk, n_block=64), _vals(V, pk),
+                               atol=1e-5)
+
+
+def test_work_matrix_shape_and_reduction(problem):
+    """W (l, n) row-reduces to the same values (paper eq. 7)."""
+    V, pk = problem
+    W = work_matrix(V, pk)
+    assert W.shape == (19, 257)
+    np.testing.assert_allclose(np.asarray(W.sum(axis=1)), _vals(V, pk),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("policy,tol", [("bf16", 2e-2), ("fp16", 5e-3),
+                                        ("fp16_strict", 5e-2)])
+def test_low_precision_drift_bounded(problem, policy, tol):
+    V, pk = problem
+    ref = _vals(V, pk)
+    got = _vals(V, pk, policy=policy)
+    rel = np.max(np.abs(got - ref) / np.maximum(np.abs(ref), 1e-6))
+    assert rel < tol
+
+
+@pytest.mark.parametrize("distance", ["sqeuclidean", "manhattan", "cosine",
+                                      "rbf"])
+def test_distances_match_naive(problem, distance):
+    V, pk = problem
+    np.testing.assert_allclose(
+        _vals(V, pk, distance=distance),
+        _vals(V, pk, distance=distance, backend="naive"), atol=1e-4)

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode consistency.
+
+Each assigned architecture instantiates a reduced same-family config, runs a
+forward and a full train step (grad + AdamW), asserts output shapes and
+finiteness, and checks prefill+decode equals the full forward.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models.model import cache_specs, forward, init_model, lm_loss
+from repro.models.params import count_params
+from repro.train.optimizer import OptimizerConfig
+from repro.train.step import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16, seed=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family in ("encdec", "vlm"):
+        batch["frontend"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (B, cfg.frontend_len, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_finite(arch):
+    cfg = get_reduced_config(arch)
+    params, dims = init_model(cfg, KEY)
+    batch = _batch(cfg)
+    logits, _ = forward(params, cfg, batch, mode="train", remat=False)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_reduced_config(arch)
+    state, dims = init_train_state(cfg, KEY)
+    step = jax.jit(make_train_step(cfg, OptimizerConfig(warmup_steps=1,
+                                                        total_steps=10),
+                                   rules=None))
+    batch = _batch(cfg)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_reduced_config(arch)
+    params, _ = init_model(cfg, KEY)
+    B, S, PRE = 2, 16, 8
+    batch = _batch(cfg, B, S)
+    P = cfg.frontend_len if cfg.family == "vlm" else 0
+    full, _ = forward(params, cfg, batch, mode="train", remat=False)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :PRE]
+    pre.pop("labels")
+    _, caches = forward(params, cfg, pre, mode="prefill", cache_len=P + S,
+                        remat=False)
+    errs = []
+    for pos in range(PRE, S):
+        lg, caches = forward(
+            params, cfg, {"tokens": batch["tokens"][:, pos:pos + 1]},
+            mode="decode", caches=caches,
+            pos_offset=P + pos if cfg.family == "vlm" else pos, remat=False)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, pos]))))
+    assert max(errs) < 5e-4, f"{arch}: decode diverges {max(errs)}"
+
+
+def test_sliding_window_ring_cache_long_decode():
+    """Decode far past the window: ring cache must stay exact (gemma/hymba)."""
+    cfg = get_reduced_config("gemma3-1b")
+    params, _ = init_model(cfg, KEY)
+    B, S = 1, 40  # window is 16 → decode spans 2.5 windows
+    batch = _batch(cfg, B, S)
+    full, _ = forward(params, cfg, batch, mode="train", remat=False)
+    pre = {"tokens": batch["tokens"][:, :8]}
+    _, caches = forward(params, cfg, pre, mode="prefill", cache_len=S,
+                        remat=False)
+    for pos in range(8, S):
+        lg, caches = forward(params, cfg,
+                             {"tokens": batch["tokens"][:, pos:pos + 1]},
+                             mode="decode", caches=caches, pos_offset=pos,
+                             remat=False)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, pos])))
+        assert err < 5e-4, f"pos {pos}: {err}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_formula(arch):
+    """Analytic approx_params matches actual init within 2% (reduced cfg)."""
+    cfg = get_reduced_config(arch)
+    params, _ = init_model(cfg, KEY)
+    actual = count_params(params)
+    approx = cfg.approx_params()
+    assert abs(actual - approx) / actual < 0.02, (arch, actual, approx)
+
+
+def test_full_config_param_counts_sane():
+    """Full configs land in the advertised parameter range."""
+    expect = {
+        "qwen3-32b": (30e9, 35e9),
+        "qwen3-0.6b": (0.4e9, 0.8e9),
+        "gemma3-1b": (0.7e9, 1.3e9),
+        "stablelm-12b": (11e9, 13.5e9),
+        "pixtral-12b": (11e9, 13.5e9),
+        "qwen3-moe-30b-a3b": (28e9, 32e9),
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+        "xlstm-1.3b": (1.0e9, 1.7e9),
+        "hymba-1.5b": (1.2e9, 1.9e9),
+        "whisper-small": (0.2e9, 0.35e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).approx_params()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_cache_specs_structure_matches_prefill():
+    cfg = get_reduced_config("hymba-1.5b")
+    params, _ = init_model(cfg, KEY)
+    B, S = 2, 16
+    batch = {"tokens": _batch(cfg, B, S)["tokens"]}
+    _, caches = forward(params, cfg, batch, mode="prefill", cache_len=S,
+                        remat=False)
+    specs = cache_specs(cfg, B, S)
+    got = jax.tree.structure(caches)
+    want = jax.tree.structure(specs)
+    assert got == want
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(specs)):
+        assert a.shape == b.shape, (a.shape, b.shape)

@@ -1,0 +1,79 @@
+"""Packed multiset representation (paper §IV-B-2) properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pack_base_plus_candidates, pack_sets
+
+
+@given(sizes=st.lists(st.integers(1, 9), min_size=1, max_size=12))
+@settings(max_examples=25, deadline=None)
+def test_pack_roundtrip(sizes):
+    rng = np.random.default_rng(sum(sizes))
+    sets = [rng.normal(size=(k, 5)).astype(np.float32) for k in sizes]
+    pk = pack_sets(sets)
+    assert pk.num_sets == len(sizes)
+    assert pk.k_max == max(sizes)
+    mask = np.asarray(pk.mask())
+    for j, s in enumerate(sets):
+        np.testing.assert_array_equal(
+            np.asarray(pk.data[j, :sizes[j]]), s)
+        assert mask[j].sum() == sizes[j]
+        # padding slots are zero (blank fields, paper Fig. 2)
+        assert np.all(np.asarray(pk.data[j, sizes[j]:]) == 0)
+
+
+@given(sizes=st.lists(st.integers(1, 9), min_size=1, max_size=12))
+@settings(max_examples=25, deadline=None)
+def test_pad_fraction_accounting(sizes):
+    rng = np.random.default_rng(1)
+    sets = [rng.normal(size=(k, 3)).astype(np.float32) for k in sizes]
+    pk = pack_sets(sets)
+    want = 1.0 - sum(sizes) / (len(sizes) * max(sizes))
+    assert abs(pk.pad_fraction() - want) < 1e-6
+
+
+def test_equal_sizes_no_padding():
+    """Greedy's equal-size sets → zero blank fields (paper observation)."""
+    sets = [np.ones((4, 3), np.float32) for _ in range(7)]
+    assert pack_sets(sets).pad_fraction() == 0.0
+
+
+def test_base_plus_candidates():
+    rng = np.random.default_rng(2)
+    base = jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32))
+    cands = jnp.asarray(rng.normal(size=(6, 5)).astype(np.float32))
+    pk = pack_base_plus_candidates(base, cands)
+    assert pk.num_sets == 6 and pk.k_max == 4
+    for j in range(6):
+        np.testing.assert_array_equal(np.asarray(pk.data[j, :3]),
+                                      np.asarray(base))
+        np.testing.assert_array_equal(np.asarray(pk.data[j, 3]),
+                                      np.asarray(cands[j]))
+    assert np.all(np.asarray(pk.lengths) == 4)
+
+
+def test_empty_base_plus_candidates():
+    cands = jnp.ones((4, 3), jnp.float32)
+    pk = pack_base_plus_candidates(jnp.zeros((0, 3), jnp.float32), cands)
+    assert pk.k_max == 1 and np.all(np.asarray(pk.lengths) == 1)
+
+
+def test_slice_sets_chunk_view():
+    sets = [np.full((2, 3), i, np.float32) for i in range(10)]
+    pk = pack_sets(sets)
+    sub = pk.slice_sets(4, 7)
+    assert sub.num_sets == 3
+    np.testing.assert_array_equal(np.asarray(sub.data[0]),
+                                  np.full((2, 3), 4, np.float32))
+
+
+def test_inconsistent_dims_rejected():
+    with pytest.raises(ValueError, match="inconsistent"):
+        pack_sets([np.ones((2, 3), np.float32), np.ones((2, 4), np.float32)])
+
+
+def test_empty_multiset_rejected():
+    with pytest.raises(ValueError):
+        pack_sets([])
