@@ -26,12 +26,17 @@ def run(quick: bool = False):
     rows = []
     t_inc = time_call(lambda: greedy(f, kk, mode="mincache"), iters=1)
     t_ms = time_call(lambda: greedy(f, kk, mode="multiset"), iters=1)
+    t_dev = time_call(lambda: greedy(f, kk, mode="device"), iters=1)
     r_inc = greedy(f, kk, mode="mincache")
     r_ms = greedy(f, kk, mode="multiset")
+    r_dev = greedy(f, kk, mode="device")
     agree = r_inc.indices == r_ms.indices
     rows.append(("greedy_mincache", t_inc, f"agree={agree}"))
     rows.append(("greedy_multiset(paper)", t_ms,
                  f"speedup={t_ms / t_inc:.1f}x"))
+    rows.append(("greedy_device", t_dev,
+                 f"speedup_vs_mincache={t_inc / t_dev:.1f}x;"
+                 f"agree={r_inc.indices == r_dev.indices}"))
 
     # engine modes on one multiset problem
     rng = np.random.default_rng(6)

@@ -43,6 +43,13 @@ def main():
         m = fit_exemplar_clustering(X, k=8, cfg=EvalConfig(policy=pol))
         print(f"precision {pol:6s}: f(S) = {m.value:.5f}")
 
+    # device-resident stepping: all k greedy rounds in one jitted dispatch
+    from repro.core import greedy
+    host = greedy(f, 8, mode="host")
+    dev = greedy(f, 8, mode="device")
+    print(f"device greedy matches host: {host.indices == dev.indices} "
+          f"(f = {dev.value:.4f})")
+
 
 if __name__ == "__main__":
     main()

@@ -3,7 +3,9 @@
 Simulates a stream of observations; SieveStreaming / SieveStreaming++ /
 ThreeSieves maintain exemplar summaries on the fly — every arriving element
 is offered to all sieves at once, which is exactly the paper's
-multiset-parallelized evaluation problem.
+multiset-parallelized evaluation problem. The stream is consumed in blocks
+of ``block_size`` elements: one engine dispatch fetches the whole block's
+distances instead of one dispatch per arriving element.
 
 Run: PYTHONPATH=src python examples/streaming_summarization.py
 """
@@ -29,17 +31,21 @@ def main():
     print(f"offline greedy      f = {offline.value:.4f}  "
           f"({t_greedy:.1f}s, {offline.evaluations} evals)")
 
+    block = 128
     for name, alg, kw in [
         ("sieve_streaming", sieve_streaming, dict(eps=0.1)),
         ("sieve_streaming++", sieve_streaming_pp, dict(eps=0.1)),
         ("three_sieves(T=100)", three_sieves, dict(eps=0.1, T=100)),
     ]:
         t0 = time.perf_counter()
-        res = alg(f, k, **kw)
+        res = alg(f, k, block_size=block, **kw)
         dt = time.perf_counter() - t0
+        # one distance dispatch per stream block; an upper bound because
+        # three_sieves may exhaust its threshold grid and stop early
+        dispatches = -(-f.n // block)
         print(f"{name:20s}f = {res.value:.4f}  ({dt:.1f}s, "
-              f"{res.evaluations} evals, {res.value/offline.value:.1%} "
-              f"of greedy)")
+              f"{res.evaluations} evals, <={dispatches} engine dispatches, "
+              f"{res.value/offline.value:.1%} of greedy)")
 
 
 if __name__ == "__main__":

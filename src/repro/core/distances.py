@@ -88,8 +88,15 @@ def cosine_point(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.maximum(1.0 - jnp.dot(x, y) / denom, 0.0)
 
 
+#: Default RBF bandwidth — the single source of truth shared by the jnp
+#: pairwise form and the Pallas kernel paths (host/device parity depends on
+#: both sides using the same gamma).
+RBF_GAMMA = 1.0
+
+
 def rbf_pairwise(
-    X: jax.Array, Y: jax.Array, policy: PrecisionPolicy = FP32, gamma: float = 1.0
+    X: jax.Array, Y: jax.Array, policy: PrecisionPolicy = FP32,
+    gamma: float = RBF_GAMMA,
 ) -> jax.Array:
     """Kernel-induced dissimilarity d(x,y) = 2·(1 − exp(−γ‖x−y‖²)) ≥ 0.
 
@@ -100,7 +107,7 @@ def rbf_pairwise(
     return 2.0 * (1.0 - jnp.exp(-gamma * d2))
 
 
-def rbf_point(x: jax.Array, y: jax.Array, gamma: float = 1.0) -> jax.Array:
+def rbf_point(x: jax.Array, y: jax.Array, gamma: float = RBF_GAMMA) -> jax.Array:
     return 2.0 * (1.0 - jnp.exp(-gamma * sqeuclidean_point(x, y)))
 
 

@@ -196,25 +196,28 @@ def _eval_jnp_nblocked(V, packed, d_e0, cfg, policy) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("distance",))
-def _naive_single_set(V, sdata, slen, d_e0, distance):
+@partial(jax.jit, static_argnames=("distance", "policy_name"))
+def _naive_single_set(V, sdata, slen, d_e0, distance, policy_name):
     pair = dist_mod.resolve_pairwise(distance)
+    policy = resolve_policy(policy_name)
 
     def point_loss(v, de):
         # inner loop of Algorithm 2: t = min(t, d(s, v)) over s ∈ S
-        dd = pair(v[None, :], sdata, resolve_policy("fp32"))[0]
+        dd = pair(v[None, :], sdata, policy)[0]
         dd = jnp.where(jnp.arange(sdata.shape[0]) < slen, dd, jnp.finfo(dd.dtype).max)
-        return jnp.minimum(jnp.min(dd), de)
+        return jnp.minimum(jnp.min(dd), de.astype(dd.dtype))
 
     sums = jax.lax.map(lambda args: point_loss(*args), (V, d_e0))
     return jnp.sum(sums) / V.shape[0]
 
 
 def _eval_naive(V, packed, d_e0, cfg) -> jax.Array:
+    policy = cfg.resolved_policy()
     vals = []
     for j in range(packed.num_sets):  # the un-parallelized outer loop
         vals.append(
-            _naive_single_set(V, packed.data[j], packed.lengths[j], d_e0, cfg.distance)
+            _naive_single_set(V, packed.data[j], packed.lengths[j], d_e0,
+                              cfg.distance, policy.name)
         )
     return jnp.stack(vals)
 
@@ -224,12 +227,21 @@ def _eval_naive(V, packed, d_e0, cfg) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
-def e0_distances(V: jax.Array, e0: Optional[jax.Array], distance: str) -> jax.Array:
-    """d(v_i, e0) for all i. e0 defaults to the all-zero auxiliary vector."""
+def e0_distances(
+    V: jax.Array,
+    e0: Optional[jax.Array],
+    distance: str,
+    policy: "str | PrecisionPolicy" = "fp32",
+) -> jax.Array:
+    """d(v_i, e0) for all i. e0 defaults to the all-zero auxiliary vector.
+
+    ``policy`` is the caller's precision policy — half-precision sweeps must
+    compute the e0 column with the same policy as the rest of the work matrix.
+    """
     if e0 is None:
         e0 = jnp.zeros((V.shape[-1],), V.dtype)
     pair = dist_mod.resolve_pairwise(distance)
-    return pair(V, e0[None, :], resolve_policy("fp32"))[:, 0]
+    return pair(V, e0[None, :], resolve_policy(policy))[:, 0]
 
 
 def evaluate_multiset(
@@ -241,7 +253,7 @@ def evaluate_multiset(
 ) -> jax.Array:
     """L(S_j ∪ {e0}) for every set in the multiset. Returns (l,) float32."""
     if d_e0 is None:
-        d_e0 = e0_distances(V, e0, cfg.distance)
+        d_e0 = e0_distances(V, e0, cfg.distance, cfg.policy)
     if cfg.backend == "jnp":
         out = _eval_jnp(V, packed, d_e0, cfg)
     elif cfg.backend == "naive":
@@ -264,7 +276,7 @@ def evaluate_multiset(
             variant=cfg.kernel_variant if cfg.mode == "fused" else "loop",
             interpret=(cfg.backend == "pallas_interpret"),
             memory_budget_bytes=cfg.memory_budget_bytes,
-            rbf_gamma=1.0 if cfg.distance == "rbf" else None,
+            rbf_gamma=dist_mod.RBF_GAMMA if cfg.distance == "rbf" else None,
         )
     else:
         raise ValueError(f"unknown backend {cfg.backend!r}")
@@ -278,11 +290,24 @@ def work_matrix(
     d_e0: Optional[jax.Array] = None,
     e0: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """The paper's W, shape (l, n): W[j,i] = min-dist / n. Materialized."""
+    """The paper's W, shape (l, n): W[j,i] = min-dist / n. Materialized.
+
+    Respects ``cfg.memory_budget_bytes`` via the same chunk planner as
+    :func:`evaluate_multiset` — without it a large multiset OOMs here while
+    the fused path with an identical config would have chunked.
+    """
     if d_e0 is None:
-        d_e0 = e0_distances(V, e0, cfg.distance)
+        d_e0 = e0_distances(V, e0, cfg.distance, cfg.policy)
     policy = cfg.resolved_policy()
-    dmin = _min_dists_block(
-        V, packed.data, packed.lengths, d_e0, cfg.distance, policy.name
-    )  # (n, l)
+    chunks = plan_chunks(
+        packed.num_sets, V.shape[0], packed.k_max, packed.dim, policy,
+        "two_pass", cfg.memory_budget_bytes,
+    )
+    outs = []
+    for start, stop in chunks:
+        sub = packed.slice_sets(start, stop)
+        outs.append(_min_dists_block(
+            V, sub.data, sub.lengths, d_e0, cfg.distance, policy.name
+        ))  # (n, l_c)
+    dmin = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
     return dmin.T / V.shape[0]

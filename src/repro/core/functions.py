@@ -24,13 +24,22 @@ from repro.core.multiset import PackedMultiset, pack_base_plus_candidates, pack_
 from repro.core.precision import resolve as resolve_policy
 
 
-@partial(jax.jit, static_argnames=("distance", "policy_name"))
-def _gains_vs_cache(V, cands, mincache, distance, policy_name):
-    """Δ(c_j | S) = |V|⁻¹ Σ_i relu(m_i − d(v_i, c_j)) for all candidates."""
-    pair = dist_mod.resolve_pairwise(distance)
-    D = pair(V, cands, resolve_policy(policy_name))  # (n, m)
+def gains_formula(V, cands, mincache, pair, policy):
+    """Δ(c_j | S) = |V|⁻¹ Σ_i relu(m_i − d(v_i, c_j)) for all candidates.
+
+    The single source of the gain reduction: the host path (via
+    ``_gains_vs_cache``) and the device scan engine both call this, which is
+    what makes their argmax selections bit-compatible.
+    """
+    D = pair(V, cands, policy)  # (n, m)
     gains = jnp.sum(jnp.maximum(mincache[:, None] - D, 0.0), axis=0)
     return gains / V.shape[0]
+
+
+@partial(jax.jit, static_argnames=("distance", "policy_name"))
+def _gains_vs_cache(V, cands, mincache, distance, policy_name):
+    pair = dist_mod.resolve_pairwise(distance)
+    return gains_formula(V, cands, mincache, pair, resolve_policy(policy_name))
 
 
 @partial(jax.jit, static_argnames=("distance", "policy_name"))
@@ -55,8 +64,8 @@ class ExemplarClustering:
         self.cfg = cfg
         self.e0 = e0
         # L({e0}) is S-independent; computed "conventionally" once (paper §IV-B-1)
-        self.d_e0 = e0_distances(self.V, e0, cfg.distance)
-        self.L0 = float(jnp.mean(self.d_e0))
+        self.d_e0 = e0_distances(self.V, e0, cfg.distance, cfg.policy)
+        self.L0 = float(jnp.mean(self.d_e0.astype(jnp.float32)))
 
     # -- generic multiset interface (the paper's engine) --------------------
 
@@ -89,18 +98,30 @@ class ExemplarClustering:
     # -- optimizer-aware incremental interface (beyond paper) ---------------
 
     def init_mincache(self) -> jax.Array:
-        """m_i = d(v_i, e0): the min-dist cache of S = ∅ (e0 always included)."""
-        return self.d_e0
+        """m_i = d(v_i, e0): the min-dist cache of S = ∅ (e0 always included).
+
+        Stored float32 regardless of policy: the cache seeds n-sized
+        reductions, which overflow in f16 for large n even though the
+        distances themselves were computed at policy precision.
+        """
+        return self.d_e0.astype(jnp.float32)
 
     def marginal_gains(self, candidates: jax.Array, mincache: jax.Array,
                        use_kernel: bool = False) -> jax.Array:
         """Δ(c_j | S) for all candidates given S's min-dist cache. O(n·m·d)."""
         policy = self.cfg.resolved_policy()
         if use_kernel or self.cfg.backend in ("pallas", "pallas_interpret"):
+            if self.cfg.distance not in dist_mod.MXU_ELIGIBLE:
+                raise ValueError(
+                    f"kernel marginal gains support "
+                    f"{sorted(dist_mod.MXU_ELIGIBLE)}, got "
+                    f"{self.cfg.distance!r}")
             from repro.kernels import ops as kops
 
             return kops.marginal_gain(
                 self.V, candidates, mincache, policy=policy,
+                rbf_gamma=dist_mod.RBF_GAMMA
+                if self.cfg.distance == "rbf" else None,
                 interpret=(self.cfg.backend != "pallas"),
             )
         return _gains_vs_cache(self.V, candidates, mincache,
@@ -118,6 +139,16 @@ class ExemplarClustering:
         pair = dist_mod.resolve_pairwise(self.cfg.distance)
         policy = self.cfg.resolved_policy()
         return pair(self.V, x[None, :], policy)[:, 0]
+
+    def point_distances_block(self, X: jax.Array) -> jax.Array:
+        """d(v_i, x_b) for a block of B stream elements — (B, n).
+
+        One engine dispatch for the whole block (the batched-streaming path);
+        row b matches ``point_distances(X[b])`` up to matmul vectorization.
+        """
+        pair = dist_mod.resolve_pairwise(self.cfg.distance)
+        policy = self.cfg.resolved_policy()
+        return pair(self.V, jnp.asarray(X), policy).T
 
     # -- metadata ------------------------------------------------------------
 

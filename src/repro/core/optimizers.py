@@ -1,17 +1,39 @@
 """Submodular maximizers built on the multiset evaluation engine.
 
 Every optimizer here evaluates *many* sets per step — the paper's central
-observation ("optimizer-aware", §IV-A). Two evaluation styles are used:
+observation ("optimizer-aware", §IV-A). Three evaluation styles are used:
 
 * **multiset** — the paper-faithful path: each step packs
   ``{S ∪ {c_1}, …, S ∪ {c_m}}`` and calls the work-matrix engine. O(n·k·l).
 * **mincache** — the beyond-paper incremental path: gains against the
   min-distance cache. O(n·l·d) per step (k drops out).
+* **device** — the mincache recurrence hoisted entirely on device: a
+  ``jax.lax.scan`` runs all k greedy rounds inside ONE jitted dispatch, with
+  candidate gains, argmax selection, and the cache update never leaving the
+  accelerator (no per-round host↔device copies, no per-round dispatch).
 
-Optimizers:
-  greedy               Nemhauser–Wolsey–Fisher (1−1/e); both styles.
-  lazy_greedy          CELF lazy evaluation with stale upper bounds.
-  stochastic_greedy    Mirzasoleiman et al. sampled candidates.
+The min-distance cache obeys the recurrence
+
+    m_i^(0)   = d(v_i, e0)
+    m_i^(t+1) = min(m_i^(t), d(v_i, s_{t+1}))          (s_{t+1} = round-t winner)
+    Δ(c | S_t) = |V|⁻¹ Σ_i max(m_i^(t) − d(v_i, c), 0)
+    f(S_t)     = L({e0}) − |V|⁻¹ Σ_i m_i^(t)
+
+so each greedy round is one (n × m) distance evaluation plus an O(n) fold of
+the winner — the device engine evaluates the fold *inside* the next round's
+gain kernel (see ``kernels/marginal_gain.gain_update_eval``), which means the
+winner's distance column never materializes in HBM.
+
+Optimizer modes:
+  greedy               ``mode="mincache"`` (host reference, alias ``"host"``),
+                       ``mode="multiset"`` (paper-faithful), ``mode="device"``.
+  stochastic_greedy    ``mode="host"`` reference loop or ``mode="device"``;
+                       both consume the same precomputed per-round candidate
+                       sample matrix, so selections agree (exactly on the jnp
+                       backend; on pallas backends the in-kernel winner fold
+                       can differ in the last ulp from the host's jnp update,
+                       which may flip a near-tie argmax at reduced precision).
+  lazy_greedy          CELF lazy evaluation with stale upper bounds (host).
   sieve_streaming      Badanidiyuru et al. (1/2 − ε), streaming.
   sieve_streaming_pp   Kazemi et al., LB-pruned sieves (1/2 − ε), less memory.
   three_sieves         Buschjäger et al., single adaptive sieve ((1−ε)(1−1/e)
@@ -19,20 +41,32 @@ Optimizers:
   salsa                Norouzi-Fard et al. dense-threshold ensemble
                        (simplified: fixed dense schedules, no OPT oracle).
 
+The streaming family consumes the stream in *blocks* of ``block_size``
+elements: each block's distances against the ground set are computed in one
+engine dispatch (``ExemplarClustering.point_distances_block``) instead of one
+dispatch per arriving element, and ``_SieveState.offer`` accepts the whole
+block (decisions stay sequential — an accept updates the sieve caches seen by
+the next element in the block).
+
 All return an :class:`OptResult` (indices into V, value, trajectory, and the
 number of *set-function evaluations* — the paper's cost unit l).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import math
+from functools import partial
 from typing import Iterable, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.functions import ExemplarClustering
+from repro.core import distances as dist_mod
+from repro.core.functions import ExemplarClustering, gains_formula
+from repro.core.precision import resolve as resolve_policy
 
 
 @dataclasses.dataclass
@@ -47,6 +81,118 @@ class OptResult:
 
 
 # ---------------------------------------------------------------------------
+# Device-resident stepping engine (tentpole, beyond paper)
+# ---------------------------------------------------------------------------
+
+#: Number of times each device engine has been *traced* (not dispatched).
+#: A second run with identical shapes/statics must not increment these —
+#: that is the "exactly one jitted dispatch for all k rounds" property.
+DEVICE_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@partial(jax.jit, static_argnames=("distance", "policy_name", "block_m",
+                                   "backend", "rbf_gamma", "counter_key"))
+def _device_select_scan(V, d_e0, cand_rounds, w0, *, distance, policy_name,
+                        block_m, backend, rbf_gamma, counter_key):
+    """All k greedy rounds in one dispatch: scan over per-round candidates.
+
+    ``cand_rounds`` is (k, m) int32 — row t holds round t's candidate indices
+    (greedy broadcasts one row; stochastic greedy pre-samples k rows). The
+    carry is ``(mincache, taken-mask, previous winner)``; the winner is folded
+    into the cache at the *start* of the next round, so on the Pallas backend
+    the fold rides inside the fused gain kernel and the winner's distance
+    column never re-materializes in HBM.
+    """
+    DEVICE_TRACE_COUNTS[counter_key] += 1
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+    n = V.shape[0]
+    k, m = cand_rounds.shape
+    m_pad = ((m + block_m - 1) // block_m) * block_m
+    cand_p = jnp.pad(cand_rounds, ((0, 0), (0, m_pad - m)))
+    valid = jnp.arange(m_pad) < m
+    d_e0f = d_e0.astype(jnp.float32)
+    L0 = jnp.mean(d_e0f)
+    use_kernel = backend in ("pallas", "pallas_interpret")
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+    def gains_jnp(cache, C):
+        # stream candidates in blocks so the (n, Bm) distance tile stays
+        # memory-bounded; gains_formula is shared with the host path, which
+        # keeps the per-column reduction (and hence the argmax) identical.
+        blocks = C.reshape(-1, block_m, C.shape[-1])
+        return jax.lax.map(
+            lambda Cb: gains_formula(V, Cb, cache, pair, policy), blocks
+        ).reshape(-1)
+
+    def step(carry, cand_t):
+        cache, taken, w_prev = carry
+        C = V[cand_t]
+        if use_kernel:
+            # block_m only sizes the jnp streaming block (HBM working set);
+            # the kernel tiles its own VMEM blocks and never materializes
+            # the (n, m) matrix, so it keeps its default tile size
+            gains, cache = kops.fused_gain_update(
+                V, C, cache, w_prev, policy=policy, rbf_gamma=rbf_gamma,
+                interpret=(backend != "pallas"))
+        else:
+            dw = pair(V, w_prev[None, :], policy)[:, 0]
+            cache = jnp.minimum(cache, dw.astype(jnp.float32))
+            gains = gains_jnp(cache, C)
+        gains = jnp.where(valid & ~taken[cand_t], gains, -jnp.inf)
+        p = jnp.argmax(gains)
+        j = cand_t[p]
+        # cache currently includes winners 0..t-1 → this is trajectory[t-1]
+        val = L0 - jnp.mean(cache)
+        return (cache, taken.at[j].set(True), V[j]), (j, val)
+
+    init = (d_e0f, jnp.zeros((n,), bool), w0.astype(V.dtype))
+    (cache, _, w_last), (sel, vals) = jax.lax.scan(step, init, cand_p)
+    # one final fold for the last trajectory point
+    dw = pair(V, w_last[None, :], policy)[:, 0]
+    final_val = L0 - jnp.mean(jnp.minimum(cache, dw.astype(jnp.float32)))
+    traj = jnp.concatenate([vals[1:], final_val[None]])
+    return sel.astype(jnp.int32), traj
+
+
+def _device_block_m(n: int, m: int) -> int:
+    """Candidate block size bounding the (n, Bm) gain tile to ~128 MiB.
+
+    The floor of 8 (one TPU sublane) lets the cap be exceeded only past
+    n = 2^22 ground vectors, where chunking V itself is the right tool.
+    """
+    if n * m <= (1 << 25):
+        return m
+    return max(8, min(m, (1 << 25) // max(n, 1)))
+
+
+def _run_device_scan(f: ExemplarClustering, cand_rounds: np.ndarray,
+                     counter_key: str, block_m: Optional[int] = None) -> OptResult:
+    policy = f.cfg.resolved_policy()
+    backend = f.cfg.backend if f.cfg.backend in ("pallas", "pallas_interpret") \
+        else "jnp"
+    if backend != "jnp" and f.cfg.distance not in dist_mod.MXU_ELIGIBLE:
+        raise ValueError(
+            f"device mode with a pallas backend supports "
+            f"{sorted(dist_mod.MXU_ELIGIBLE)}, got {f.cfg.distance!r}")
+    rbf_gamma = dist_mod.RBF_GAMMA \
+        if (backend != "jnp" and f.cfg.distance == "rbf") else None
+    w0 = f.e0 if f.e0 is not None else jnp.zeros((f.dim,), f.V.dtype)
+    k, m = cand_rounds.shape
+    if k == 0:
+        return OptResult([], 0.0, [], 0)
+    bm = block_m if block_m is not None else _device_block_m(f.n, m)
+    sel, traj = _device_select_scan(
+        f.V, f.d_e0, jnp.asarray(cand_rounds, jnp.int32), w0,
+        distance=f.cfg.distance, policy_name=policy.name, block_m=bm,
+        backend=backend, rbf_gamma=rbf_gamma, counter_key=counter_key)
+    sel = [int(x) for x in np.asarray(sel)]
+    traj = [float(x) for x in np.asarray(traj)]
+    return OptResult(sel, traj[-1] if traj else 0.0, traj, k * m)
+
+
+# ---------------------------------------------------------------------------
 # Greedy family
 # ---------------------------------------------------------------------------
 
@@ -56,10 +202,21 @@ def greedy(
     k: int,
     mode: str = "mincache",
     candidates: Optional[np.ndarray] = None,
+    block_m: Optional[int] = None,
 ) -> OptResult:
-    """Algorithm 1 of the paper. ``mode`` picks the evaluation style."""
+    """Algorithm 1 of the paper. ``mode`` picks the evaluation style:
+
+    ``"mincache"`` (alias ``"host"``) — host loop over rounds, device gains.
+    ``"multiset"`` — paper-faithful: pack {S ∪ {c}} ∀c and call the engine.
+    ``"device"``  — all k rounds in one jitted ``lax.scan`` dispatch.
+    """
     n = f.n
     cand_idx = np.arange(n) if candidates is None else np.asarray(candidates)
+    if mode == "host":
+        mode = "mincache"
+    if mode == "device":
+        cand_rounds = np.broadcast_to(cand_idx, (k, len(cand_idx)))
+        return _run_device_scan(f, cand_rounds, "greedy", block_m)
     selected: list[int] = []
     traj: list[float] = []
     evals = 0
@@ -125,21 +282,38 @@ def lazy_greedy(f: ExemplarClustering, k: int, batch: int = 256) -> OptResult:
 
 
 def stochastic_greedy(
-    f: ExemplarClustering, k: int, eps: float = 0.05, seed: int = 0
+    f: ExemplarClustering, k: int, eps: float = 0.05, seed: int = 0,
+    mode: str = "host", block_m: Optional[int] = None,
 ) -> OptResult:
-    """Sample ⌈(n/k)·ln(1/ε)⌉ candidates per round; (1−1/e−ε) in expectation."""
+    """Sample ⌈(n/k)·ln(1/ε)⌉ candidates per round; (1−1/e−ε) in expectation.
+
+    All k rounds' candidate samples are drawn up front (so the host and
+    device paths consume identical randomness); already-selected candidates
+    are masked at scoring time. Each round draws k extra candidates so that
+    after masking at most k selected ones, at least the required m fresh
+    candidates remain — no round can degenerate to an all-masked argmax.
+    ``evaluations`` therefore counts k·min(n, m+k) scored candidates, a +k
+    per-round overdraw relative to the pool-sampling formulation.
+    """
     n = f.n
     rng = np.random.default_rng(seed)
     m = min(n, int(math.ceil(n / k * math.log(1.0 / eps))))
+    m_draw = min(n, m + k)
+    samples = np.stack(
+        [rng.choice(n, size=m_draw, replace=False) for _ in range(k)])
+    if mode == "device":
+        return _run_device_scan(f, samples, "stochastic_greedy", block_m)
+    if mode != "host":
+        raise ValueError(f"unknown stochastic_greedy mode {mode!r}")
     cache = f.init_mincache()
     selected: list[int] = []
     traj: list[float] = []
     evals = 0
-    for _ in range(k):
-        pool = np.setdiff1d(np.arange(n), np.asarray(selected, dtype=np.int64))
-        cand = rng.choice(pool, size=min(m, len(pool)), replace=False)
-        gains = np.asarray(f.marginal_gains(f.V[cand], cache))
+    for t in range(k):
+        cand = samples[t]
+        gains = np.array(f.marginal_gains(f.V[cand], cache))
         evals += len(cand)
+        gains[np.isin(cand, selected)] = -np.inf
         j = int(cand[int(np.argmax(gains))])
         selected.append(j)
         cache = f.update_mincache(cache, f.V[j])
@@ -150,7 +324,9 @@ def stochastic_greedy(
 # ---------------------------------------------------------------------------
 # Streaming sieves — all share a vectorized multi-sieve state so that one
 # arriving element is evaluated against *all* sieves in a single engine call
-# (this is exactly the paper's multiset-parallelized problem).
+# (this is exactly the paper's multiset-parallelized problem). The stream is
+# consumed in blocks: one device dispatch fetches the distances of B elements
+# (a packed multiset evaluation), and the accept logic replays them in order.
 # ---------------------------------------------------------------------------
 
 
@@ -180,13 +356,7 @@ class _SieveState:
             return np.zeros((0,), np.float32)
         return self.f.L0 - self.caches.mean(axis=1)
 
-    def offer(self, idx: int, dvec: np.ndarray, accept_rule) -> np.ndarray:
-        """Offer element ``idx`` to every sieve; accept per ``accept_rule``.
-
-        accept_rule(gains, sizes, values) -> bool mask. Returns the mask.
-        """
-        if not self.thresholds:
-            return np.zeros((0,), bool)
+    def _offer_one(self, idx: int, dvec: np.ndarray, accept_rule) -> np.ndarray:
         gains = np.maximum(self.caches - dvec[None, :], 0.0).mean(axis=1)
         sizes = np.array([len(m) for m in self.members])
         accept = accept_rule(gains, sizes, self.values()) & (sizes < self.k)
@@ -196,6 +366,28 @@ class _SieveState:
             for si in np.nonzero(accept)[0]:
                 self.members[si].append(idx)
         return accept
+
+    def offer(self, idx, dvec: np.ndarray, accept_rule) -> np.ndarray:
+        """Offer one element — or a block of B — to every sieve.
+
+        ``idx`` is an int (with ``dvec`` of shape (n,)) or a (B,) index array
+        (with ``dvec`` of shape (B, n), the block's packed distance rows from
+        one engine dispatch). Block decisions are sequential: an accept
+        updates the caches consulted for the next element. Returns the accept
+        mask — (S,) for a single element, (B, S) for a block.
+        """
+        dmat = np.asarray(dvec, np.float32)
+        if dmat.ndim == 1:
+            if not self.thresholds:
+                return np.zeros((0,), bool)
+            return self._offer_one(int(idx), dmat, accept_rule)
+        idxs = np.atleast_1d(np.asarray(idx))
+        if not self.thresholds:
+            return np.zeros((len(idxs), 0), bool)
+        return np.stack([
+            self._offer_one(int(i), row, accept_rule)
+            for i, row in zip(idxs, dmat)
+        ])
 
     def best(self) -> tuple[list[int], float]:
         vals = self.values()
@@ -222,34 +414,72 @@ def _stream(f: ExemplarClustering, order: Optional[Sequence[int]], seed: int) ->
     return np.asarray(order)
 
 
+def _stream_blocks(f: ExemplarClustering, order: Optional[Sequence[int]],
+                   seed: int, block: int):
+    """Yield (indices, distance rows, singleton gains) per stream block.
+
+    One engine dispatch per block computes the (B, n) distances of the next B
+    stream elements against the ground set — the batched replacement for the
+    per-element ``point_distances`` round-trip.
+    """
+    idx = np.asarray(_stream(f, order, seed))
+    d_e0 = np.asarray(f.d_e0, np.float32)
+    for s in range(0, len(idx), block):
+        ib = idx[s:s + block]
+        dmat = np.asarray(f.point_distances_block(f.V[ib]), np.float32)
+        singles = np.maximum(d_e0[None, :] - dmat, 0.0).mean(axis=1)
+        yield ib, dmat, singles
+
+
+def _static_grid_segments(blocks, rebuild_grid):
+    """Split stream blocks into segments over which the threshold grid is
+    static: ``rebuild_grid(m_seen)`` fires whenever a new max singleton
+    arrives, then the run of elements up to the next new-max is yielded as
+    one (indices, distance rows) pair for a single blocked ``offer``.
+    """
+    m_seen = 0.0
+    for ib, dmat, singles in blocks:
+        b, B = 0, len(ib)
+        while b < B:
+            if singles[b] > m_seen:
+                m_seen = float(singles[b])
+                rebuild_grid(m_seen)
+            e = b + 1
+            while e < B and singles[e] <= m_seen:
+                e += 1
+            yield ib[b:e], dmat[b:e]
+            b = e
+
+
 def sieve_streaming(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
+    block_size: int = 64,
 ) -> OptResult:
     """SieveStreaming [4]: thresholds (1+ε)^i ∈ [m, 2km], m = max singleton."""
     st = _SieveState(f, k)
-    m_seen = 0.0
     evals = 0
-    for idx in _stream(f, order, seed):
-        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
-        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
-        if singleton > m_seen:
-            m_seen = singleton
-            want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
-            have = set(st.thresholds)
-            keep = np.array([t >= m_seen for t in st.thresholds], bool)
-            if len(keep) and not keep.all():
-                st.drop(keep)
-            for t in want:
-                if t not in have:
-                    st.add_sieve(t)
 
+    def rebuild(m_seen):
+        want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
+        have = set(st.thresholds)
+        keep = np.array([t >= m_seen for t in st.thresholds], bool)
+        if len(keep) and not keep.all():
+            st.drop(keep)
+        for t in want:
+            if t not in have:
+                st.add_sieve(t)
+
+    blocks = _stream_blocks(f, order, seed, block_size)
+    for seg_idx, seg_d in _static_grid_segments(blocks, rebuild):
         taus = np.array(st.thresholds)
+
         def rule(gains, sizes, values, taus=taus):
             need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
             return gains >= need
-        st.offer(int(idx), dvec, rule)
-        evals += max(len(st.thresholds), 1)
+
+        st.offer(seg_idx, seg_d, rule)
+        evals += len(seg_idx) * max(len(st.thresholds), 1)
     members, value = st.best()
     return OptResult(members, value, [value], evals)
 
@@ -257,35 +487,41 @@ def sieve_streaming(
 def sieve_streaming_pp(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
+    block_size: int = 64,
 ) -> OptResult:
-    """SieveStreaming++ [19]: prune sieves below LB = best current value."""
+    """SieveStreaming++ [19]: prune sieves below LB = best current value.
+
+    LB moves after every accept, so sieve management stays per-element; the
+    distance fetch is still one dispatch per block.
+    """
     st = _SieveState(f, k)
     m_seen, lb = 0.0, 0.0
     evals = 0
-    for idx in _stream(f, order, seed):
-        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
-        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
-        m_seen = max(m_seen, singleton)
-        lo = max(lb, m_seen)
-        want = _threshold_grid(lo, 2.0 * k * m_seen, eps)
-        have = set(st.thresholds)
-        if st.thresholds:
-            keep = np.array([t >= lo / (1 + eps) for t in st.thresholds], bool)
-            if not keep.all():
-                st.drop(keep)
-                have = set(st.thresholds)
-        for t in want:
-            if t not in have:
-                st.add_sieve(t)
-        taus = np.array(st.thresholds)
-        def rule(gains, sizes, values, taus=taus):
-            need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
-            return gains >= need
-        st.offer(int(idx), dvec, rule)
-        evals += max(len(st.thresholds), 1)
-        vals = st.values()
-        if len(vals):
-            lb = max(lb, float(vals.max()))
+    for ib, dmat, singles in _stream_blocks(f, order, seed, block_size):
+        for bi, idx in enumerate(ib):
+            m_seen = max(m_seen, float(singles[bi]))
+            lo = max(lb, m_seen)
+            want = _threshold_grid(lo, 2.0 * k * m_seen, eps)
+            have = set(st.thresholds)
+            if st.thresholds:
+                keep = np.array([t >= lo / (1 + eps) for t in st.thresholds], bool)
+                if not keep.all():
+                    st.drop(keep)
+                    have = set(st.thresholds)
+            for t in want:
+                if t not in have:
+                    st.add_sieve(t)
+            taus = np.array(st.thresholds)
+
+            def rule(gains, sizes, values, taus=taus):
+                need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
+                return gains >= need
+
+            st.offer(int(idx), dmat[bi], rule)
+            evals += max(len(st.thresholds), 1)
+            vals = st.values()
+            if len(vals):
+                lb = max(lb, float(vals.max()))
     members, value = st.best()
     return OptResult(members, value, [value], evals)
 
@@ -293,6 +529,7 @@ def sieve_streaming_pp(
 def three_sieves(
     f: ExemplarClustering, k: int, eps: float = 0.1, T: int = 50,
     order: Optional[Sequence[int]] = None, seed: int = 0,
+    block_size: int = 64,
 ) -> OptResult:
     """ThreeSieves [18]: one sieve, threshold lowered after T rejections."""
     cache = np.asarray(f.init_mincache(), np.float32)
@@ -301,32 +538,36 @@ def three_sieves(
     m_seen = 0.0
     tau_idx: Optional[int] = None  # current exponent into the (1+eps) grid
     rejections = 0
-    for idx in _stream(f, order, seed):
-        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
-        gain = float(np.maximum(cache - dvec, 0.0).mean())
-        evals += 1
-        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
-        if singleton > m_seen:
-            m_seen = singleton
-            hi = k * m_seen
-            tau_idx = math.floor(math.log(hi) / math.log1p(eps)) if hi > 0 else None
-            rejections = 0
-        if tau_idx is None or len(members) >= k:
-            continue
-        tau = (1 + eps) ** tau_idx
-        f_cur = f.L0 - float(cache.mean())
-        need = (tau - f_cur) / max(k - len(members), 1)
-        if gain >= need:
-            members.append(int(idx))
-            cache = np.minimum(cache, dvec)
-            rejections = 0
-        else:
-            rejections += 1
-            if rejections >= T:
-                tau_idx -= 1
+    done = False
+    for ib, dmat, singles in _stream_blocks(f, order, seed, block_size):
+        for bi, idx in enumerate(ib):
+            dvec = dmat[bi]
+            gain = float(np.maximum(cache - dvec, 0.0).mean())
+            evals += 1
+            if singles[bi] > m_seen:
+                m_seen = float(singles[bi])
+                hi = k * m_seen
+                tau_idx = math.floor(math.log(hi) / math.log1p(eps)) if hi > 0 else None
                 rejections = 0
-                if (1 + eps) ** tau_idx < m_seen / (2 * k):
-                    break  # threshold exhausted
+            if tau_idx is None or len(members) >= k:
+                continue
+            tau = (1 + eps) ** tau_idx
+            f_cur = f.L0 - float(cache.mean())
+            need = (tau - f_cur) / max(k - len(members), 1)
+            if gain >= need:
+                members.append(int(idx))
+                cache = np.minimum(cache, dvec)
+                rejections = 0
+            else:
+                rejections += 1
+                if rejections >= T:
+                    tau_idx -= 1
+                    rejections = 0
+                    if (1 + eps) ** tau_idx < m_seen / (2 * k):
+                        done = True  # threshold exhausted
+                        break
+        if done:
+            break
     value = f.L0 - float(cache.mean())
     return OptResult(members, value, [value], evals)
 
@@ -334,6 +575,7 @@ def three_sieves(
 def salsa(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
+    block_size: int = 64,
 ) -> OptResult:
     """Salsa [20], simplified: an ensemble of dense-threshold passes.
 
@@ -344,25 +586,26 @@ def salsa(
     best sieve. Single pass, same memory as SieveStreaming.
     """
     st = _SieveState(f, k)
-    m_seen = 0.0
     evals = 0
     early, late = 0.5, 1.0 / (2.0 * math.e)
-    for idx in _stream(f, order, seed):
-        dvec = np.asarray(f.point_distances(f.V[idx]), np.float32)
-        singleton = float(np.maximum(f.d_e0 - dvec, 0.0).mean())
-        if singleton > m_seen:
-            m_seen = singleton
-            want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
-            have = set(st.thresholds)
-            for t in want:
-                if t not in have:
-                    st.add_sieve(t)
+
+    def rebuild(m_seen):
+        want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
+        have = set(st.thresholds)
+        for t in want:
+            if t not in have:
+                st.add_sieve(t)
+
+    blocks = _stream_blocks(f, order, seed, block_size)
+    for seg_idx, seg_d in _static_grid_segments(blocks, rebuild):
         taus = np.array(st.thresholds)
+
         def rule(gains, sizes, values, taus=taus):
             r = np.where(sizes < k // 2, early, late)
             return gains >= r * taus / k
-        st.offer(int(idx), dvec, rule)
-        evals += max(len(st.thresholds), 1)
+
+        st.offer(seg_idx, seg_d, rule)
+        evals += len(seg_idx) * max(len(st.thresholds), 1)
     members, value = st.best()
     return OptResult(members, value, [value], evals)
 

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for optimizer-aware greedy marginal gains (beyond paper).
+"""Pallas TPU kernels for optimizer-aware greedy marginal gains (beyond paper).
 
 For Greedy, every candidate set shares the base S, so with the min-distance
 cache ``m_i = min_{s∈S∪{e0}} d(v_i, s)`` the marginal gain collapses to
@@ -8,6 +8,17 @@ cache ``m_i = min_{s∈S∪{e0}} d(v_i, s)`` the marginal gain collapses to
 — one (n × m) distance matrix (a single Gram matmul) + a ReLU/sum epilogue,
 fused here so the distance matrix never reaches HBM. Grid ``(m_tiles,
 n_tiles)`` with n innermost, accumulating into the (Bm, 1) output block.
+
+Two kernels:
+
+* :func:`gain_eval` — gains against a given cache (one greedy round's scoring).
+* :func:`gain_update_eval` — the fused *gain + cache-update* step used by the
+  device-resident greedy engine. The previous round's winner ``w`` rides along
+  as an extra (1, d) operand; the epilogue recomputes ``d(v_i, w)`` in-tile,
+  folds it into the cache (``m_i ← min(m_i, d(v_i, w))``) and scores the
+  current round's gains against the *updated* cache — so the winner's distance
+  column never re-materializes in HBM (only the (n,) cache itself, which is
+  required state, is written back).
 """
 from __future__ import annotations
 
@@ -22,6 +33,16 @@ from repro.core.precision import PrecisionPolicy
 from repro.kernels.exemplar_eval import _dist_tile
 
 
+def _relu_sum_tile(cache, d2, n_total: int):
+    """Scoring epilogue shared by both kernels: |V|⁻¹ Σ relu(m_i − d_ij).
+
+    The relu runs in the distance dtype (matches ref.marginal_gain_ref), the
+    accumulation always in float32.
+    """
+    g = jnp.maximum(cache.astype(d2.dtype) - d2, 0.0)
+    return jnp.sum(g.astype(jnp.float32), axis=0) / n_total
+
+
 def _gain_kernel(v_ref, c_ref, cache_ref, out_ref, *,
                  n_total: int, policy: PrecisionPolicy, rbf_gamma):
     j = pl.program_id(1)
@@ -33,9 +54,7 @@ def _gain_kernel(v_ref, c_ref, cache_ref, out_ref, *,
     v = v_ref[...].astype(policy.compute_dtype)      # (Bn, d)
     c = c_ref[...].astype(policy.compute_dtype)      # (Bm, d)
     d2 = _dist_tile(v, c, policy, rbf_gamma)         # (Bn, Bm)
-    cache = cache_ref[...].astype(d2.dtype)          # (Bn, 1)
-    g = jnp.maximum(cache - d2, 0.0)                 # relu(m_i − d_ij)
-    partial = jnp.sum(g.astype(jnp.float32), axis=0) / n_total
+    partial = _relu_sum_tile(cache_ref[...], d2, n_total)
     out_ref[...] += partial[:, None]
 
 
@@ -69,3 +88,67 @@ def gain_eval(
         out_shape=jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
         interpret=interpret,
     )(V, C, cache)
+
+
+def _gain_update_kernel(v_ref, c_ref, cache_ref, w_ref, gain_ref, cache_out_ref,
+                        *, n_total: int, policy: PrecisionPolicy, rbf_gamma):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        gain_ref[...] = jnp.zeros_like(gain_ref)
+
+    v = v_ref[...].astype(policy.compute_dtype)      # (Bn, d)
+    w = w_ref[...].astype(policy.compute_dtype)      # (1, d) previous winner
+    cache = cache_ref[...].astype(jnp.float32)       # (Bn, 1)
+    dw = _dist_tile(v, w, policy, rbf_gamma)         # (Bn, 1)
+    new_cache = jnp.minimum(cache, dw.astype(jnp.float32))
+    cache_out_ref[...] = new_cache                   # idempotent across m tiles
+
+    c = c_ref[...].astype(policy.compute_dtype)      # (Bm, d)
+    d2 = _dist_tile(v, c, policy, rbf_gamma)         # (Bn, Bm)
+    partial = _relu_sum_tile(new_cache, d2, n_total)
+    gain_ref[...] += partial[:, None]
+
+
+def gain_update_eval(
+    V: jax.Array,          # (n_pad, d_pad)
+    C: jax.Array,          # (m_pad, d_pad)
+    cache: jax.Array,      # (n_pad, 1) float32 — cache *before* the winner
+    winner: jax.Array,     # (1, d_pad) — previous round's winning candidate
+    *,
+    n_total: int,
+    policy: PrecisionPolicy,
+    block_n: int,
+    block_m: int,
+    rbf_gamma: Optional[float] = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused greedy step: fold ``winner`` into the cache, score all candidates.
+
+    Returns ``(gains (m_pad, 1), new_cache (n_pad, 1))`` — both float32.
+    """
+    n_pad, d_pad = V.shape
+    m_pad = C.shape[0]
+    grid = (m_pad // block_m, n_pad // block_n)
+    kern = functools.partial(
+        _gain_update_kernel, n_total=n_total, policy=policy, rbf_gamma=rbf_gamma)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d_pad), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_m, d_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, d_pad), lambda i, j: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(V, C, cache, winner)

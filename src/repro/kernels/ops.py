@@ -191,6 +191,17 @@ def exemplar_eval(
 # ---------------------------------------------------------------------------
 
 
+def _pad_gain_operands(V, C, cache, block_n, block_m):
+    """Pad V/C/cache to lane- and block-aligned shapes for the gain kernels."""
+    d_pad = _round_up(V.shape[1], LANE)
+    n_pad = _round_up(V.shape[0], block_n)
+    m_pad = _round_up(C.shape[0], block_m)
+    Vp = _pad_axis(_pad_axis(V, n_pad, 0), d_pad, 1)
+    Cp = _pad_axis(_pad_axis(C, m_pad, 0), d_pad, 1)
+    cache_p = _pad_axis(cache.astype(jnp.float32), n_pad, 0)[:, None]
+    return Vp, Cp, cache_p, d_pad
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
@@ -199,12 +210,7 @@ def exemplar_eval(
 def _marginal_gain_padded(V, C, cache, *, policy, interpret, rbf_gamma,
                           n_total, block_n, block_m):
     m = C.shape[0]
-    d_pad = _round_up(V.shape[1], LANE)
-    n_pad = _round_up(V.shape[0], block_n)
-    m_pad = _round_up(m, block_m)
-    Vp = _pad_axis(_pad_axis(V, n_pad, 0), d_pad, 1)
-    Cp = _pad_axis(_pad_axis(C, m_pad, 0), d_pad, 1)
-    cache_p = _pad_axis(cache.astype(jnp.float32), n_pad, 0)[:, None]
+    Vp, Cp, cache_p, _ = _pad_gain_operands(V, C, cache, block_n, block_m)
     out = _mg.gain_eval(
         Vp, Cp, cache_p, n_total=n_total, policy=policy,
         block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
@@ -231,4 +237,46 @@ def marginal_gain(
     bm = min(block_m, _round_up(C.shape[0], SUBLANE))
     return _marginal_gain_padded(
         V, C, mincache, policy=policy, interpret=interpret,
+        rbf_gamma=rbf_gamma, n_total=n, block_n=bn, block_m=bm)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
+                     "block_n", "block_m"),
+)
+def _fused_gain_update_padded(V, C, cache, winner, *, policy, interpret,
+                              rbf_gamma, n_total, block_n, block_m):
+    n, m = V.shape[0], C.shape[0]
+    Vp, Cp, cache_p, d_pad = _pad_gain_operands(V, C, cache, block_n, block_m)
+    w_p = _pad_axis(winner[None, :], d_pad, 1)
+    gains, new_cache = _mg.gain_update_eval(
+        Vp, Cp, cache_p, w_p, n_total=n_total, policy=policy,
+        block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
+        interpret=interpret)
+    return gains[:m, 0], new_cache[:n, 0]
+
+
+def fused_gain_update(
+    V: jax.Array,
+    C: jax.Array,
+    mincache: jax.Array,
+    winner: jax.Array,       # (d,) previous round's winning candidate
+    *,
+    policy: PrecisionPolicy = FP32,
+    interpret: Optional[bool] = None,
+    rbf_gamma: Optional[float] = None,
+    block_n: int = 256,
+    block_m: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused greedy step (device engine): cache ← min(cache, d(·, winner)),
+    then Δ(c_j | S) against the updated cache. Returns ``(gains, new_cache)``.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    n = V.shape[0]
+    bn = min(block_n, _round_up(n, SUBLANE))
+    bm = min(block_m, _round_up(C.shape[0], SUBLANE))
+    return _fused_gain_update_padded(
+        V, C, mincache, winner, policy=policy, interpret=interpret,
         rbf_gamma=rbf_gamma, n_total=n, block_n=bn, block_m=bm)

@@ -4,6 +4,8 @@ import itertools
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test extra; pip install .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EvalConfig, ExemplarClustering, greedy

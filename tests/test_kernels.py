@@ -6,6 +6,8 @@ kernel body) against ref.py across problem shapes, layouts, modes, dtypes.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test extra; pip install .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.precision import BF16, FP16, FP16_STRICT, FP32

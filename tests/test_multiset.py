@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test extra; pip install .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import pack_base_plus_candidates, pack_sets
