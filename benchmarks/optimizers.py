@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.core import EvalConfig, ExemplarClustering
-from repro.core.optimizers import OPTIMIZERS, greedy, stochastic_greedy
+from repro.core.optimizers import (OPTIMIZERS, greedy, lazy_greedy,
+                                   stochastic_greedy)
 from repro.data.synthetic import blobs
 
 
@@ -59,5 +60,27 @@ def run(quick: bool = False):
         rows.append((f"stochastic_host_n{nn}", t_sh, ""))
         rows.append((f"stochastic_device_n{nn}", t_sd,
                      f"speedup={t_sh / t_sd:.2f}x"))
+        # CELF: host reference loop vs the same top-B re-scoring on device
+        r_lh = lazy_greedy(fs, kk, mode="host")
+        r_ld = lazy_greedy(fs, kk, mode="device")
+        t_lh = time_call(lambda fs=fs: lazy_greedy(fs, kk, mode="host"),
+                         iters=1, warmup=0)
+        t_ld = time_call(lambda fs=fs: lazy_greedy(fs, kk, mode="device"),
+                         iters=1, warmup=0)
+        rows.append((f"lazy_host_n{nn}", t_lh, f"evals={r_lh.evaluations}"))
+        rows.append((f"lazy_device_n{nn}", t_ld,
+                     f"speedup={t_lh / t_ld:.2f}x;"
+                     f"agree={r_lh.indices == r_ld.indices};"
+                     f"evals={r_ld.evaluations}"))
+        # mesh-sharded plan (only meaningful with >1 device, e.g. under
+        # XLA_FLAGS=--xla_force_host_platform_device_count=N)
+        import jax
+        if jax.device_count() > 1:
+            r_sh = greedy(fs, kk, mode="device_sharded")
+            t_shd = time_call(
+                lambda fs=fs: greedy(fs, kk, mode="device_sharded"),
+                iters=1, warmup=0)
+            rows.append((f"greedy_sharded_n{nn}_d{jax.device_count()}", t_shd,
+                         f"agree={r_sh.indices == r_dev.indices}"))
     emit(rows)
     return rows

@@ -1,6 +1,6 @@
 """Benchmark harness — one module per paper table/figure.
 
-``python -m benchmarks.run [--quick] [--only name]``
+``python -m benchmarks.run [--quick] [--only name] [--json out.json]``
 
 CSV rows: name,us_per_call,derived. Mapping to the paper:
   sweeps          — Fig. 3/4 + Table I (vary N / l / k; naive vs work-matrix)
@@ -8,12 +8,17 @@ CSV rows: name,us_per_call,derived. Mapping to the paper:
   chunking        — §IV-B-3 memory-budgeted evaluation
   greedy_modes    — beyond-paper optimizer-aware greedy + engine modes
   kernel_roofline — TPU roofline of the Pallas kernels at paper sizes
-  optimizers      — §IV-A optimizer evaluation-count profile
+  optimizers      — §IV-A optimizer evaluation-count profile + engine plans
+
+``--json`` additionally writes the rows as a machine-readable artifact
+(``{module: [{name, us_per_call, derived}, ...]}``) so CI can accumulate a
+perf trajectory across PRs.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 
 MODULES = ["sweeps", "precision", "chunking", "greedy_modes",
            "kernel_roofline", "optimizers"]
@@ -23,12 +28,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to PATH as JSON (CI artifact)")
     args = ap.parse_args()
     mods = [args.only] if args.only else MODULES
     print("name,us_per_call,derived")
+    collected: dict[str, list[dict]] = {}
     for m in mods:
         mod = importlib.import_module(f"benchmarks.{m}")
-        mod.run(quick=args.quick)
+        rows = mod.run(quick=args.quick)
+        collected[m] = [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in (rows or [])
+        ]
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(collected, fh, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -43,12 +43,25 @@ def main():
         m = fit_exemplar_clustering(X, k=8, cfg=EvalConfig(policy=pol))
         print(f"precision {pol:6s}: f(S) = {m.value:.5f}")
 
-    # device-resident stepping: all k greedy rounds in one jitted dispatch
-    from repro.core import greedy
+    # the selection engine: all k rounds in one jitted dispatch — dense
+    # greedy and CELF (stale bounds + top-B re-scoring) both run on device
+    from repro.core import greedy, lazy_greedy
     host = greedy(f, 8, mode="host")
     dev = greedy(f, 8, mode="device")
     print(f"device greedy matches host: {host.indices == dev.indices} "
           f"(f = {dev.value:.4f})")
+    lhost = lazy_greedy(f, 8, mode="host")
+    ldev = lazy_greedy(f, 8, mode="device")
+    print(f"device CELF matches host CELF: {lhost.indices == ldev.indices} "
+          f"(evaluations: {ldev.evaluations} vs greedy's {dev.evaluations})")
+
+    # mesh-sharded plan: V + min-cache row-shard over all local devices,
+    # one O(m) psum per round (run under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 to see >1 shard)
+    import jax
+    sharded = greedy(f, 8, mode="device_sharded")
+    print(f"sharded greedy over {jax.device_count()} device(s) matches: "
+          f"{sharded.indices == dev.indices}")
 
 
 if __name__ == "__main__":

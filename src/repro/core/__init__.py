@@ -7,6 +7,11 @@ from repro.core.evaluator import (
     plan_chunks,
     work_matrix,
 )
+from repro.core.engine import (
+    DEVICE_TRACE_COUNTS,
+    run_selection,
+    validate_candidates,
+)
 from repro.core.functions import ExemplarClustering
 from repro.core.multiset import PackedMultiset, pack_base_plus_candidates, pack_sets
 from repro.core.optimizers import (
@@ -25,7 +30,8 @@ from repro.core.precision import BF16, FP16, FP16_STRICT, FP32, PrecisionPolicy
 
 __all__ = [
     "BF16", "FP16", "FP16_STRICT", "FP32", "PrecisionPolicy",
-    "ChunkingError", "EvalConfig", "bytes_per_set", "evaluate_multiset",
+    "ChunkingError", "DEVICE_TRACE_COUNTS", "EvalConfig", "bytes_per_set",
+    "evaluate_multiset", "run_selection", "validate_candidates",
     "plan_chunks", "work_matrix", "ExemplarClustering", "PackedMultiset",
     "pack_base_plus_candidates", "pack_sets", "OPTIMIZERS", "OptResult",
     "greedy", "lazy_greedy", "salsa", "sieve_streaming", "sieve_streaming_pp",

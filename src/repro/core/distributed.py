@@ -4,14 +4,24 @@ The paper's decomposition L(S) = Σ_i L_{v_i}(S) (eq. 5/6) is *exactly* a
 data-parallel sum over the ground set: shard V's rows over the mesh's data
 axes, evaluate partial work-matrix column blocks locally, ``psum`` the row
 sums. This scales the technique from one GPU to a pod: each chip holds
-n/|data| ground vectors, the multiset payload is replicated (it is l·k·d ≪
-n·d), and the only communication is one (l,)-sized all-reduce per evaluation
-— the technique is embarrassingly scalable along exactly the axis that grows
-with corpus size.
+n/|data| ground vectors of the *working* distance/cache state, the multiset
+payload is replicated (it is l·k·d ≪ n·d), and the only communication is one
+(l,)-sized all-reduce per evaluation — the technique is embarrassingly
+scalable along exactly the axis that grows with corpus size. (The selection
+engine's dense strategy additionally replicates its candidate pool — all of
+V — per device for now; sharding the pool is a ROADMAP item.)
 
-Greedy at pod scale: candidate gains are computed against local V shards and
-psum'd; the argmax is then a replicated scalar op. One collective per greedy
-step, O(l) bytes.
+This module is the **sharded backend of the selection engine**
+(:mod:`repro.core.engine`, plan ``device_sharded``): the whole k-round greedy
+scan runs *inside* ``shard_map``, with V's rows and the min-distance cache
+sharded over the mesh's data axes and the candidate payload replicated. Each
+scored candidate batch reduces its (m,) per-shard gain partials with ONE
+``psum`` of O(m) bytes (the trajectory scalar rides in the same collective):
+dense/stochastic rounds issue exactly one; a CELF round issues one per top-B
+re-scoring iteration (typically one, ⌈n/B⌉ in the degenerate full-re-score
+case). The argmax — and for CELF the stale-bound state — stays replicated.
+The standalone ``make_distributed_*`` evaluators remain as the
+one-collective-per-call building blocks for external drivers.
 """
 from __future__ import annotations
 
@@ -24,7 +34,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import distances as dist_mod
+from repro.core.engine import (DEVICE_TRACE_COUNTS, _device_block_m,
+                               _score_blocked, celf_max_iters,
+                               make_lazy_step, make_rounds_step)
 from repro.core.evaluator import EvalConfig
+from repro.core.functions import gains_formula
 from repro.core.multiset import PackedMultiset
 from repro.core.precision import resolve as resolve_policy
 
@@ -82,9 +96,11 @@ def make_distributed_gains(mesh: Mesh, cfg: EvalConfig,
     axes = tuple(data_axes)
 
     def local_gains(V_loc, cands, cache_loc, n_global):
-        D = pair(V_loc, cands, policy)  # (n_loc, m)
-        g = jnp.sum(jnp.maximum(cache_loc[:, None] - D, 0.0), axis=0)
-        return jax.lax.psum(g.astype(jnp.float32), axes) / n_global
+        # the engine's shared gain reduction with the global-n normalizer:
+        # per-shard partials psum to the exact global gains
+        g = gains_formula(V_loc, cands, cache_loc, pair, policy,
+                          n_total=n_global)
+        return jax.lax.psum(g.astype(jnp.float32), axes)
 
     smapped = shard_map(
         local_gains,
@@ -123,6 +139,192 @@ def make_distributed_cache_update(mesh: Mesh, cfg: EvalConfig,
     return jax.jit(smapped)
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded selection scan — the engine's device_sharded execution plan.
+# All k rounds run in ONE dispatch inside shard_map; each scored candidate
+# batch crosses the mesh as exactly one psum of O(m) bytes (one per
+# dense/stochastic round, one per CELF re-scoring iteration).
+# ---------------------------------------------------------------------------
+
+_SELECTION_SCAN_CACHE: dict = {}
+
+
+def make_selection_scan(
+    mesh: Mesh,
+    data_axes: Sequence[str],
+    *,
+    kind: str,               # "dense" | "stochastic" | "lazy"
+    k: int,                  # selection rounds
+    top_b: int,              # CELF re-score width (lazy only)
+    n_total: int,            # global ground-set size (the gain normalizer)
+    block_m: int,            # per-shard candidate block (bounds the tile)
+    distance: str,
+    policy_name: str,
+    counter_key: str,
+):
+    """Build (and cache) the jitted mesh-sharded k-round selection scan.
+
+    Returns ``fn(V_sh, pool, d_e0_sh, cand_rounds, w0) -> (sel, traj,
+    n_scored)`` where ``V_sh``/``d_e0_sh`` are row-sharded over
+    ``data_axes``, ``pool`` is the replicated candidate payload (rows indexed
+    by ``cand_rounds`` — and by the CELF top-B gather), and ``cand_rounds``
+    is (k, m) int32 for stochastic, ONE (1, m) row for dense (closed over by
+    every round, never replicated k times), (1, 0) for lazy. The builder is
+    cached per (mesh, statics) so repeat runs reuse one traced executable.
+    """
+    axes = tuple(data_axes)
+    key = (mesh, axes, kind, k, top_b, n_total, block_m, distance,
+           policy_name, counter_key)
+    if key in _SELECTION_SCAN_CACHE:
+        return _SELECTION_SCAN_CACHE[key]
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+
+    def local_scan(V_loc, pool, d_e0_loc, cand_rounds, w0):
+        n_pool = pool.shape[0]
+        cache0 = d_e0_loc.astype(jnp.float32)
+        L0 = jax.lax.psum(jnp.sum(cache0), axes) / n_total
+
+        def fold(cache, w):
+            dw = pair(V_loc, w[None, :], policy)[:, 0]
+            return jnp.minimum(cache, dw.astype(jnp.float32))
+
+        def score_psum(cache, C):
+            """Global gains of replicated candidates C + global mean cache.
+
+            The per-shard gain partials stream in (n_loc, block_m) tiles —
+            no shard ever materializes an (n_loc, m) distance block — and
+            the (m,) partials plus the shard's cache row-sum ride ONE psum:
+            this call is the scored batch's single O(m)-byte collective.
+            """
+            g_part = _score_blocked(V_loc, C, cache, pair, policy, block_m,
+                                    n_total=n_total)
+            payload = jnp.concatenate(
+                [g_part.astype(jnp.float32),
+                 (jnp.sum(cache) / n_total)[None]])
+            out = jax.lax.psum(payload, axes)
+            return out[:-1], out[-1]
+
+        if kind == "lazy":
+            # the shared CELF round body; every shard agrees on the loop's
+            # iteration count because the bound state is replicated
+            # (post-psum gains), so the per-iteration collectives line up
+            step = make_lazy_step(pool, fold, score_psum, L0, top_b,
+                                  celf_max_iters(n_total, top_b))
+            ub0, _ = score_psum(cache0, pool)
+            init = (cache0, jnp.zeros((n_pool,), bool),
+                    w0.astype(pool.dtype), ub0)
+            (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
+                step, init, None, length=k)
+            n_scored = jnp.asarray(n_pool, jnp.int32) + jnp.sum(scored)
+        else:
+
+            def fold_score_mean(cache, w_prev, C):
+                cache = fold(cache, w_prev)
+                gains, mean_c = score_psum(cache, C)
+                return gains, cache, mean_c
+
+            step = make_rounds_step(pool, fold_score_mean, L0)
+            init = (cache0, jnp.zeros((n_pool,), bool), w0.astype(pool.dtype))
+            if kind == "dense":
+                cand_row = cand_rounds[0]
+                (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                    lambda carry, _: step(carry, cand_row), init, None,
+                    length=k)
+            else:
+                (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                    step, init, cand_rounds)
+            n_scored = jnp.sum(scored)
+
+        # one final fold + scalar psum for the last trajectory point
+        cache = fold(cache, w_last)
+        final_val = L0 - jax.lax.psum(jnp.sum(cache) / n_total, axes)
+        traj = jnp.concatenate([vals[1:], final_val[None]])
+        return sel.astype(jnp.int32), traj, n_scored
+
+    smapped = shard_map(
+        local_scan,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(None, None), P(axes), P(None, None),
+                  P(None)),
+        out_specs=(P(None), P(None), P(None)),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def run(V_sh, pool, d_e0_sh, cand_rounds, w0):
+        DEVICE_TRACE_COUNTS[counter_key] += 1
+        return smapped(V_sh, pool, d_e0_sh, cand_rounds, w0)
+
+    _SELECTION_SCAN_CACHE[key] = run
+    return run
+
+
+def run_sharded_selection(
+    f,                       # ExemplarClustering (untyped: avoids circularity)
+    cand_rounds: jax.Array,  # (k, m) int32 global candidate indices
+    w0: jax.Array,
+    *,
+    kind: str,
+    k: int,
+    top_b: int,
+    counter_key: str,
+    m_widest: int,
+    block_m: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+):
+    """Place operands on the mesh and run the sharded selection scan.
+
+    V's rows (padded to a shard multiple with zero rows — their cache
+    entries are 0, so they contribute nothing to gains or sums) and the
+    min-distance cache seed shard over ``data_axes``; the candidate pool
+    **replicates** — O(n·d) resident bytes per device for the dense
+    strategy (the distance/cache *work* is what shards; see the "sharded
+    candidate pool" ROADMAP item for the O(n/p) follow-up). The placement
+    is cached on ``f`` (most recent mesh only) so repeat runs pay no
+    transfer; delete ``f._sharded_placement_cache`` to release the device
+    memory. The per-shard gain tile is bounded by ``block_m`` (autotuned
+    from the *local* shard height and the widest candidate round
+    ``m_widest`` when not given). Returns ``(sel, traj, n_scored)`` device
+    arrays.
+    """
+    if mesh is None:
+        if len(data_axes) != 1:
+            raise ValueError(
+                "the default mesh is 1-D; pass an explicit mesh to shard "
+                f"over multiple axes {tuple(data_axes)}")
+        mesh = jax.make_mesh((jax.device_count(),), tuple(data_axes))
+    axes = tuple(data_axes)
+    ndev = 1
+    for a in axes:
+        ndev *= mesh.shape[a]
+    n = f.n
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    bm = block_m if block_m is not None \
+        else _device_block_m(n_pad // ndev, m_widest)
+    # pad + placement cached on the function instance (V is immutable): a
+    # repeat run reuses the resident shards, paying no per-call transfer.
+    # Only the MOST RECENT (mesh, axes) is kept — the replicated pool is
+    # O(n·d) per device (a documented ROADMAP tradeoff), so accumulating
+    # one resident copy per mesh ever used would pin unbounded memory.
+    placed = getattr(f, "_sharded_placement_cache", None)
+    if placed is None or placed[0] != (mesh, axes):
+        Vp = jnp.pad(f.V, ((0, n_pad - n), (0, 0)))
+        d_e0p = jnp.pad(f.d_e0.astype(jnp.float32), (0, n_pad - n))
+        placed = f._sharded_placement_cache = ((mesh, axes), (
+            jax.device_put(Vp, NamedSharding(mesh, P(axes, None))),
+            jax.device_put(d_e0p, NamedSharding(mesh, P(axes))),
+            jax.device_put(f.V, NamedSharding(mesh, P(None, None))),
+        ))
+    V_sh, d_e0_sh, pool = placed[1]
+    fn = make_selection_scan(
+        mesh, axes, kind=kind, k=k, top_b=top_b, n_total=n, block_m=bm,
+        distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
+        counter_key=counter_key)
+    return fn(V_sh, pool, d_e0_sh, cand_rounds, w0)
+
+
 def distributed_greedy(
     mesh: Mesh,
     V: jax.Array,
@@ -133,35 +335,28 @@ def distributed_greedy(
 ) -> tuple[list[int], float]:
     """Pod-scale greedy: V sharded over data axes, one psum per step.
 
-    Runs the optimizer-aware (min-cache) greedy. Returns (indices, f value).
+    A thin wrapper over the selection engine's ``device_sharded`` plan (all
+    k rounds in one dispatch). ``candidate_batch`` bounds the per-shard
+    candidate *compute tile* (default: autotuned from the probed gain-tile
+    cap) — candidates stream through (n_loc, batch) tiles, so no shard
+    materializes an (n_loc, n) distance block. Note the engine replicates
+    the candidate pool (all of V) per device, so resident memory is
+    O(n·d) + O(n/p·d) per chip — unlike the pre-engine host-streamed loop;
+    see the "sharded candidate pool" ROADMAP item. Returns
+    (indices, f value).
+
+    Like the original implementation, scoring always runs the jnp pairwise
+    path regardless of ``cfg.backend`` (kernel backends are normalized away
+    rather than rejected).
     """
-    import numpy as np
+    import dataclasses
 
-    V_sh = shard_ground_set(V, mesh, data_axes)
-    pair = dist_mod.resolve_pairwise(cfg.distance)
-    d_e0 = pair(V, jnp.zeros((V.shape[-1],), V.dtype)[None, :],
-                resolve_policy(cfg.policy))[:, 0]
-    cache = jax.device_put(
-        d_e0.astype(jnp.float32),
-        NamedSharding(mesh, P(tuple(data_axes))),
-    )
-    gains_fn = make_distributed_gains(mesh, cfg, data_axes)
-    update_fn = make_distributed_cache_update(mesh, cfg, data_axes)
-    L0 = float(jnp.mean(d_e0))
+    from repro.core.functions import ExemplarClustering
+    from repro.core.optimizers import greedy
 
-    selected: list[int] = []
-    n = V.shape[0]
-    for _ in range(k):
-        if candidate_batch is None:
-            gains = np.array(gains_fn(V_sh, V_sh, cache))
-        else:
-            parts = []
-            for s in range(0, n, candidate_batch):
-                parts.append(np.asarray(gains_fn(V_sh, V[s:s + candidate_batch], cache)))
-            gains = np.concatenate(parts)
-        gains[np.asarray(selected, dtype=np.int64)] = -np.inf
-        j = int(np.argmax(gains))
-        selected.append(j)
-        cache = update_fn(V_sh, V[j], cache)
-    value = L0 - float(jnp.mean(cache))
-    return selected, value
+    if cfg.backend in ("pallas", "pallas_interpret"):
+        cfg = dataclasses.replace(cfg, backend="jnp")
+    f = ExemplarClustering(jnp.asarray(V), cfg)
+    res = greedy(f, k, mode="device_sharded", mesh=mesh, data_axes=data_axes,
+                 block_m=candidate_batch)
+    return res.indices, res.value

@@ -1,0 +1,471 @@
+"""The unified selection-engine layer (tentpole, beyond paper).
+
+Every optimizer in the greedy family is the same machine viewed through two
+orthogonal choices:
+
+* a **round-candidate strategy** — which candidates get scored each round:
+
+  - ``dense``       every (validated) candidate, every round; one candidate
+                    row broadcast over all k rounds.
+  - ``stochastic``  k pre-sampled candidate rows (one per round), drawn up
+                    front so host and device paths consume identical
+                    randomness.
+  - ``lazy`` (CELF) stale upper bounds carried as an (n,) array; each round
+                    re-scores the top-B stale candidates (``jax.lax.top_k``
+                    inside the scan carry) and falls back to a full re-score
+                    when the fresh-top invariant fails.
+
+* an **execution plan** — where the rounds run:
+
+  - ``host``           reference Python loop (one dispatch per round).
+  - ``device``         all k rounds inside ONE jitted ``jax.lax.scan``
+                       dispatch; gains, argmax and cache update never leave
+                       the accelerator.
+  - ``device_sharded`` the same scan, row-sharding V *and* the min-distance
+                       cache over a device mesh via ``shard_map``. Per round,
+                       each shard computes its (m,) gain partials and one
+                       ``psum`` of O(m) bytes reduces them; the argmax (and
+                       the CELF bound state) stays replicated.
+
+The min-distance cache recurrence (see :mod:`repro.core.optimizers`) is the
+shared substrate: a round is one (n × m) distance evaluation plus an O(n)
+fold of the winner. On Pallas backends the fold rides inside the fused gain
+kernel (:func:`repro.kernels.ops.fused_gain_update`), so the winner's
+distance column never materializes in HBM.
+
+CELF on device: submodularity means gains only shrink, so last round's gains
+are upper bounds for this round. The scan carries those bounds as an (n,)
+array; each round an inner ``jax.lax.while_loop`` re-scores the top-B stale
+bounds and stops as soon as the fresh-top invariant certifies the winner —
+*best fresh gain ≥ every remaining stale bound* ⇒ the fresh best is the true
+argmax. When staleness defeats the shortcut the loop keeps taking the next
+top-B batch, degenerating to a full re-score after ⌈n/B⌉ iterations — the
+device mirror of the host CELF heap's pop-rescore-repeat, without the
+per-batch host↔device round-trips.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import distances as dist_mod
+from repro.core.evaluator import free_memory_bytes
+from repro.core.functions import ExemplarClustering, gains_formula
+from repro.core.precision import resolve as resolve_policy
+
+
+@dataclasses.dataclass
+class OptResult:
+    indices: list[int]
+    value: float
+    trajectory: list[float]
+    evaluations: int
+
+    def exemplars(self, V) -> np.ndarray:
+        return np.asarray(V)[self.indices]
+
+
+#: Number of times each device engine has been *traced* (not dispatched).
+#: A second run with identical shapes/statics must not increment these —
+#: that is the "exactly one jitted dispatch for all k rounds" property.
+DEVICE_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+#: Fraction of probed free device memory the gain tile may occupy.
+GAIN_TILE_MEMORY_FRACTION = 0.25
+
+
+def validate_candidates(candidates, n: int) -> np.ndarray:
+    """Validate a candidate-index subset at the engine boundary.
+
+    Out-of-range indices raise; duplicates are dropped keeping first
+    occurrence (a duplicated index would otherwise be scored twice and could
+    even be *selected* twice by the device argmax, which masks ``taken`` by
+    index, not by position).
+    """
+    cand = np.asarray(candidates).reshape(-1)
+    if not np.issubdtype(cand.dtype, np.integer):
+        raise ValueError(
+            f"candidate indices must be integers, got dtype {cand.dtype}")
+    cand = cand.astype(np.int64)
+    if cand.size == 0:
+        raise ValueError("candidates must be non-empty")
+    if cand.min() < 0 or cand.max() >= n:
+        raise ValueError(
+            f"candidate indices must lie in [0, {n}), got range "
+            f"[{cand.min()}, {cand.max()}]")
+    _, first = np.unique(cand, return_index=True)
+    return cand[np.sort(first)]
+
+
+_GAIN_TILE_CAP_ELEMS: Optional[int] = None
+
+
+def _gain_tile_cap_elems(itemsize: int = 4) -> int:
+    """Max gain-tile elements, probed ONCE per process and then frozen.
+
+    The result feeds jit *static* arguments (``block_m``), so it must not
+    float with live allocator state — a per-call probe would hand every
+    dispatch a slightly different block size and force a retrace each time.
+    One probe at first use captures the device's capacity class; backends
+    without memory stats (CPU) fall back to the 128 MiB heuristic (2^25
+    float32 elements).
+    """
+    global _GAIN_TILE_CAP_ELEMS
+    if _GAIN_TILE_CAP_ELEMS is None:
+        free = free_memory_bytes()
+        if free is not None:
+            _GAIN_TILE_CAP_ELEMS = max(
+                int(free * GAIN_TILE_MEMORY_FRACTION) // itemsize, 1)
+        else:
+            _GAIN_TILE_CAP_ELEMS = 1 << 25
+    return _GAIN_TILE_CAP_ELEMS
+
+
+def _device_block_m(n: int, m: int) -> int:
+    """Candidate block size bounding the (n, Bm) gain tile.
+
+    Autotuned from the same free-memory probe ``plan_chunks`` uses
+    (:func:`repro.core.evaluator.free_memory_bytes`), frozen at first use
+    (see :func:`_gain_tile_cap_elems`). The floor of 8 (one TPU sublane)
+    lets the cap be exceeded only at ground-set sizes where chunking V
+    itself is the right tool.
+    """
+    cap_elems = _gain_tile_cap_elems()
+    if n * m <= cap_elems:
+        return m
+    return max(8, min(m, cap_elems // max(n, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Scoring core shared by the device and device_sharded plans
+# ---------------------------------------------------------------------------
+
+
+def _score_blocked(V, C, cache, pair, policy, block_m: int,
+                   n_total: Optional[int] = None) -> jax.Array:
+    """Gains of candidates C against ``cache`` in (n, block_m) tiles.
+
+    Streams candidates in blocks so the distance tile stays memory-bounded;
+    ``gains_formula`` is shared with the host path, which keeps the
+    per-column reduction (and hence the argmax) identical.
+    """
+    mc, d = C.shape
+    bm = min(block_m, mc)
+    m_pad = ((mc + bm - 1) // bm) * bm
+    Cp = jnp.pad(C, ((0, m_pad - mc), (0, 0)))
+    blocks = Cp.reshape(-1, bm, d)
+    gains = jax.lax.map(
+        lambda Cb: gains_formula(V, Cb, cache, pair, policy, n_total=n_total),
+        blocks,
+    ).reshape(-1)
+    return gains[:mc]
+
+
+def _make_fold_and_score(V, pair, policy, backend, rbf_gamma, block_m):
+    """Build fold-winner-then-score for the single-device scan step.
+
+    Returns ``fn(cache, w_prev, C) -> (gains, new_cache)``. On Pallas
+    backends the fold rides inside the fused gain kernel; on jnp the fold is
+    an explicit O(n) minimum followed by blocked scoring.
+    """
+    use_kernel = backend in ("pallas", "pallas_interpret")
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def fold_and_score(cache, w_prev, C):
+            # block_m only sizes the jnp streaming block (HBM working set);
+            # the kernel tiles its own VMEM blocks and never materializes
+            # the (n, m) matrix, so it keeps its default tile size
+            return kops.fused_gain_update(
+                V, C, cache, w_prev, policy=policy, rbf_gamma=rbf_gamma,
+                interpret=(backend != "pallas"))
+    else:
+
+        def fold_and_score(cache, w_prev, C):
+            dw = pair(V, w_prev[None, :], policy)[:, 0]
+            cache = jnp.minimum(cache, dw.astype(jnp.float32))
+            gains = _score_blocked(V, C, cache, pair, policy, block_m)
+            return gains, cache
+
+    return fold_and_score
+
+
+# ---------------------------------------------------------------------------
+# Shared round-step builders — the ONE definition of a selection round,
+# consumed by both the single-device scan below and the mesh-sharded scan in
+# repro.core.distributed (which differs only in its score/fold callbacks).
+# ---------------------------------------------------------------------------
+
+
+def make_rounds_step(pool, fold_score_mean, L0):
+    """Dense/stochastic scan step over per-round candidate index rows.
+
+    ``fold_score_mean(cache, w_prev, C) -> (gains, new_cache, mean_cache)``
+    folds the previous winner and scores candidates C (single-device: fused
+    kernel or jnp; sharded: fold + one psum). The winner's vector is taken
+    from the candidate payload, never gathered from (possibly sharded) V.
+    """
+
+    def step(carry, cand_t):
+        cache, taken, w_prev = carry
+        C = pool[cand_t]
+        gains, cache, mean_c = fold_score_mean(cache, w_prev, C)
+        live = ~taken[cand_t]
+        gains = jnp.where(live, gains, -jnp.inf)
+        p = jnp.argmax(gains)
+        j = cand_t[p]
+        # a round whose candidates are all taken has no legitimate argmax:
+        # emit the -1 sentinel (the engine boundary raises on it) instead of
+        # silently re-selecting whatever index argmax fell through to
+        j_out = jnp.where(gains[p] > -jnp.inf, j, -1)
+        # cache includes winners 0..t-1 here → this is trajectory[t-1]
+        val = L0 - mean_c
+        return ((cache, taken.at[j].set(True), C[p]),
+                (j_out, val, jnp.sum(live).astype(jnp.int32)))
+
+    return step
+
+
+def celf_max_iters(n: int, top_b: int) -> int:
+    """CELF while-loop backstop shared by both execution plans: ⌈n/B⌉
+    iterations re-score every candidate (the loop has then degenerated to a
+    full re-score), +1 slack. The sharded plan's per-iteration psums only
+    line up across shards because every plan agrees on this bound."""
+    return -(-n // top_b) + 1
+
+
+def make_lazy_step(pool, fold, score_mean, L0, top_b: int, max_iters: int):
+    """CELF scan step: while-loop of top-B re-scoring over stale bounds.
+
+    ``fold(cache, w) -> cache`` folds the previous winner once per round;
+    ``score_mean(cache, C) -> (gains, mean_cache)`` scores a candidate batch
+    (sharded: one psum carrying both). The loop body always runs ≥ once per
+    round (nothing starts fresh), so ``mean_c`` is always the round's true
+    mean cache; it stops when the fresh-top invariant — best re-scored gain
+    ≥ every remaining stale bound — certifies the winner, degenerating to a
+    full re-score after ⌈n/B⌉ iterations.
+    """
+
+    def step(carry, _):
+        cache, taken, w_prev, ub = carry
+        cache = fold(cache, w_prev)
+
+        def invariant_fails(st):
+            ub_c, fresh, _, _, it = st
+            stale_max = jnp.max(jnp.where(fresh | taken, -jnp.inf, ub_c))
+            fresh_best = jnp.max(jnp.where(fresh & ~taken, ub_c, -jnp.inf))
+            return (fresh_best < stale_max) & (it < max_iters)
+
+        def rescore_top_b(st):
+            ub_c, fresh, scored, _, it = st
+            stale = jnp.where(fresh | taken, -jnp.inf, ub_c)
+            top_ub, top_idx = jax.lax.top_k(stale, top_b)
+            live = top_ub > -jnp.inf
+            gains_b, mean_c = score_mean(cache, pool[top_idx])
+            gains_b = jnp.where(live, gains_b, -jnp.inf)
+            ub_c = ub_c.at[top_idx].set(
+                jnp.where(live, gains_b, ub_c[top_idx]))
+            fresh = fresh.at[top_idx].set(fresh[top_idx] | live)
+            return ub_c, fresh, scored + jnp.sum(live), mean_c, it + 1
+
+        ub, fresh, scored, mean_c, _ = jax.lax.while_loop(
+            invariant_fails, rescore_top_b,
+            (ub, jnp.zeros(pool.shape[:1], bool), jnp.asarray(0, jnp.int32),
+             jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32)))
+        j = jnp.argmax(jnp.where(fresh & ~taken, ub, -jnp.inf))
+        # cache includes winners 0..t-1 here → this is trajectory[t-1]
+        val = L0 - mean_c
+        return ((cache, taken.at[j].set(True), pool[j], ub),
+                (j, val, scored))
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Single-device one-dispatch scan (plans: device)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("kind", "k", "top_b", "distance",
+                                   "policy_name", "block_m", "backend",
+                                   "rbf_gamma", "counter_key"))
+def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
+                 policy_name, block_m, backend, rbf_gamma, counter_key):
+    """All k selection rounds in one dispatch.
+
+    ``cand_rounds`` holds the candidate indices: (1, m) for dense (ONE row,
+    closed over by every round — never materialized k times), (k, m) for
+    stochastic (pre-sampled per round), (1, 0) for lazy, which derives its
+    candidates from the carried stale bounds. The carry
+    is ``(mincache, taken-mask, previous winner[, stale bounds])``; the
+    winner is folded into the cache at the *start* of the next round — for
+    dense/stochastic on the Pallas backend the fold rides inside the fused
+    gain kernel so the winner's distance column never re-materializes in
+    HBM; lazy folds once explicitly because its while-loop re-scores
+    variable candidate batches against the already-folded cache.
+
+    Per-round ys are ``(selected index, trajectory value, #actually-scored
+    candidates)`` — the last is the engine's honest ``evaluations`` unit.
+    """
+    DEVICE_TRACE_COUNTS[counter_key] += 1
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+    n = V.shape[0]
+    d_e0f = d_e0.astype(jnp.float32)
+    L0 = jnp.mean(d_e0f)
+
+    if kind == "lazy":
+        use_kernel = backend in ("pallas", "pallas_interpret")
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            def score(cache, C):
+                return kops.marginal_gain(
+                    V, C, cache, policy=policy, rbf_gamma=rbf_gamma,
+                    interpret=(backend != "pallas"))
+        else:
+
+            def score(cache, C):
+                return _score_blocked(V, C, cache, pair, policy, block_m)
+
+        def fold(cache, w):
+            dw = pair(V, w[None, :], policy)[:, 0]
+            return jnp.minimum(cache, dw.astype(jnp.float32))
+
+        def score_mean(cache, C):
+            return score(cache, C), jnp.mean(cache)
+
+        step = make_lazy_step(V, fold, score_mean, L0, top_b,
+                              celf_max_iters(n, top_b))
+        # round -1: fresh singleton gains seed the bounds (counts n evals,
+        # exactly like the host CELF's initial full scoring)
+        ub0 = score(d_e0f, V)
+        init = (d_e0f, jnp.zeros((n,), bool), w0.astype(V.dtype), ub0)
+        (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
+            step, init, None, length=k)
+        n_scored = jnp.asarray(n, jnp.int32) + jnp.sum(scored)
+    else:
+        # no outer candidate padding: _score_blocked (jnp) and the fused
+        # kernel (pallas) both pad internally, so the step construction is
+        # identical to the device_sharded plan's
+        fold_and_score = _make_fold_and_score(
+            V, pair, policy, backend, rbf_gamma, block_m)
+
+        def fold_score_mean(cache, w_prev, C):
+            gains, cache = fold_and_score(cache, w_prev, C)
+            return gains, cache, jnp.mean(cache)
+
+        step = make_rounds_step(V, fold_score_mean, L0)
+        init = (d_e0f, jnp.zeros((n,), bool), w0.astype(V.dtype))
+        if kind == "dense":
+            # one candidate row closed over by all k rounds
+            cand_row = cand_rounds[0]
+            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                lambda carry, _: step(carry, cand_row), init, None, length=k)
+        else:
+            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                step, init, cand_rounds)
+        n_scored = jnp.sum(scored)
+
+    # one final fold for the last trajectory point
+    dw = pair(V, w_last[None, :], policy)[:, 0]
+    final_val = L0 - jnp.mean(jnp.minimum(cache, dw.astype(jnp.float32)))
+    traj = jnp.concatenate([vals[1:], final_val[None]])
+    return sel.astype(jnp.int32), traj, n_scored
+
+
+# ---------------------------------------------------------------------------
+# Engine entry point
+# ---------------------------------------------------------------------------
+
+
+def run_selection(
+    f: ExemplarClustering,
+    *,
+    kind: str,                        # "dense" | "stochastic" | "lazy"
+    k: int,
+    cand_rounds: Optional[np.ndarray] = None,
+    top_b: int = 0,
+    plan: str = "device",             # "device" | "device_sharded"
+    counter_key: str,
+    block_m: Optional[int] = None,
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+) -> OptResult:
+    """Run a round-candidate strategy under a device execution plan.
+
+    ``cand_rounds`` carries the per-round candidate indices for the dense
+    and stochastic strategies ((k, m), global indices); the lazy strategy
+    derives its candidates on device and takes ``top_b`` instead (0 → the
+    default re-score width of 256). A stochastic round whose sample row is
+    entirely exhausted by earlier selections raises rather than silently
+    re-selecting a taken index.
+    """
+    if k == 0:
+        return OptResult([], 0.0, [], 0)
+    n_cand = f.n if kind == "lazy" or cand_rounds is None \
+        else len(np.unique(cand_rounds[0] if kind == "dense" else cand_rounds))
+    if k > n_cand:
+        raise ValueError(
+            f"cannot select k={k} exemplars from {n_cand} distinct "
+            f"candidates — once every candidate is taken the argmax would "
+            f"silently re-select one")
+    policy = f.cfg.resolved_policy()
+    backend = f.cfg.backend if f.cfg.backend in ("pallas", "pallas_interpret") \
+        else "jnp"
+    if backend != "jnp" and f.cfg.distance not in dist_mod.MXU_ELIGIBLE:
+        raise ValueError(
+            f"device plans with a pallas backend support "
+            f"{sorted(dist_mod.MXU_ELIGIBLE)}, got {f.cfg.distance!r}")
+    rbf_gamma = dist_mod.RBF_GAMMA \
+        if (backend != "jnp" and f.cfg.distance == "rbf") else None
+    w0 = f.e0 if f.e0 is not None else jnp.zeros((f.dim,), f.V.dtype)
+
+    if kind == "lazy":
+        top_b = max(1, min(top_b or 256, f.n))
+        cand_rounds = np.zeros((1, 0), np.int32)
+        # lazy's widest scoring tile is the bound-seeding pass over all n
+        # candidates (per-round tiles are top_b ≤ n)
+        m_widest = f.n
+    elif cand_rounds is None:
+        raise ValueError(f"strategy {kind!r} needs cand_rounds")
+    else:
+        m_widest = cand_rounds.shape[1]
+
+    if plan == "device":
+        bm = block_m if block_m is not None \
+            else _device_block_m(f.n, m_widest)
+        sel, traj, n_scored = _select_scan(
+            f.V, f.d_e0, jnp.asarray(cand_rounds, jnp.int32), w0,
+            kind=kind, k=k, top_b=top_b, distance=f.cfg.distance,
+            policy_name=policy.name, block_m=bm, backend=backend,
+            rbf_gamma=rbf_gamma, counter_key=counter_key)
+    elif plan == "device_sharded":
+        from repro.core import distributed as dist_engine
+
+        if backend != "jnp":
+            raise ValueError(
+                "plan='device_sharded' runs the jnp scoring path; pallas "
+                "kernels are per-device and compose with mode='device'")
+        sel, traj, n_scored = dist_engine.run_sharded_selection(
+            f, jnp.asarray(cand_rounds, jnp.int32), w0, kind=kind, k=k,
+            top_b=top_b, counter_key=counter_key, m_widest=m_widest,
+            block_m=block_m, mesh=mesh, data_axes=data_axes)
+    else:
+        raise ValueError(f"unknown execution plan {plan!r}")
+
+    sel = [int(x) for x in np.asarray(sel)]
+    if any(s < 0 for s in sel):
+        bad = sel.index(-1)
+        raise ValueError(
+            f"round {bad} had no untaken candidate (its sample row is "
+            f"exhausted by earlier selections) — the argmax would silently "
+            f"re-select a taken index")
+    traj = [float(x) for x in np.asarray(traj)]
+    return OptResult(sel, traj[-1] if traj else 0.0, traj, int(n_scored))

@@ -51,11 +51,64 @@ class EvalConfig:
     mode: str = "fused"  # "fused" | "two_pass"
     backend: str = "jnp"  # "jnp" | "naive" | "pallas" | "pallas_interpret"
     kernel_variant: str = "flat"  # pallas layout: "flat" (k-major) | "loop"
-    memory_budget_bytes: Optional[int] = None
+    #: None → no chunking; an int → hard byte budget; "auto" → derive from
+    #: the free-memory probe φ (:func:`free_memory_bytes`).
+    memory_budget_bytes: Optional[int | str] = None
     n_block: Optional[int] = None  # stream over V in blocks of this many rows
 
     def resolved_policy(self) -> PrecisionPolicy:
         return resolve_policy(self.policy)
+
+
+#: Fraction of probed free memory an "auto" budget hands to the chunk planner
+#: (headroom for XLA temporaries and the output buffers).
+AUTO_BUDGET_FRACTION = 0.8
+
+#: Resolved "auto" budget, probed ONCE per process and then frozen: chunk
+#: boundaries feed traced shapes, so a budget floating with live allocator
+#: state would change chunk lengths call-to-call and retrace every call.
+_AUTO_BUDGET_BYTES: "Optional[int] | bool" = False  # False = not yet probed
+
+
+def free_memory_bytes(device=None) -> Optional[int]:
+    """The paper's free-memory probe φ (§IV-B-3): free bytes on ``device``.
+
+    Uses the runtime's allocator statistics (``Device.memory_stats``), which
+    accelerator backends expose and CPU does not. Returns None when the
+    backend has no stats — callers fall back to their static heuristics.
+    """
+    try:
+        dev = device if device is not None else jax.local_devices()[0]
+        stats = dev.memory_stats()
+    except Exception:  # backend without stats support
+        return None
+    if not stats or "bytes_limit" not in stats:
+        return None
+    return max(int(stats["bytes_limit"]) - int(stats.get("bytes_in_use", 0)), 0)
+
+
+def resolve_memory_budget(budget: Optional[int | str]) -> Optional[int]:
+    """Resolve ``memory_budget_bytes``: pass ints/None through, probe "auto".
+
+    The "auto" probe runs once per process and is then frozen (chunk counts
+    feed traced shapes — a drifting budget would retrace every call). A
+    probe that reports 0 free bytes resolves to a 0 budget (so the chunk
+    planner raises :class:`ChunkingError` with the paper's remediation
+    advice) rather than silently disabling chunking — only a *probeless*
+    backend degrades to unchunked.
+    """
+    global _AUTO_BUDGET_BYTES
+    if budget == "auto":
+        if _AUTO_BUDGET_BYTES is False:
+            free = free_memory_bytes()
+            _AUTO_BUDGET_BYTES = (
+                int(free * AUTO_BUDGET_FRACTION) if free is not None else None)
+        return _AUTO_BUDGET_BYTES
+    if isinstance(budget, str):
+        raise ValueError(
+            f"memory_budget_bytes must be an int, None, or 'auto'; "
+            f"got {budget!r}")
+    return budget
 
 
 class ChunkingError(MemoryError):
@@ -83,9 +136,13 @@ def bytes_per_set(n: int, k_max: int, d: int, policy: PrecisionPolicy, mode: str
 
 def plan_chunks(
     l: int, n: int, k_max: int, d: int, policy: PrecisionPolicy, mode: str,
-    budget_bytes: Optional[int],
+    budget_bytes: Optional[int | str],
 ) -> list[tuple[int, int]]:
-    """Split l sets into chunks fitting the budget. Returns [start, stop) pairs."""
+    """Split l sets into chunks fitting the budget. Returns [start, stop) pairs.
+
+    ``budget_bytes`` may be "auto", resolved via the free-memory probe φ.
+    """
+    budget_bytes = resolve_memory_budget(budget_bytes)
     if budget_bytes is None:
         return [(0, l)]
     mu = bytes_per_set(n, k_max, d, policy, mode)

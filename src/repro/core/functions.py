@@ -24,22 +24,27 @@ from repro.core.multiset import PackedMultiset, pack_base_plus_candidates, pack_
 from repro.core.precision import resolve as resolve_policy
 
 
-def gains_formula(V, cands, mincache, pair, policy):
+def gains_formula(V, cands, mincache, pair, policy, n_total=None):
     """Δ(c_j | S) = |V|⁻¹ Σ_i relu(m_i − d(v_i, c_j)) for all candidates.
 
     The single source of the gain reduction: the host path (via
     ``_gains_vs_cache``) and the device scan engine both call this, which is
     what makes their argmax selections bit-compatible.
+
+    ``n_total`` overrides the |V| normalizer — pass the *global* ground-set
+    size when V is one row-shard of a mesh-sharded ground set, so that the
+    per-shard partials ``psum`` to the exact global gains.
     """
     D = pair(V, cands, policy)  # (n, m)
     gains = jnp.sum(jnp.maximum(mincache[:, None] - D, 0.0), axis=0)
-    return gains / V.shape[0]
+    return gains / (V.shape[0] if n_total is None else n_total)
 
 
-@partial(jax.jit, static_argnames=("distance", "policy_name"))
-def _gains_vs_cache(V, cands, mincache, distance, policy_name):
+@partial(jax.jit, static_argnames=("distance", "policy_name", "n_total"))
+def _gains_vs_cache(V, cands, mincache, distance, policy_name, n_total=None):
     pair = dist_mod.resolve_pairwise(distance)
-    return gains_formula(V, cands, mincache, pair, resolve_policy(policy_name))
+    return gains_formula(V, cands, mincache, pair, resolve_policy(policy_name),
+                         n_total=n_total)
 
 
 @partial(jax.jit, static_argnames=("distance", "policy_name"))
@@ -97,18 +102,31 @@ class ExemplarClustering:
 
     # -- optimizer-aware incremental interface (beyond paper) ---------------
 
-    def init_mincache(self) -> jax.Array:
+    def init_mincache(self, sharding=None) -> jax.Array:
         """m_i = d(v_i, e0): the min-dist cache of S = ∅ (e0 always included).
 
         Stored float32 regardless of policy: the cache seeds n-sized
         reductions, which overflow in f16 for large n even though the
         distances themselves were computed at policy precision.
+
+        ``sharding`` optionally places the cache (a ``jax.sharding.Sharding``,
+        typically the same row-sharding as a mesh-sharded V — the cache is
+        V-aligned state and must live wherever V's rows live).
         """
-        return self.d_e0.astype(jnp.float32)
+        cache = self.d_e0.astype(jnp.float32)
+        if sharding is not None:
+            cache = jax.device_put(cache, sharding)
+        return cache
 
     def marginal_gains(self, candidates: jax.Array, mincache: jax.Array,
-                       use_kernel: bool = False) -> jax.Array:
-        """Δ(c_j | S) for all candidates given S's min-dist cache. O(n·m·d)."""
+                       use_kernel: bool = False,
+                       n_total: Optional[int] = None) -> jax.Array:
+        """Δ(c_j | S) for all candidates given S's min-dist cache. O(n·m·d).
+
+        ``n_total`` is the sharding-aware normalizer: when this function
+        instance wraps one row-shard of a global ground set, pass the global
+        n so the returned per-shard partials ``psum`` to the global gains.
+        """
         policy = self.cfg.resolved_policy()
         if use_kernel or self.cfg.backend in ("pallas", "pallas_interpret"):
             if self.cfg.distance not in dist_mod.MXU_ELIGIBLE:
@@ -123,9 +141,11 @@ class ExemplarClustering:
                 rbf_gamma=dist_mod.RBF_GAMMA
                 if self.cfg.distance == "rbf" else None,
                 interpret=(self.cfg.backend != "pallas"),
+                n_total=n_total,
             )
         return _gains_vs_cache(self.V, candidates, mincache,
-                               self.cfg.distance, policy.name)
+                               self.cfg.distance, policy.name,
+                               n_total=n_total)
 
     def update_mincache(self, mincache: jax.Array, new_point: jax.Array) -> jax.Array:
         return _update_cache(self.V, new_point, mincache,

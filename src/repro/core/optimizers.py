@@ -12,6 +12,12 @@ observation ("optimizer-aware", §IV-A). Three evaluation styles are used:
   candidate gains, argmax selection, and the cache update never leaving the
   accelerator (no per-round host↔device copies, no per-round dispatch).
 
+The greedy family (greedy / stochastic_greedy / lazy_greedy) is built on the
+**selection engine** (:mod:`repro.core.engine`): a round-candidate strategy
+(dense / stochastic / lazy-CELF) composed with an execution plan (``host``
+reference loop, ``device`` one-dispatch scan, ``device_sharded`` mesh-sharded
+scan with one O(m) psum per round — see :mod:`repro.core.distributed`).
+
 The min-distance cache obeys the recurrence
 
     m_i^(0)   = d(v_i, e0)
@@ -26,14 +32,21 @@ winner's distance column never materializes in HBM.
 
 Optimizer modes:
   greedy               ``mode="mincache"`` (host reference, alias ``"host"``),
-                       ``mode="multiset"`` (paper-faithful), ``mode="device"``.
-  stochastic_greedy    ``mode="host"`` reference loop or ``mode="device"``;
-                       both consume the same precomputed per-round candidate
-                       sample matrix, so selections agree (exactly on the jnp
-                       backend; on pallas backends the in-kernel winner fold
-                       can differ in the last ulp from the host's jnp update,
-                       which may flip a near-tie argmax at reduced precision).
-  lazy_greedy          CELF lazy evaluation with stale upper bounds (host).
+                       ``mode="multiset"`` (paper-faithful), ``mode="device"``,
+                       ``mode="device_sharded"`` (mesh-sharded V + cache).
+  stochastic_greedy    ``mode="host"`` reference loop, ``mode="device"`` or
+                       ``mode="device_sharded"``; all consume the same
+                       precomputed per-round candidate sample matrix, so
+                       selections agree (exactly on the jnp backend; on
+                       pallas backends the in-kernel winner fold can differ
+                       in the last ulp from the host's jnp update, which may
+                       flip a near-tie argmax at reduced precision).
+  lazy_greedy          CELF lazy evaluation with stale upper bounds:
+                       ``mode="host"`` reference loop (the exact host-side
+                       mirror of the engine's top-B rescore policy),
+                       ``mode="device"`` (re-scoring against carried stale
+                       bounds inside the one-dispatch scan) or
+                       ``mode="device_sharded"``.
   sieve_streaming      Badanidiyuru et al. (1/2 − ε), streaming.
   sieve_streaming_pp   Kazemi et al., LB-pruned sieves (1/2 − ε), less memory.
   three_sieves         Buschjäger et al., single adaptive sieve ((1−ε)(1−1/e)
@@ -49,151 +62,28 @@ block (decisions stay sequential — an accept updates the sieve caches seen by
 the next element in the block).
 
 All return an :class:`OptResult` (indices into V, value, trajectory, and the
-number of *set-function evaluations* — the paper's cost unit l).
+number of *evaluations*). For the greedy family ``evaluations`` counts
+**actually-scored candidates**: candidates whose gain entered a round's
+argmax (already-selected candidates are masked out before the argmax and do
+not count). Host and device plans count identically, so the numbers are
+directly comparable across modes — and, for stochastic greedy, comparable
+with the pool-sampling formulation despite the +k per-round overdraw.
 """
 from __future__ import annotations
 
-import collections
-import dataclasses
-import heapq
 import math
-from functools import partial
 from typing import Iterable, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import distances as dist_mod
-from repro.core.functions import ExemplarClustering, gains_formula
-from repro.core.precision import resolve as resolve_policy
-
-
-@dataclasses.dataclass
-class OptResult:
-    indices: list[int]
-    value: float
-    trajectory: list[float]
-    evaluations: int
-
-    def exemplars(self, V) -> np.ndarray:
-        return np.asarray(V)[self.indices]
+from repro.core.engine import (DEVICE_TRACE_COUNTS, OptResult,
+                               run_selection, validate_candidates)
+from repro.core.functions import ExemplarClustering
 
 
 # ---------------------------------------------------------------------------
-# Device-resident stepping engine (tentpole, beyond paper)
-# ---------------------------------------------------------------------------
-
-#: Number of times each device engine has been *traced* (not dispatched).
-#: A second run with identical shapes/statics must not increment these —
-#: that is the "exactly one jitted dispatch for all k rounds" property.
-DEVICE_TRACE_COUNTS: collections.Counter = collections.Counter()
-
-
-@partial(jax.jit, static_argnames=("distance", "policy_name", "block_m",
-                                   "backend", "rbf_gamma", "counter_key"))
-def _device_select_scan(V, d_e0, cand_rounds, w0, *, distance, policy_name,
-                        block_m, backend, rbf_gamma, counter_key):
-    """All k greedy rounds in one dispatch: scan over per-round candidates.
-
-    ``cand_rounds`` is (k, m) int32 — row t holds round t's candidate indices
-    (greedy broadcasts one row; stochastic greedy pre-samples k rows). The
-    carry is ``(mincache, taken-mask, previous winner)``; the winner is folded
-    into the cache at the *start* of the next round, so on the Pallas backend
-    the fold rides inside the fused gain kernel and the winner's distance
-    column never re-materializes in HBM.
-    """
-    DEVICE_TRACE_COUNTS[counter_key] += 1
-    policy = resolve_policy(policy_name)
-    pair = dist_mod.resolve_pairwise(distance)
-    n = V.shape[0]
-    k, m = cand_rounds.shape
-    m_pad = ((m + block_m - 1) // block_m) * block_m
-    cand_p = jnp.pad(cand_rounds, ((0, 0), (0, m_pad - m)))
-    valid = jnp.arange(m_pad) < m
-    d_e0f = d_e0.astype(jnp.float32)
-    L0 = jnp.mean(d_e0f)
-    use_kernel = backend in ("pallas", "pallas_interpret")
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-    def gains_jnp(cache, C):
-        # stream candidates in blocks so the (n, Bm) distance tile stays
-        # memory-bounded; gains_formula is shared with the host path, which
-        # keeps the per-column reduction (and hence the argmax) identical.
-        blocks = C.reshape(-1, block_m, C.shape[-1])
-        return jax.lax.map(
-            lambda Cb: gains_formula(V, Cb, cache, pair, policy), blocks
-        ).reshape(-1)
-
-    def step(carry, cand_t):
-        cache, taken, w_prev = carry
-        C = V[cand_t]
-        if use_kernel:
-            # block_m only sizes the jnp streaming block (HBM working set);
-            # the kernel tiles its own VMEM blocks and never materializes
-            # the (n, m) matrix, so it keeps its default tile size
-            gains, cache = kops.fused_gain_update(
-                V, C, cache, w_prev, policy=policy, rbf_gamma=rbf_gamma,
-                interpret=(backend != "pallas"))
-        else:
-            dw = pair(V, w_prev[None, :], policy)[:, 0]
-            cache = jnp.minimum(cache, dw.astype(jnp.float32))
-            gains = gains_jnp(cache, C)
-        gains = jnp.where(valid & ~taken[cand_t], gains, -jnp.inf)
-        p = jnp.argmax(gains)
-        j = cand_t[p]
-        # cache currently includes winners 0..t-1 → this is trajectory[t-1]
-        val = L0 - jnp.mean(cache)
-        return (cache, taken.at[j].set(True), V[j]), (j, val)
-
-    init = (d_e0f, jnp.zeros((n,), bool), w0.astype(V.dtype))
-    (cache, _, w_last), (sel, vals) = jax.lax.scan(step, init, cand_p)
-    # one final fold for the last trajectory point
-    dw = pair(V, w_last[None, :], policy)[:, 0]
-    final_val = L0 - jnp.mean(jnp.minimum(cache, dw.astype(jnp.float32)))
-    traj = jnp.concatenate([vals[1:], final_val[None]])
-    return sel.astype(jnp.int32), traj
-
-
-def _device_block_m(n: int, m: int) -> int:
-    """Candidate block size bounding the (n, Bm) gain tile to ~128 MiB.
-
-    The floor of 8 (one TPU sublane) lets the cap be exceeded only past
-    n = 2^22 ground vectors, where chunking V itself is the right tool.
-    """
-    if n * m <= (1 << 25):
-        return m
-    return max(8, min(m, (1 << 25) // max(n, 1)))
-
-
-def _run_device_scan(f: ExemplarClustering, cand_rounds: np.ndarray,
-                     counter_key: str, block_m: Optional[int] = None) -> OptResult:
-    policy = f.cfg.resolved_policy()
-    backend = f.cfg.backend if f.cfg.backend in ("pallas", "pallas_interpret") \
-        else "jnp"
-    if backend != "jnp" and f.cfg.distance not in dist_mod.MXU_ELIGIBLE:
-        raise ValueError(
-            f"device mode with a pallas backend supports "
-            f"{sorted(dist_mod.MXU_ELIGIBLE)}, got {f.cfg.distance!r}")
-    rbf_gamma = dist_mod.RBF_GAMMA \
-        if (backend != "jnp" and f.cfg.distance == "rbf") else None
-    w0 = f.e0 if f.e0 is not None else jnp.zeros((f.dim,), f.V.dtype)
-    k, m = cand_rounds.shape
-    if k == 0:
-        return OptResult([], 0.0, [], 0)
-    bm = block_m if block_m is not None else _device_block_m(f.n, m)
-    sel, traj = _device_select_scan(
-        f.V, f.d_e0, jnp.asarray(cand_rounds, jnp.int32), w0,
-        distance=f.cfg.distance, policy_name=policy.name, block_m=bm,
-        backend=backend, rbf_gamma=rbf_gamma, counter_key=counter_key)
-    sel = [int(x) for x in np.asarray(sel)]
-    traj = [float(x) for x in np.asarray(traj)]
-    return OptResult(sel, traj[-1] if traj else 0.0, traj, k * m)
-
-
-# ---------------------------------------------------------------------------
-# Greedy family
+# Greedy family — strategies over the selection engine
 # ---------------------------------------------------------------------------
 
 
@@ -203,20 +93,35 @@ def greedy(
     mode: str = "mincache",
     candidates: Optional[np.ndarray] = None,
     block_m: Optional[int] = None,
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
 ) -> OptResult:
     """Algorithm 1 of the paper. ``mode`` picks the evaluation style:
 
     ``"mincache"`` (alias ``"host"``) — host loop over rounds, device gains.
     ``"multiset"`` — paper-faithful: pack {S ∪ {c}} ∀c and call the engine.
     ``"device"``  — all k rounds in one jitted ``lax.scan`` dispatch.
+    ``"device_sharded"`` — the same scan with V and the min-distance cache
+    row-sharded over a device ``mesh`` (defaults to all local devices on a
+    1-D "data" mesh); one O(m) psum per round.
     """
     n = f.n
-    cand_idx = np.arange(n) if candidates is None else np.asarray(candidates)
+    cand_idx = np.arange(n) if candidates is None \
+        else validate_candidates(candidates, n)
+    if k > len(cand_idx):
+        raise ValueError(
+            f"cannot select k={k} exemplars from {len(cand_idx)} distinct "
+            f"candidates")
     if mode == "host":
         mode = "mincache"
-    if mode == "device":
-        cand_rounds = np.broadcast_to(cand_idx, (k, len(cand_idx)))
-        return _run_device_scan(f, cand_rounds, "greedy", block_m)
+    if mode in ("device", "device_sharded"):
+        # ONE candidate row: the engine closes over it for all k rounds
+        cand_rounds = cand_idx[None, :]
+        return run_selection(
+            f, kind="dense", k=k, cand_rounds=cand_rounds,
+            plan=mode, counter_key="greedy" if mode == "device"
+            else "greedy_sharded", block_m=block_m, mesh=mesh,
+            data_axes=data_axes)
     selected: list[int] = []
     traj: list[float] = []
     evals = 0
@@ -224,8 +129,9 @@ def greedy(
         cache = f.init_mincache()
         for _ in range(k):
             gains = np.array(f.marginal_gains(f.V[cand_idx], cache))
-            evals += len(cand_idx)
-            gains[np.isin(cand_idx, selected)] = -np.inf
+            masked = np.isin(cand_idx, selected)
+            evals += len(cand_idx) - int(masked.sum())
+            gains[masked] = -np.inf
             j = int(cand_idx[int(np.argmax(gains))])
             selected.append(j)
             cache = f.update_mincache(cache, f.V[j])
@@ -235,8 +141,9 @@ def greedy(
             base = f.V[np.asarray(selected, dtype=np.int64)] if selected else \
                 jnp.zeros((0, f.dim), f.V.dtype)
             vals = np.array(f.greedy_step_values(base, f.V[cand_idx]))
-            evals += len(cand_idx)
-            vals[np.isin(cand_idx, selected)] = -np.inf
+            masked = np.isin(cand_idx, selected)
+            evals += len(cand_idx) - int(masked.sum())
+            vals[masked] = -np.inf
             j = int(cand_idx[int(np.argmax(vals))])
             selected.append(j)
             traj.append(float(vals.max()))
@@ -245,45 +152,76 @@ def greedy(
     return OptResult(selected, traj[-1] if traj else 0.0, traj, evals)
 
 
-def lazy_greedy(f: ExemplarClustering, k: int, batch: int = 256) -> OptResult:
+def lazy_greedy(
+    f: ExemplarClustering,
+    k: int,
+    batch: int = 256,
+    mode: str = "host",
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+) -> OptResult:
     """CELF: maintain stale upper bounds (submodularity ⇒ gains only shrink).
 
-    Re-evaluates the top-``batch`` stale candidates at once so the evaluation
-    engine still sees multiset-sized problems (optimizer-awareness preserved).
+    ``mode="host"`` is the reference loop and the exact host-side mirror of
+    the engine's rescore policy: stale bounds in an (n,) array, per round a
+    loop re-scores the top-``batch`` stale candidates at once (the
+    evaluation engine still sees multiset-sized problems — optimizer-
+    awareness preserved) until the fresh-top invariant certifies the winner.
+    Because host and device run the *same* policy, selections AND
+    ``evaluations`` counts agree across modes on the jnp backend (up to
+    exact float ties).
+
+    ``mode="device"`` runs CELF entirely on device: the stale bounds ride
+    the one-dispatch scan carry, each iteration re-scores the top-``batch``
+    of them via ``jax.lax.top_k``. ``mode="device_sharded"`` additionally
+    row-shards V and the cache over a ``mesh``; the bound state stays
+    replicated.
     """
+    if k > f.n:
+        raise ValueError(f"cannot select k={k} exemplars from n={f.n}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if k == 0:
+        return OptResult([], 0.0, [], 0)
+    if mode in ("device", "device_sharded"):
+        return run_selection(
+            f, kind="lazy", k=k, top_b=batch, plan=mode,
+            counter_key="lazy_greedy" if mode == "device"
+            else "lazy_greedy_sharded", mesh=mesh, data_axes=data_axes)
+    if mode != "host":
+        raise ValueError(f"unknown lazy_greedy mode {mode!r}")
     n = f.n
+    B = max(1, min(batch, n))
     cache = f.init_mincache()
-    gains = np.asarray(f.marginal_gains(f.V, cache))
+    ub = np.asarray(f.marginal_gains(f.V, cache), np.float32).copy()
     evals = n
-    # max-heap of (-upper_bound, index, round_evaluated)
-    heap = [(-g, i, 0) for i, g in enumerate(gains)]
-    heapq.heapify(heap)
+    taken = np.zeros(n, bool)
     selected: list[int] = []
     traj: list[float] = []
-    for rnd in range(1, k + 1):
+    for _ in range(k):
+        fresh = np.zeros(n, bool)
         while True:
-            top = [heapq.heappop(heap) for _ in range(min(batch, len(heap)))]
-            fresh_mask = [t[2] == rnd for t in top]
-            if fresh_mask[0]:
-                # best candidate is fresh — take it, push the rest back
-                _, j, _ = top[0]
-                for t in top[1:]:
-                    heapq.heappush(heap, t)
-                break
-            idx = np.array([t[1] for t in top])
-            new_gains = np.asarray(f.marginal_gains(f.V[idx], cache))
-            evals += len(idx)
-            for g, i in zip(new_gains, idx):
-                heapq.heappush(heap, (-float(g), int(i), rnd))
-        selected.append(int(j))
+            stale_vals = np.where(fresh | taken, -np.inf, ub)
+            fresh_best = np.max(np.where(fresh & ~taken, ub, -np.inf))
+            if fresh_best >= stale_vals.max():
+                break  # fresh-top invariant: the fresh best is the argmax
+            top_idx = np.argsort(-stale_vals, kind="stable")[:B]
+            top_idx = top_idx[stale_vals[top_idx] > -np.inf]
+            ub[top_idx] = np.asarray(f.marginal_gains(f.V[top_idx], cache))
+            fresh[top_idx] = True
+            evals += len(top_idx)
+        j = int(np.argmax(np.where(fresh & ~taken, ub, -np.inf)))
+        selected.append(j)
+        taken[j] = True
         cache = f.update_mincache(cache, f.V[j])
         traj.append(f.value_from_mincache(cache))
-    return OptResult(selected, traj[-1], traj, evals)
+    return OptResult(selected, traj[-1] if traj else 0.0, traj, evals)
 
 
 def stochastic_greedy(
     f: ExemplarClustering, k: int, eps: float = 0.05, seed: int = 0,
     mode: str = "host", block_m: Optional[int] = None,
+    mesh=None, data_axes: Sequence[str] = ("data",),
 ) -> OptResult:
     """Sample ⌈(n/k)·ln(1/ε)⌉ candidates per round; (1−1/e−ε) in expectation.
 
@@ -292,17 +230,26 @@ def stochastic_greedy(
     are masked at scoring time. Each round draws k extra candidates so that
     after masking at most k selected ones, at least the required m fresh
     candidates remain — no round can degenerate to an all-masked argmax.
-    ``evaluations`` therefore counts k·min(n, m+k) scored candidates, a +k
-    per-round overdraw relative to the pool-sampling formulation.
+    ``evaluations`` counts the candidates that actually entered each round's
+    argmax (identically in every mode), which keeps the numbers comparable
+    with the pool-sampling formulation despite the overdraw.
     """
     n = f.n
+    if k > n:
+        raise ValueError(f"cannot select k={k} exemplars from n={n}")
+    if k == 0:
+        return OptResult([], 0.0, [], 0)
     rng = np.random.default_rng(seed)
     m = min(n, int(math.ceil(n / k * math.log(1.0 / eps))))
     m_draw = min(n, m + k)
     samples = np.stack(
         [rng.choice(n, size=m_draw, replace=False) for _ in range(k)])
-    if mode == "device":
-        return _run_device_scan(f, samples, "stochastic_greedy", block_m)
+    if mode in ("device", "device_sharded"):
+        return run_selection(
+            f, kind="stochastic", k=k, cand_rounds=samples,
+            plan=mode, counter_key="stochastic_greedy" if mode == "device"
+            else "stochastic_greedy_sharded", block_m=block_m, mesh=mesh,
+            data_axes=data_axes)
     if mode != "host":
         raise ValueError(f"unknown stochastic_greedy mode {mode!r}")
     cache = f.init_mincache()
@@ -312,8 +259,9 @@ def stochastic_greedy(
     for t in range(k):
         cand = samples[t]
         gains = np.array(f.marginal_gains(f.V[cand], cache))
-        evals += len(cand)
-        gains[np.isin(cand, selected)] = -np.inf
+        masked = np.isin(cand, selected)
+        evals += len(cand) - int(masked.sum())
+        gains[masked] = -np.inf
         j = int(cand[int(np.argmax(gains))])
         selected.append(j)
         cache = f.update_mincache(cache, f.V[j])
@@ -397,6 +345,28 @@ class _SieveState:
         return self.members[b], float(vals[b])
 
 
+def _sieve_rule(taus: np.ndarray, k: int):
+    """The SieveStreaming accept rule shared by the sieve family.
+
+    Element e joins sieve τ when Δ(e|S_τ) ≥ (τ/2 − f(S_τ)) / (k − |S_τ|) —
+    one closure, bound to a *snapshot* of the threshold vector so a mid-block
+    grid rebuild can't skew decisions already in flight.
+    """
+
+    def rule(gains, sizes, values):
+        need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
+        return gains >= need
+
+    return rule
+
+
+def _stream_eval_count(n_elements: int, n_sieves: int) -> int:
+    """Streaming ``evaluations`` unit, identical across the sieve family:
+    each arriving element is scored against every live sieve in one engine
+    call (min. 1 — the singleton gain is always computed)."""
+    return n_elements * max(n_sieves, 1)
+
+
 def _threshold_grid(lo: float, hi: float, eps: float) -> list[float]:
     """{(1+eps)^i} ∩ [lo, hi] (paper refs [4], [19])."""
     if hi <= 0 or lo <= 0:
@@ -472,14 +442,8 @@ def sieve_streaming(
 
     blocks = _stream_blocks(f, order, seed, block_size)
     for seg_idx, seg_d in _static_grid_segments(blocks, rebuild):
-        taus = np.array(st.thresholds)
-
-        def rule(gains, sizes, values, taus=taus):
-            need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
-            return gains >= need
-
-        st.offer(seg_idx, seg_d, rule)
-        evals += len(seg_idx) * max(len(st.thresholds), 1)
+        st.offer(seg_idx, seg_d, _sieve_rule(np.array(st.thresholds), k))
+        evals += _stream_eval_count(len(seg_idx), len(st.thresholds))
     members, value = st.best()
     return OptResult(members, value, [value], evals)
 
@@ -511,14 +475,8 @@ def sieve_streaming_pp(
             for t in want:
                 if t not in have:
                     st.add_sieve(t)
-            taus = np.array(st.thresholds)
-
-            def rule(gains, sizes, values, taus=taus):
-                need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
-                return gains >= need
-
-            st.offer(int(idx), dmat[bi], rule)
-            evals += max(len(st.thresholds), 1)
+            st.offer(int(idx), dmat[bi], _sieve_rule(np.array(st.thresholds), k))
+            evals += _stream_eval_count(1, len(st.thresholds))
             vals = st.values()
             if len(vals):
                 lb = max(lb, float(vals.max()))
@@ -543,7 +501,7 @@ def three_sieves(
         for bi, idx in enumerate(ib):
             dvec = dmat[bi]
             gain = float(np.maximum(cache - dvec, 0.0).mean())
-            evals += 1
+            evals += _stream_eval_count(1, 1)
             if singles[bi] > m_seen:
                 m_seen = float(singles[bi])
                 hi = k * m_seen
@@ -605,7 +563,7 @@ def salsa(
             return gains >= r * taus / k
 
         st.offer(seg_idx, seg_d, rule)
-        evals += len(seg_idx) * max(len(st.thresholds), 1)
+        evals += _stream_eval_count(len(seg_idx), len(st.thresholds))
     members, value = st.best()
     return OptResult(members, value, [value], evals)
 

@@ -19,6 +19,13 @@ Two kernels:
   current round's gains against the *updated* cache — so the winner's distance
   column never re-materializes in HBM (only the (n,) cache itself, which is
   required state, is written back).
+
+Both kernels normalize by an explicit ``n_total`` rather than ``V.shape[0]``:
+passed the *global* ground-set size, they are callable on one row-shard of a
+mesh-sharded V (cache sharded alongside), and the per-shard outputs are exact
+gain partials that an O(m) ``psum`` turns into the global gains — the
+contract the ``device_sharded`` execution plan in :mod:`repro.core.engine`
+builds on.
 """
 from __future__ import annotations
 

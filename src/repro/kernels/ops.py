@@ -162,7 +162,7 @@ def exemplar_eval(
     mode: str = "fused",
     variant: str = "flat",
     interpret: Optional[bool] = None,
-    memory_budget_bytes: Optional[int] = None,
+    memory_budget_bytes: Optional[int | str] = None,  # int | None | "auto"
     rbf_gamma: Optional[float] = None,
 ) -> jax.Array:
     """L(S_j ∪ {e0}) for the packed multiset — (l,) float32."""
@@ -228,8 +228,14 @@ def marginal_gain(
     rbf_gamma: Optional[float] = None,
     block_n: int = 256,
     block_m: int = 256,
+    n_total: Optional[int] = None,
 ) -> jax.Array:
-    """Δ(c_j | S) for all candidates — (m,) float32."""
+    """Δ(c_j | S) for all candidates — (m,) float32.
+
+    ``n_total`` overrides the |V| normalizer: pass the *global* ground-set
+    size when V is one row-shard of a mesh-sharded ground set, so per-shard
+    partial gains ``psum`` to the exact global gains.
+    """
     if interpret is None:
         interpret = _is_cpu()
     n = V.shape[0]
@@ -237,7 +243,8 @@ def marginal_gain(
     bm = min(block_m, _round_up(C.shape[0], SUBLANE))
     return _marginal_gain_padded(
         V, C, mincache, policy=policy, interpret=interpret,
-        rbf_gamma=rbf_gamma, n_total=n, block_n=bn, block_m=bm)
+        rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
+        block_n=bn, block_m=bm)
 
 
 @functools.partial(
@@ -268,9 +275,14 @@ def fused_gain_update(
     rbf_gamma: Optional[float] = None,
     block_n: int = 256,
     block_m: int = 256,
+    n_total: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused greedy step (device engine): cache ← min(cache, d(·, winner)),
     then Δ(c_j | S) against the updated cache. Returns ``(gains, new_cache)``.
+
+    ``n_total`` is the sharding-aware normalizer (see :func:`marginal_gain`):
+    with V a row-shard, gains come back divided by the *global* n and the
+    updated cache shard stays local — exactly the engine's psum contract.
     """
     if interpret is None:
         interpret = _is_cpu()
@@ -279,4 +291,5 @@ def fused_gain_update(
     bm = min(block_m, _round_up(C.shape[0], SUBLANE))
     return _fused_gain_update_padded(
         V, C, mincache, winner, policy=policy, interpret=interpret,
-        rbf_gamma=rbf_gamma, n_total=n, block_n=bn, block_m=bm)
+        rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
+        block_n=bn, block_m=bm)

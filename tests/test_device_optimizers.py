@@ -1,10 +1,11 @@
-"""Device-resident stepping engine: host/device parity + dispatch accounting."""
+"""Device-resident selection engine: host/device parity + dispatch accounting."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import EvalConfig, ExemplarClustering
-from repro.core.optimizers import (DEVICE_TRACE_COUNTS, greedy,
+from repro.core.engine import validate_candidates
+from repro.core.optimizers import (DEVICE_TRACE_COUNTS, greedy, lazy_greedy,
                                    sieve_streaming, stochastic_greedy)
 from repro.data.synthetic import blobs
 
@@ -56,6 +57,120 @@ def test_device_greedy_blocked_candidates(f):
     full = greedy(f, 5, mode="device")
     blocked = greedy(f, 5, mode="device", block_m=64)  # 300 → 5 ragged blocks
     assert full.indices == blocked.indices
+
+
+def test_device_lazy_matches_host_celf(f):
+    """Device CELF (top-B re-score of carried stale bounds) must select the
+    exact host-CELF exemplars on the jnp backend."""
+    host = lazy_greedy(f, 6, mode="host")
+    dev = lazy_greedy(f, 6, mode="device")
+    assert host.indices == dev.indices
+    np.testing.assert_allclose(host.trajectory, dev.trajectory, atol=1e-5)
+
+
+@pytest.mark.parametrize("batch", [1, 2, 4, 300])
+def test_device_lazy_fallback_still_exact(f, batch):
+    """Tiny top-B forces multi-iteration rescore rounds → selections must
+    stay exactly greedy-optimal and host/device evaluation counts must agree
+    (both run the same rescore policy)."""
+    base = greedy(f, 6, mode="host")
+    host = lazy_greedy(f, 6, batch=batch, mode="host")
+    dev = lazy_greedy(f, 6, batch=batch, mode="device")
+    assert dev.indices == base.indices == host.indices
+    assert dev.evaluations == host.evaluations
+    # B=1 re-scores can't certify early rounds: extra iterations accrue
+    assert dev.evaluations >= f.n + 6
+
+
+@pytest.mark.parametrize("n", [1024, 8192])
+def test_device_lazy_parity_at_scale(n):
+    """Acceptance sizes: identical host/device CELF selections on jnp."""
+    X, _ = blobs(n, 24, centers=12, seed=13)
+    fn = ExemplarClustering(jnp.asarray(X))
+    host = lazy_greedy(fn, 8, mode="host")
+    dev = lazy_greedy(fn, 8, mode="device")
+    assert host.indices == dev.indices
+    assert host.evaluations == dev.evaluations
+
+
+def test_device_lazy_single_trace(f):
+    before = DEVICE_TRACE_COUNTS["lazy_greedy"]
+    first = lazy_greedy(f, 5, mode="device")
+    mid = DEVICE_TRACE_COUNTS["lazy_greedy"]
+    again = lazy_greedy(f, 5, mode="device")
+    assert mid <= before + 1
+    assert DEVICE_TRACE_COUNTS["lazy_greedy"] == mid
+    assert first.indices == again.indices
+
+
+def test_device_lazy_pallas_trajectory_tolerance():
+    """On the pallas backend the in-kernel fold may differ in the last ulp:
+    selections should agree on easy data and trajectories match to 1e-4."""
+    X, _ = blobs(96, 8, centers=4, seed=7)
+    fp = ExemplarClustering(jnp.asarray(X), EvalConfig(backend="pallas_interpret"))
+    host = lazy_greedy(fp, 4, mode="host")
+    dev = lazy_greedy(fp, 4, mode="device")
+    assert host.indices == dev.indices
+    np.testing.assert_allclose(host.trajectory, dev.trajectory, atol=1e-4)
+
+
+def test_candidate_validation_rejects_and_dedupes(f):
+    with pytest.raises(ValueError):
+        validate_candidates([0, 5, 300], 300)  # out of range
+    with pytest.raises(ValueError):
+        validate_candidates([-1, 5], 300)
+    assert validate_candidates([7, 3, 7, 3, 9], 300).tolist() == [7, 3, 9]
+
+
+def test_k_exceeding_candidates_raises(f):
+    """Exhausting the candidate pool must raise, not silently re-select."""
+    from repro.core.optimizers import lazy_greedy as lg
+
+    for mode in ("host", "device"):
+        with pytest.raises(ValueError, match="distinct"):
+            greedy(f, 5, mode=mode, candidates=[3, 7])
+        with pytest.raises(ValueError, match="k="):
+            lg(f, 301, mode=mode)
+    with pytest.raises(ValueError, match="k="):
+        stochastic_greedy(f, 301)
+
+
+def test_device_greedy_duplicate_candidates_deduped(f):
+    """A duplicated candidate index must not be scored twice nor selected
+    twice; host and device agree after boundary dedupe."""
+    cand = np.concatenate([np.arange(0, 300, 3), np.arange(0, 300, 3)])
+    clean = greedy(f, 5, mode="device", candidates=np.arange(0, 300, 3))
+    dup_dev = greedy(f, 5, mode="device", candidates=cand)
+    dup_host = greedy(f, 5, mode="host", candidates=cand)
+    assert dup_dev.indices == clean.indices == dup_host.indices
+    assert len(set(dup_dev.indices)) == 5
+    assert dup_dev.evaluations == clean.evaluations  # dupes don't count
+
+
+def test_exhausted_round_raises_not_duplicates(f):
+    """A sample row fully taken by earlier rounds must raise, not silently
+    re-select; k=0 and batch=0 degenerate inputs behave identically across
+    modes."""
+    from repro.core import run_selection
+
+    cand_rounds = np.array([[0, 1], [0, 1], [0, 1], [2, 3]])
+    with pytest.raises(ValueError, match="no untaken candidate"):
+        run_selection(f, kind="stochastic", k=4, cand_rounds=cand_rounds,
+                      plan="device", counter_key="exhausted_test")
+    for mode in ("host", "device"):
+        r = lazy_greedy(f, 0, mode=mode)
+        assert (r.indices, r.value, r.evaluations) == ([], 0.0, 0)
+        with pytest.raises(ValueError, match="batch"):
+            lazy_greedy(f, 4, batch=0, mode=mode)
+    s = stochastic_greedy(f, 0)
+    assert (s.indices, s.evaluations) == ([], 0)
+
+
+def test_stochastic_evaluations_comparable(f):
+    """Overdraw correction: both modes report actually-scored candidates."""
+    host = stochastic_greedy(f, 6, eps=0.05, seed=3, mode="host")
+    dev = stochastic_greedy(f, 6, eps=0.05, seed=3, mode="device")
+    assert host.evaluations == dev.evaluations
 
 
 def test_device_greedy_pallas_backend_matches():

@@ -60,6 +60,51 @@ def test_chunking_failure_raises(problem):
         plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32, "fused", 10)
 
 
+def test_auto_budget_resolves_via_probe(problem, monkeypatch):
+    """"auto" budget goes through the free-memory probe; probeless backends
+    (CPU) degrade to unchunked, a probed value yields the probed chunking."""
+    from repro.core import evaluator as ev
+
+    V, pk = problem
+    monkeypatch.setattr(ev, "_AUTO_BUDGET_BYTES", False)
+    monkeypatch.setattr(ev, "free_memory_bytes", lambda device=None: None)
+    assert plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32, "fused",
+                       "auto") == [(0, 19)]
+    mu = bytes_per_set(V.shape[0], pk.k_max, pk.dim, FP32, "fused")
+    monkeypatch.setattr(ev, "free_memory_bytes",
+                        lambda device=None: int(4 * mu / ev.AUTO_BUDGET_FRACTION))
+    # probe frozen at first use: a changed probe must NOT move the chunking
+    assert plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32, "fused",
+                       "auto") == [(0, 19)]
+    monkeypatch.setattr(ev, "_AUTO_BUDGET_BYTES", False)  # re-probe
+    chunks = plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32, "fused",
+                         "auto")
+    assert chunks == plan_chunks(19, V.shape[0], pk.k_max, pk.dim, FP32,
+                                 "fused", 4 * mu)
+    assert len(chunks) == 5  # ⌈19/4⌉
+
+
+def test_device_block_m_uses_probe(monkeypatch):
+    """The engine's candidate block size derives from the same probe; the
+    probed cap freezes at first use so jit statics can't churn per call."""
+    from repro.core import engine as eng
+
+    monkeypatch.setattr(eng, "_GAIN_TILE_CAP_ELEMS", None)
+    monkeypatch.setattr(eng, "free_memory_bytes", lambda device=None: None)
+    assert eng._device_block_m(1 << 20, 64) == 32  # 128 MiB fallback cap
+    monkeypatch.setattr(eng, "free_memory_bytes",
+                        lambda device=None: 1 << 30)  # 1 GiB free
+    # cap already frozen: a changed probe must NOT change the block size
+    assert eng._device_block_m(1 << 20, 64) == 32
+    monkeypatch.setattr(eng, "_GAIN_TILE_CAP_ELEMS", None)
+    assert eng._device_block_m(1 << 20, 64) == 64  # re-probed: tile fits
+
+    from repro.core import evaluator as ev
+    monkeypatch.setattr(ev, "_AUTO_BUDGET_BYTES", False)
+    monkeypatch.setattr(ev, "free_memory_bytes", lambda device=None: 0)
+    assert ev.resolve_memory_budget("auto") == 0  # 0 free ≠ "no budget"
+
+
 def test_fp16_strict_reduces_mu():
     """The paper's remediation: FP16 shrinks the per-set footprint."""
     assert bytes_per_set(1000, 10, 100, FP16_STRICT, "fused") < \
