@@ -9,10 +9,11 @@ CSV rows: name,us_per_call,derived. Mapping to the paper:
   greedy_modes    — beyond-paper optimizer-aware greedy + engine modes
   kernel_roofline — TPU roofline of the Pallas kernels at paper sizes
   optimizers      — §IV-A optimizer evaluation-count profile + engine plans
+  streaming       — sieve family: per-element host loop vs device block offer
 
 ``--json`` additionally writes the rows as a machine-readable artifact
 (``{module: [{name, us_per_call, derived}, ...]}``) so CI can accumulate a
-perf trajectory across PRs.
+perf trajectory across PRs. ``--only`` takes a comma-separated module list.
 """
 from __future__ import annotations
 
@@ -21,17 +22,18 @@ import importlib
 import json
 
 MODULES = ["sweeps", "precision", "chunking", "greedy_modes",
-           "kernel_roofline", "optimizers"]
+           "kernel_roofline", "optimizers", "streaming"]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of modules")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH as JSON (CI artifact)")
     args = ap.parse_args()
-    mods = [args.only] if args.only else MODULES
+    mods = args.only.split(",") if args.only else MODULES
     print("name,us_per_call,derived")
     collected: dict[str, list[dict]] = {}
     for m in mods:

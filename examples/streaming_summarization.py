@@ -1,22 +1,25 @@
 """Streaming data summarization with sieve optimizers (paper §II use case).
 
 Simulates a stream of observations; SieveStreaming / SieveStreaming++ /
-ThreeSieves maintain exemplar summaries on the fly — every arriving element
-is offered to all sieves at once, which is exactly the paper's
-multiset-parallelized evaluation problem. The stream is consumed in blocks
-of ``block_size`` elements: one engine dispatch fetches the whole block's
-distances instead of one dispatch per arriving element.
+Salsa maintain exemplar summaries on the fly — every arriving element is
+offered to all sieves at once, which is exactly the paper's
+multiset-parallelized evaluation problem. With ``mode="device"`` the sieve
+table lives on the accelerator and each stream block of ``block_size``
+elements is consumed by ONE jitted scan dispatch; ``mode="host"`` is the
+per-element array mirror it replaces. The ingestion service wraps the same
+engine behind an async queue (backpressure + mid-stream snapshots).
 
 Run: PYTHONPATH=src python examples/streaming_summarization.py
 """
+import asyncio
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExemplarClustering, greedy
-from repro.core.optimizers import (sieve_streaming, sieve_streaming_pp,
-                                   three_sieves)
+from repro.core import ExemplarClustering, StreamIngestionService, greedy
+from repro.core.optimizers import (salsa, sieve_streaming,
+                                   sieve_streaming_pp, three_sieves)
 from repro.data.synthetic import blobs
 
 
@@ -33,19 +36,35 @@ def main():
 
     block = 128
     for name, alg, kw in [
-        ("sieve_streaming", sieve_streaming, dict(eps=0.1)),
-        ("sieve_streaming++", sieve_streaming_pp, dict(eps=0.1)),
+        ("sieve_streaming", sieve_streaming, dict(eps=0.1, mode="device")),
+        ("sieve_streaming++", sieve_streaming_pp,
+         dict(eps=0.1, mode="device")),
+        ("salsa", salsa, dict(eps=0.1, mode="device")),
         ("three_sieves(T=100)", three_sieves, dict(eps=0.1, T=100)),
     ]:
         t0 = time.perf_counter()
         res = alg(f, k, block_size=block, **kw)
         dt = time.perf_counter() - t0
-        # one distance dispatch per stream block; an upper bound because
-        # three_sieves may exhaust its threshold grid and stop early
+        # device modes: one scan dispatch per stream block (upper bound —
+        # three_sieves runs on host and may stop early)
         dispatches = -(-f.n // block)
         print(f"{name:20s}f = {res.value:.4f}  ({dt:.1f}s, "
               f"{res.evaluations} evals, <={dispatches} engine dispatches, "
               f"{res.value/offline.value:.1%} of greedy)")
+
+    # the same engine as a service: queue in, exemplars out
+    async def serve():
+        order = np.random.default_rng(0).permutation(f.n)
+        async with StreamIngestionService(f, k=k, mode="device",
+                                          block_size=block) as svc:
+            await svc.offer_batch(np.asarray(X)[order])
+            await svc.drain()
+            return await svc.snapshot()
+
+    snap = asyncio.run(serve())
+    print(f"{'ingestion service':20s}f = {snap.value:.4f}  "
+          f"({snap.n_ingested} ingested, {snap.n_accepted} accepted, "
+          f"{snap.value/offline.value:.1%} of greedy)")
 
 
 if __name__ == "__main__":

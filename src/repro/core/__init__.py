@@ -25,6 +25,14 @@ from repro.core.optimizers import (
     stochastic_greedy,
     three_sieves,
 )
+from repro.core.streaming import (
+    DeviceSieveEngine,
+    HostSieveMirror,
+    SieveSpec,
+    SieveState,
+    make_sieve_engine,
+)
+from repro.core.service import SieveSnapshot, StreamIngestionService
 from repro.core.clustering import ExemplarModel, fit_exemplar_clustering
 from repro.core.precision import BF16, FP16, FP16_STRICT, FP32, PrecisionPolicy
 
@@ -36,5 +44,7 @@ __all__ = [
     "pack_base_plus_candidates", "pack_sets", "OPTIMIZERS", "OptResult",
     "greedy", "lazy_greedy", "salsa", "sieve_streaming", "sieve_streaming_pp",
     "stochastic_greedy", "three_sieves", "ExemplarModel",
-    "fit_exemplar_clustering",
+    "fit_exemplar_clustering", "DeviceSieveEngine", "HostSieveMirror",
+    "SieveSpec", "SieveState", "make_sieve_engine", "SieveSnapshot",
+    "StreamIngestionService",
 ]

@@ -47,6 +47,13 @@ def _gains_vs_cache(V, cands, mincache, distance, policy_name, n_total=None):
                          n_total=n_total)
 
 
+@partial(jax.jit, static_argnames=("distance", "policy"))
+def _point_distances_block(V, X, distance, policy):
+    # policy rides as the static itself (frozen dataclass → hashable), so a
+    # custom PrecisionPolicy object works without a registry entry
+    return dist_mod.resolve_pairwise(distance)(V, X, policy).T
+
+
 @partial(jax.jit, static_argnames=("distance", "policy_name"))
 def _update_cache(V, new_point, mincache, distance, policy_name):
     pair = dist_mod.resolve_pairwise(distance)
@@ -160,15 +167,23 @@ class ExemplarClustering:
         policy = self.cfg.resolved_policy()
         return pair(self.V, x[None, :], policy)[:, 0]
 
-    def point_distances_block(self, X: jax.Array) -> jax.Array:
+    def point_distances_block(self, X: jax.Array,
+                              policy: "Optional[str | object]" = None
+                              ) -> jax.Array:
         """d(v_i, x_b) for a block of B stream elements — (B, n).
 
-        One engine dispatch for the whole block (the batched-streaming path);
-        row b matches ``point_distances(X[b])`` up to matmul vectorization.
+        One jitted engine dispatch for the whole block (the batched-streaming
+        path); row b matches ``point_distances(X[b])`` up to matmul
+        vectorization. ``policy`` overrides the config's precision policy for
+        this block (name or :class:`~repro.core.precision.PrecisionPolicy`),
+        threaded through as a jit-static so each policy compiles once — the
+        streaming engine ingests at the configured precision while the sieve
+        state stays float32.
         """
-        pair = dist_mod.resolve_pairwise(self.cfg.distance)
-        policy = self.cfg.resolved_policy()
-        return pair(self.V, jnp.asarray(X), policy).T
+        pol = resolve_policy(policy if policy is not None
+                             else self.cfg.resolved_policy())
+        return _point_distances_block(self.V, jnp.asarray(X),
+                                      self.cfg.distance, policy=pol)
 
     # -- metadata ------------------------------------------------------------
 

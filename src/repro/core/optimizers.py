@@ -47,19 +47,25 @@ Optimizer modes:
                        ``mode="device"`` (re-scoring against carried stale
                        bounds inside the one-dispatch scan) or
                        ``mode="device_sharded"``.
-  sieve_streaming      Badanidiyuru et al. (1/2 − ε), streaming.
-  sieve_streaming_pp   Kazemi et al., LB-pruned sieves (1/2 − ε), less memory.
+  sieve_streaming      Badanidiyuru et al. (1/2 − ε), streaming;
+                       ``mode="host"`` / ``mode="device"``.
+  sieve_streaming_pp   Kazemi et al., LB-pruned sieves (1/2 − ε), less
+                       memory; ``mode="host"`` / ``mode="device"``.
   three_sieves         Buschjäger et al., single adaptive sieve ((1−ε)(1−1/e)
-                       w.h.p.), minimal memory.
+                       w.h.p.), minimal memory; host-only.
   salsa                Norouzi-Fard et al. dense-threshold ensemble
-                       (simplified: fixed dense schedules, no OPT oracle).
+                       (simplified: fixed dense schedules, no OPT oracle);
+                       ``mode="host"`` / ``mode="device"``.
 
-The streaming family consumes the stream in *blocks* of ``block_size``
-elements: each block's distances against the ground set are computed in one
-engine dispatch (``ExemplarClustering.point_distances_block``) instead of one
-dispatch per arriving element, and ``_SieveState.offer`` accepts the whole
-block (decisions stay sequential — an accept updates the sieve caches seen by
-the next element in the block).
+The streaming family runs on the **sieve engine**
+(:mod:`repro.core.streaming`): a fixed-capacity table of threshold sieves
+keyed by integer exponent, living on device. ``mode="host"`` steps the table
+one jitted dispatch per element (the exact array-semantics mirror);
+``mode="device"`` consumes each stream block of ``block_size`` elements with
+ONE jitted ``lax.scan`` over elements — singleton gain, grid rebuild, accept
+rule, cache min-update, and member bookkeeping all in the scan body. Both
+plans make bit-identical decisions, so selections AND evaluation counts agree
+across modes.
 
 All return an :class:`OptResult` (indices into V, value, trajectory, and the
 number of *evaluations*). For the greedy family ``evaluations`` counts
@@ -270,94 +276,15 @@ def stochastic_greedy(
 
 
 # ---------------------------------------------------------------------------
-# Streaming sieves — all share a vectorized multi-sieve state so that one
-# arriving element is evaluated against *all* sieves in a single engine call
-# (this is exactly the paper's multiset-parallelized problem). The stream is
-# consumed in blocks: one device dispatch fetches the distances of B elements
-# (a packed multiset evaluation), and the accept logic replays them in order.
+# Streaming sieves — built on the streaming sieve engine
+# (:mod:`repro.core.streaming`): a fixed-capacity table of threshold sieves
+# keyed by integer exponent, offered every arriving element. Like the greedy
+# family, each algorithm composes one accept-rule *variant* with an execution
+# plan: ``mode="host"`` steps the table one jitted dispatch per element (the
+# exact array-semantics mirror), ``mode="device"`` consumes each stream block
+# of B elements with ONE jitted ``lax.scan`` — singleton gain, grid rebuild,
+# accept rule, cache min-update, and member bookkeeping all in the scan body.
 # ---------------------------------------------------------------------------
-
-
-class _SieveState:
-    """Vectorized state for a dynamic collection of threshold sieves."""
-
-    def __init__(self, f: ExemplarClustering, k: int):
-        self.f = f
-        self.k = k
-        self.thresholds: list[float] = []
-        self.caches = np.zeros((0, f.n), np.float32)  # per-sieve min-dist cache
-        self.members: list[list[int]] = []
-
-    def add_sieve(self, tau: float):
-        self.thresholds.append(tau)
-        base = np.asarray(self.f.init_mincache(), np.float32)[None]
-        self.caches = np.concatenate([self.caches, base], axis=0)
-        self.members.append([])
-
-    def drop(self, keep: np.ndarray):
-        self.thresholds = [t for t, m in zip(self.thresholds, keep) if m]
-        self.caches = self.caches[keep]
-        self.members = [s for s, m in zip(self.members, keep) if m]
-
-    def values(self) -> np.ndarray:
-        if not self.thresholds:
-            return np.zeros((0,), np.float32)
-        return self.f.L0 - self.caches.mean(axis=1)
-
-    def _offer_one(self, idx: int, dvec: np.ndarray, accept_rule) -> np.ndarray:
-        gains = np.maximum(self.caches - dvec[None, :], 0.0).mean(axis=1)
-        sizes = np.array([len(m) for m in self.members])
-        accept = accept_rule(gains, sizes, self.values()) & (sizes < self.k)
-        if accept.any():
-            upd = np.minimum(self.caches[accept], dvec[None, :])
-            self.caches[accept] = upd
-            for si in np.nonzero(accept)[0]:
-                self.members[si].append(idx)
-        return accept
-
-    def offer(self, idx, dvec: np.ndarray, accept_rule) -> np.ndarray:
-        """Offer one element — or a block of B — to every sieve.
-
-        ``idx`` is an int (with ``dvec`` of shape (n,)) or a (B,) index array
-        (with ``dvec`` of shape (B, n), the block's packed distance rows from
-        one engine dispatch). Block decisions are sequential: an accept
-        updates the caches consulted for the next element. Returns the accept
-        mask — (S,) for a single element, (B, S) for a block.
-        """
-        dmat = np.asarray(dvec, np.float32)
-        if dmat.ndim == 1:
-            if not self.thresholds:
-                return np.zeros((0,), bool)
-            return self._offer_one(int(idx), dmat, accept_rule)
-        idxs = np.atleast_1d(np.asarray(idx))
-        if not self.thresholds:
-            return np.zeros((len(idxs), 0), bool)
-        return np.stack([
-            self._offer_one(int(i), row, accept_rule)
-            for i, row in zip(idxs, dmat)
-        ])
-
-    def best(self) -> tuple[list[int], float]:
-        vals = self.values()
-        if len(vals) == 0:
-            return [], 0.0
-        b = int(np.argmax(vals))
-        return self.members[b], float(vals[b])
-
-
-def _sieve_rule(taus: np.ndarray, k: int):
-    """The SieveStreaming accept rule shared by the sieve family.
-
-    Element e joins sieve τ when Δ(e|S_τ) ≥ (τ/2 − f(S_τ)) / (k − |S_τ|) —
-    one closure, bound to a *snapshot* of the threshold vector so a mid-block
-    grid rebuild can't skew decisions already in flight.
-    """
-
-    def rule(gains, sizes, values):
-        need = (taus / 2.0 - values) / np.maximum(k - sizes, 1)
-        return gains >= need
-
-    return rule
 
 
 def _stream_eval_count(n_elements: int, n_sieves: int) -> int:
@@ -365,15 +292,6 @@ def _stream_eval_count(n_elements: int, n_sieves: int) -> int:
     each arriving element is scored against every live sieve in one engine
     call (min. 1 — the singleton gain is always computed)."""
     return n_elements * max(n_sieves, 1)
-
-
-def _threshold_grid(lo: float, hi: float, eps: float) -> list[float]:
-    """{(1+eps)^i} ∩ [lo, hi] (paper refs [4], [19])."""
-    if hi <= 0 or lo <= 0:
-        return []
-    i_lo = math.ceil(math.log(lo) / math.log1p(eps))
-    i_hi = math.floor(math.log(hi) / math.log1p(eps))
-    return [(1 + eps) ** i for i in range(i_lo, i_hi + 1)]
 
 
 def _stream(f: ExemplarClustering, order: Optional[Sequence[int]], seed: int) -> Iterable[int]:
@@ -401,87 +319,50 @@ def _stream_blocks(f: ExemplarClustering, order: Optional[Sequence[int]],
         yield ib, dmat, singles
 
 
-def _static_grid_segments(blocks, rebuild_grid):
-    """Split stream blocks into segments over which the threshold grid is
-    static: ``rebuild_grid(m_seen)`` fires whenever a new max singleton
-    arrives, then the run of elements up to the next new-max is yielded as
-    one (indices, distance rows) pair for a single blocked ``offer``.
-    """
-    m_seen = 0.0
-    for ib, dmat, singles in blocks:
-        b, B = 0, len(ib)
-        while b < B:
-            if singles[b] > m_seen:
-                m_seen = float(singles[b])
-                rebuild_grid(m_seen)
-            e = b + 1
-            while e < B and singles[e] <= m_seen:
-                e += 1
-            yield ib[b:e], dmat[b:e]
-            b = e
+def _run_sieve(f: ExemplarClustering, k: int, eps: float, variant: str,
+               order, seed: int, block_size: int, mode: str,
+               s_max: Optional[int]) -> OptResult:
+    """Drive a sieve-table engine over the stream under a host/device plan."""
+    from repro.core.streaming import make_sieve_engine
+
+    idx = np.asarray(_stream(f, order, seed))
+    eng = make_sieve_engine(f, k, eps, variant=variant, mode=mode,
+                            s_max=s_max, block_size=block_size)
+    for s in range(0, len(idx), block_size):
+        ib = idx[s:s + block_size]
+        eng.offer(ib, f.V[ib])
+    members, value = eng.best()
+    return OptResult(members, value, [value], eng.evaluations())
 
 
 def sieve_streaming(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
-    block_size: int = 64,
+    block_size: int = 64, mode: str = "host",
+    s_max: Optional[int] = None,
 ) -> OptResult:
-    """SieveStreaming [4]: thresholds (1+ε)^i ∈ [m, 2km], m = max singleton."""
-    st = _SieveState(f, k)
-    evals = 0
+    """SieveStreaming [4]: thresholds (1+ε)^i ∈ [m, 2km], m = max singleton.
 
-    def rebuild(m_seen):
-        want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
-        have = set(st.thresholds)
-        keep = np.array([t >= m_seen for t in st.thresholds], bool)
-        if len(keep) and not keep.all():
-            st.drop(keep)
-        for t in want:
-            if t not in have:
-                st.add_sieve(t)
-
-    blocks = _stream_blocks(f, order, seed, block_size)
-    for seg_idx, seg_d in _static_grid_segments(blocks, rebuild):
-        st.offer(seg_idx, seg_d, _sieve_rule(np.array(st.thresholds), k))
-        evals += _stream_eval_count(len(seg_idx), len(st.thresholds))
-    members, value = st.best()
-    return OptResult(members, value, [value], evals)
+    ``mode="device"`` consumes each stream block in one jitted scan dispatch;
+    ``mode="host"`` is the per-element array-semantics mirror. ``s_max``
+    overrides the sieve-table capacity (see :mod:`repro.core.streaming`).
+    """
+    return _run_sieve(f, k, eps, "sieve", order, seed, block_size, mode,
+                      s_max)
 
 
 def sieve_streaming_pp(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
-    block_size: int = 64,
+    block_size: int = 64, mode: str = "host",
+    s_max: Optional[int] = None,
 ) -> OptResult:
     """SieveStreaming++ [19]: prune sieves below LB = best current value.
 
-    LB moves after every accept, so sieve management stays per-element; the
-    distance fetch is still one dispatch per block.
+    LB moves after every accept, so the grid window is re-derived per
+    element — inside the scan body under ``mode="device"``.
     """
-    st = _SieveState(f, k)
-    m_seen, lb = 0.0, 0.0
-    evals = 0
-    for ib, dmat, singles in _stream_blocks(f, order, seed, block_size):
-        for bi, idx in enumerate(ib):
-            m_seen = max(m_seen, float(singles[bi]))
-            lo = max(lb, m_seen)
-            want = _threshold_grid(lo, 2.0 * k * m_seen, eps)
-            have = set(st.thresholds)
-            if st.thresholds:
-                keep = np.array([t >= lo / (1 + eps) for t in st.thresholds], bool)
-                if not keep.all():
-                    st.drop(keep)
-                    have = set(st.thresholds)
-            for t in want:
-                if t not in have:
-                    st.add_sieve(t)
-            st.offer(int(idx), dmat[bi], _sieve_rule(np.array(st.thresholds), k))
-            evals += _stream_eval_count(1, len(st.thresholds))
-            vals = st.values()
-            if len(vals):
-                lb = max(lb, float(vals.max()))
-    members, value = st.best()
-    return OptResult(members, value, [value], evals)
+    return _run_sieve(f, k, eps, "pp", order, seed, block_size, mode, s_max)
 
 
 def three_sieves(
@@ -499,16 +380,19 @@ def three_sieves(
     done = False
     for ib, dmat, singles in _stream_blocks(f, order, seed, block_size):
         for bi, idx in enumerate(ib):
-            dvec = dmat[bi]
-            gain = float(np.maximum(cache - dvec, 0.0).mean())
-            evals += _stream_eval_count(1, 1)
             if singles[bi] > m_seen:
                 m_seen = float(singles[bi])
                 hi = k * m_seen
                 tau_idx = math.floor(math.log(hi) / math.log1p(eps)) if hi > 0 else None
                 rejections = 0
             if tau_idx is None or len(members) >= k:
+                # no gain computed for a full/unarmed sieve — and none
+                # counted: ``evaluations`` reflects work actually done
+                # (the engine-boundary accounting rule)
                 continue
+            dvec = dmat[bi]
+            gain = float(np.maximum(cache - dvec, 0.0).mean())
+            evals += _stream_eval_count(1, 1)
             tau = (1 + eps) ** tau_idx
             f_cur = f.L0 - float(cache.mean())
             need = (tau - f_cur) / max(k - len(members), 1)
@@ -533,39 +417,22 @@ def three_sieves(
 def salsa(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
-    block_size: int = 64,
+    block_size: int = 64, mode: str = "host",
+    s_max: Optional[int] = None,
 ) -> OptResult:
     """Salsa [20], simplified: an ensemble of dense-threshold passes.
 
     The full Salsa interleaves several threshold policies tuned to an OPT
     guess. We run, per OPT guess on the (1+ε) grid, a *dense* policy that
     accepts element e into sieve S when Δ(e|S) ≥ r·OPT_guess/k with r
-    following the original schedule (1/2 early, 1/(2e) late), and return the
-    best sieve. Single pass, same memory as SieveStreaming.
+    following the original schedule (1/2 for the first ⌈k/2⌉ members,
+    1/(2e) after — so k=1 still applies the early rate), and return the best
+    sieve. Single pass, same memory as SieveStreaming. The grid is grow-only
+    (old OPT guesses are never dropped); under capacity pressure the sieve
+    table evicts the lowest exponent (see :mod:`repro.core.streaming`).
     """
-    st = _SieveState(f, k)
-    evals = 0
-    early, late = 0.5, 1.0 / (2.0 * math.e)
-
-    def rebuild(m_seen):
-        want = _threshold_grid(m_seen, 2.0 * k * m_seen, eps)
-        have = set(st.thresholds)
-        for t in want:
-            if t not in have:
-                st.add_sieve(t)
-
-    blocks = _stream_blocks(f, order, seed, block_size)
-    for seg_idx, seg_d in _static_grid_segments(blocks, rebuild):
-        taus = np.array(st.thresholds)
-
-        def rule(gains, sizes, values, taus=taus):
-            r = np.where(sizes < k // 2, early, late)
-            return gains >= r * taus / k
-
-        st.offer(seg_idx, seg_d, rule)
-        evals += _stream_eval_count(len(seg_idx), len(st.thresholds))
-    members, value = st.best()
-    return OptResult(members, value, [value], evals)
+    return _run_sieve(f, k, eps, "salsa", order, seed, block_size, mode,
+                      s_max)
 
 
 OPTIMIZERS = {

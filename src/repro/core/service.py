@@ -1,0 +1,202 @@
+"""Streaming ingestion service: async queue in, exemplars out.
+
+The companion Industry 4.0 deployment (Honysz et al., 2021) runs the sieve
+family against live sensor streams; this module is that serving surface for
+the device-resident sieve engine (:mod:`repro.core.streaming`). Producers
+``offer`` arbitrary vectors (not ground-set indices — the ground set V is the
+fixed *evaluation* reference the submodular function scores against);
+a single worker drains the queue in blocks and feeds the engine one scan
+dispatch per block; consumers ``snapshot`` the current best sieve at any
+point of the stream.
+
+Flow control:
+
+* **Offer batching** — the worker takes whatever is queued (up to
+  ``block_size``) per engine dispatch, so a burst of producers amortizes to
+  one device round-trip per block while a trickle still gets per-element
+  latency. Block boundaries cannot change results: sieve decisions are
+  per-element sequential regardless of blocking.
+* **Backpressure** — the queue is bounded by ``max_pending``; ``offer``
+  awaits when the engine falls behind, propagating slow-down to producers
+  instead of buffering without bound.
+* **Snapshot consistency** — engine access is serialized by a lock shared
+  between the worker and ``snapshot``, so a snapshot always observes a
+  block-aligned engine state (never a half-applied block).
+
+The engine itself is synchronous JAX; dispatches run in a thread
+(``asyncio.to_thread``) so the event loop keeps accepting offers while the
+device works.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.functions import ExemplarClustering
+from repro.core.streaming import make_sieve_engine
+
+
+@dataclasses.dataclass
+class SieveSnapshot:
+    """Point-in-time view of the service's best sieve."""
+
+    indices: list[int]      #: stream ids of the best sieve's members
+    exemplars: np.ndarray   #: their vectors, (len(indices), dim)
+    value: float            #: f-value of the best sieve
+    n_offered: int          #: elements accepted into the queue so far
+    n_ingested: int         #: elements the engine has consumed
+    n_accepted: int         #: elements accepted by at least one sieve
+    evaluations: int        #: engine-boundary evaluation count
+    pending: int            #: elements still queued (backpressure depth)
+
+
+class StreamIngestionService:
+    """Async wrapper turning the sieve engine into a serving surface.
+
+    Use as an async context manager::
+
+        async with StreamIngestionService(f, k=8) as svc:
+            for x in stream:
+                await svc.offer(x)          # backpressure-aware
+            snap = await svc.snapshot()     # current best exemplars
+
+    Stream ids are assigned in ``offer`` order and are the ``indices`` the
+    snapshot reports; the service retains accepted elements' vectors (pruned
+    to the live member tables at snapshot time) so exemplars can be returned
+    for elements that are not ground-set rows.
+    """
+
+    def __init__(self, f: ExemplarClustering, k: int, eps: float = 0.1,
+                 variant: str = "sieve", mode: str = "device",
+                 block_size: int = 64, s_max: Optional[int] = None,
+                 max_pending: int = 1024):
+        self._engine = make_sieve_engine(f, k, eps, variant=variant,
+                                         mode=mode, s_max=s_max,
+                                         block_size=block_size)
+        self._dim = f.dim
+        self._block = block_size
+        self._max_pending = max_pending
+        self._ids = itertools.count()
+        self._vecs: dict[int, np.ndarray] = {}
+        self._n_offered = 0
+        self._n_ingested = 0
+        self._n_accepted = 0
+        self._queue: Optional[asyncio.Queue] = None
+        self._lock: Optional[asyncio.Lock] = None
+        self._task: Optional[asyncio.Task] = None
+        self._error: Optional[BaseException] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    async def start(self) -> "StreamIngestionService":
+        if self._task is not None:
+            raise RuntimeError("service already started")
+        self._queue = asyncio.Queue(self._max_pending)
+        self._lock = asyncio.Lock()
+        self._task = asyncio.create_task(self._worker())
+        return self
+
+    async def stop(self, drain: bool = True) -> None:
+        """Stop the worker; ``drain=True`` ingests queued elements first."""
+        if self._task is None:
+            return
+        try:
+            if drain:
+                await self.drain()
+        finally:  # a failed worker must still be cancelled, not leaked
+            self._task.cancel()
+            await asyncio.gather(self._task, return_exceptions=True)
+            self._task = None
+
+    async def __aenter__(self) -> "StreamIngestionService":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop(drain=exc == (None, None, None))
+
+    def _check(self):
+        if self._task is None:
+            raise RuntimeError("service not started (use 'async with' or "
+                               "await start())")
+        if self._error is not None:
+            raise RuntimeError("ingestion worker failed") from self._error
+
+    # -- producer side -------------------------------------------------------
+
+    async def offer(self, x) -> int:
+        """Enqueue one element; awaits (backpressure) while the queue is
+        full. Returns the assigned stream id."""
+        self._check()
+        x = np.asarray(x, np.float32).reshape(self._dim)
+        i = next(self._ids)
+        await self._queue.put((i, x))
+        self._n_offered += 1
+        return i
+
+    async def offer_batch(self, X: Sequence) -> list[int]:
+        return [await self.offer(x) for x in np.asarray(X, np.float32)]
+
+    async def drain(self) -> None:
+        """Wait until every queued element has been ingested."""
+        self._check()
+        await self._queue.join()
+        self._check()
+
+    # -- consumer side -------------------------------------------------------
+
+    async def snapshot(self) -> SieveSnapshot:
+        """Best sieve right now — members, vectors, value, flow counters.
+
+        Valid while running and after ``stop`` (the engine state persists)."""
+        if self._lock is None:
+            raise RuntimeError("service was never started")
+        if self._error is not None:
+            raise RuntimeError("ingestion worker failed") from self._error
+        async with self._lock:
+            members, value = await asyncio.to_thread(self._engine.best)
+            live = await asyncio.to_thread(self._engine.member_ids)
+            evals = self._engine.evaluations()
+        keep = set(live)
+        self._vecs = {i: v for i, v in self._vecs.items() if i in keep}
+        exemplars = (np.stack([self._vecs[i] for i in members])
+                     if members else np.zeros((0, self._dim), np.float32))
+        return SieveSnapshot(
+            indices=members, exemplars=exemplars, value=value,
+            n_offered=self._n_offered, n_ingested=self._n_ingested,
+            n_accepted=self._n_accepted, evaluations=evals,
+            pending=self._queue.qsize())
+
+    # -- worker --------------------------------------------------------------
+
+    async def _worker(self) -> None:
+        while True:
+            batch = [await self._queue.get()]
+            while len(batch) < self._block:
+                try:
+                    batch.append(self._queue.get_nowait())
+                except asyncio.QueueEmpty:
+                    break
+            try:
+                if self._error is None:  # after a failure: drain-only, so
+                    ids = np.fromiter(   # join() completes and _check raises
+                        (i for i, _ in batch), np.int64, len(batch))
+                    X = np.stack([x for _, x in batch])
+                    async with self._lock:
+                        accepted = await asyncio.to_thread(
+                            self._engine.offer, ids, X)
+                    for (i, x), acc in zip(batch, np.asarray(accepted)):
+                        if acc:
+                            self._vecs[i] = x
+                            self._n_accepted += 1
+                    self._n_ingested += len(batch)
+            except asyncio.CancelledError:
+                raise
+            except BaseException as e:  # surface on the next offer/drain
+                self._error = e
+            finally:
+                for _ in batch:
+                    self._queue.task_done()

@@ -1,0 +1,368 @@
+"""Device-resident streaming sieve engine (tentpole, beyond paper).
+
+The sieve family (SieveStreaming [4], SieveStreaming++ [19], Salsa [20])
+maintains a *grid* of threshold sieves τ = (1+ε)^i and offers every arriving
+stream element to all of them. After PR 1–2 moved the greedy family on device,
+the sieves were the last optimizer class whose inner loop lived on host:
+one Python/numpy accept decision per element per block. This module replaces
+that loop with a device-resident engine: the per-sieve state lives on the
+accelerator and each stream block of B elements is consumed by ONE jitted
+``jax.lax.scan`` over elements — singleton gain, grid rebuild, per-sieve
+accept rule, cache min-update, and member bookkeeping all in the scan body.
+
+Design: the **fixed-capacity sieve table**. Grid growth (a new max singleton
+widens the threshold window) is shape-dynamic on host but must be shape-static
+on device, so — the same way PR 2 turned CELF's heap into carried stale
+bounds — the dynamic sieve collection becomes a table of ``S_max`` slots:
+
+* Sieves are keyed by the **integer exponent** i of their threshold
+  τ = (1+ε)^i (never by float equality of τ — the former
+  ``if t not in have`` float dedupe could duplicate or miss a sieve when
+  ``(1+eps)**i`` round-tripped differently across rebuilds).
+* Exponent i lives in slot ``i mod S_max``. The live window
+  [i_lo, i_hi] = [⌈log m / log(1+ε)⌉, ⌊log(2km) / log(1+ε)⌋] has width
+  ≤ log(2k)/log(1+ε) + 1 independent of the stream, so with
+  ``S_max ≥ width + 2`` every live exponent owns a distinct slot.
+* A grid "rebuild" is a **masked activation**: slots whose assigned exponent
+  changed are reset (cache ← d_e0, size ← 0, members ← −1) in-place inside
+  the scan body; slots whose exponent survives keep their state — exactly the
+  host semantics of dropping below-window sieves and adding new ones.
+* Salsa's grid is grow-only (old sieves are never dropped), so its exponent
+  span is stream-dependent; its capacity default adds headroom, and when the
+  span does exceed ``S_max`` the slot collision evicts the lowest (stalest)
+  exponent — a well-defined capacity rule the host mirror shares, so parity
+  holds by construction even under eviction.
+
+Parity: :func:`_element_step` is the ONE definition of the per-element
+transition, written in pure ``jax.numpy``. The host mirror jits it per
+element (the honest per-element dispatch round-trip the device engine
+replaces); the device engine runs the identical function inside the per-block
+scan. Both consume distance rows from the same
+``ExemplarClustering.point_distances_block`` executable, so host and device
+see bitwise-identical inputs and — all float reductions being the same HLO —
+make identical accept decisions, select identical members, and report
+identical evaluation counts.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import DEVICE_TRACE_COUNTS
+
+VARIANTS = ("sieve", "pp", "salsa")
+
+#: Slot-exponent value meaning "never assigned" — far below any reachable
+#: grid exponent (f32 singleton values bound |i| ≲ 1000 for ε ≥ 1e-3).
+_EXP_UNSET = -(1 << 30)
+
+
+class SieveSpec(NamedTuple):
+    """Static (hashable → jit-static) configuration of a sieve table."""
+
+    k: int
+    eps: float
+    s_max: int
+    variant: str        # "sieve" | "pp" | "salsa"
+    log1p_eps: float    # np.float32(log1p(eps)) — the ONE grid-log constant
+
+
+class SieveState(NamedTuple):
+    """Device-resident state of the fixed-capacity sieve table.
+
+    Inactive slots carry stale arrays; every consumer masks with ``active``.
+    ``members`` rows are stream ids in arrival order, -1 beyond ``sizes``.
+    """
+
+    caches: jax.Array    # (S_max, n) f32 per-sieve min-distance cache
+    slot_exp: jax.Array  # (S_max,) i32 threshold exponent i (τ = (1+ε)^i)
+    active: jax.Array    # (S_max,) bool
+    sizes: jax.Array     # (S_max,) i32 member counts
+    members: jax.Array   # (S_max, k) i32 member slots
+    m_seen: jax.Array    # () f32 max singleton gain seen
+    lb: jax.Array        # () f32 best-value lower bound (pp only)
+    evals: jax.Array     # () i32 engine-boundary evaluation count
+
+
+def make_spec(k: int, eps: float, variant: str,
+              s_max: Optional[int] = None) -> SieveSpec:
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown sieve variant {variant!r}; one of {VARIANTS}")
+    if k < 1:
+        raise ValueError(f"sieve streaming needs k >= 1, got k={k}")
+    if not 0.0 < eps < 1.0:
+        raise ValueError(f"eps must lie in (0, 1), got {eps}")
+    cap = s_max if s_max is not None else default_capacity(k, eps, variant)
+    width = grid_width_bound(k, eps)
+    if cap < width + 2:
+        raise ValueError(
+            f"s_max={cap} cannot hold the live threshold window "
+            f"(width ≤ {width}, +2 slack required)")
+    return SieveSpec(k, float(eps), int(cap), variant,
+                     float(np.float32(np.log1p(np.float32(eps)))))
+
+
+def grid_width_bound(k: int, eps: float) -> int:
+    """Max #live exponents in [⌈log m/L⌉, ⌊log 2km/L⌋]: ⌊log(2k)/L⌋ + 1."""
+    return int(math.floor(math.log(2 * k) / math.log1p(eps))) + 1
+
+
+def default_capacity(k: int, eps: float, variant: str) -> int:
+    """Slot capacity: the live-window bound plus slack; Salsa's grow-only
+    grid gets headroom for a 16x max-singleton drift before the capacity
+    eviction rule starts firing."""
+    cap = grid_width_bound(k, eps) + 2
+    if variant == "salsa":
+        cap += int(math.ceil(math.log(16.0) / math.log1p(eps)))
+    return max(cap, 4)
+
+
+def init_state(n: int, spec: SieveSpec) -> SieveState:
+    S, k = spec.s_max, spec.k
+    return SieveState(
+        caches=jnp.zeros((S, n), jnp.float32),
+        slot_exp=jnp.full((S,), _EXP_UNSET, jnp.int32),
+        active=jnp.zeros((S,), bool),
+        sizes=jnp.zeros((S,), jnp.int32),
+        members=jnp.full((S, k), -1, jnp.int32),
+        m_seen=jnp.float32(0.0),
+        lb=jnp.float32(0.0),
+        evals=jnp.int32(0),
+    )
+
+
+def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
+                  valid):
+    """The per-element sieve-table transition — ONE definition, pure jnp.
+
+    The host mirror jits this per element; the device engine scans it per
+    block. ``valid=False`` (block padding) makes the whole step a no-op.
+    Returns ``(new_state, accepted_anywhere)``.
+    """
+    k, S = spec.k, spec.s_max
+    L = spec.log1p_eps
+    caches, slot_exp, active, sizes, members, m_seen, lb, evals = state
+
+    # singleton gain Δ(e | ∅) — the grid anchor m = max singleton seen
+    single = jnp.mean(jnp.maximum(d_e0 - dvec, 0.0))
+    new_max = valid & (single > m_seen)
+    m_seen = jnp.where(new_max, single, m_seen)
+
+    # grid rebuild: SieveStreaming/Salsa rebuild only on a new max; ++
+    # re-derives its window every element because LB moves after accepts
+    if spec.variant == "pp":
+        rebuild = valid & (m_seen > 0.0)
+        lo = jnp.maximum(lb, m_seen)
+    else:
+        rebuild = new_max
+        lo = m_seen
+    tiny = jnp.float32(1e-38)  # log(0) guard; rebuild is False while m=0
+    i_lo = jnp.ceil(jnp.log(jnp.maximum(lo, tiny)) / L).astype(jnp.int32)
+    i_hi = jnp.floor(
+        jnp.log(jnp.maximum(2.0 * k * m_seen, tiny)) / L).astype(jnp.int32)
+
+    # masked activation: exponent i lives in slot i mod S_max; a slot whose
+    # assigned exponent changed is reset, one whose exponent survives keeps
+    # its cache/members (the host rebuild's keep-and-add, shape-statically)
+    slots = jnp.arange(S, dtype=jnp.int32)
+    wanted_exp = i_lo + jnp.mod(slots - i_lo, S)
+    wanted = wanted_exp <= i_hi
+    claim = rebuild & wanted & ((slot_exp != wanted_exp) | ~active)
+    if spec.variant == "sieve":
+        active = jnp.where(rebuild, wanted, active)       # window replaces
+    elif spec.variant == "salsa":
+        active = active | (rebuild & wanted)              # grow-only
+    else:  # pp: LB prune τ ≥ lo/(1+ε) ⇔ i ≥ i_lo − 1, then activation
+        active = jnp.where(rebuild, active & (slot_exp >= i_lo - 1), active)
+        active = active | claim
+    slot_exp = jnp.where(claim, wanted_exp, slot_exp)
+    caches = jnp.where(claim[:, None], d_e0[None, :], caches)
+    sizes = jnp.where(claim, 0, sizes)
+    members = jnp.where(claim[:, None], -1, members)
+
+    # offer to every sieve: marginal gain vs each cache, one accept rule
+    gains = jnp.mean(jnp.maximum(caches - dvec[None, :], 0.0), axis=1)
+    taus = jnp.exp(slot_exp.astype(jnp.float32) * L)
+    if spec.variant == "salsa":
+        # dense-threshold schedule: rate 1/2 for the first ⌈k/2⌉ members,
+        # 1/(2e) after — (k+1)//2, so k=1 still gets the early rate
+        rate = jnp.where(sizes < (k + 1) // 2, 0.5, 1.0 / (2.0 * math.e))
+        need = rate * taus / k
+    else:
+        values = L0 - jnp.mean(caches, axis=1)
+        need = (taus / 2.0 - values) / jnp.maximum(k - sizes, 1)
+    accept = valid & active & (sizes < k) & (gains >= need)
+    caches = jnp.where(accept[:, None], jnp.minimum(caches, dvec[None, :]),
+                       caches)
+    members = jnp.where(
+        accept[:, None] & (jnp.arange(k)[None, :] == sizes[:, None]),
+        idx, members)
+    sizes = sizes + accept.astype(jnp.int32)
+    if spec.variant == "pp":
+        vals_new = L0 - jnp.mean(caches, axis=1)
+        lb = jnp.maximum(lb, jnp.max(jnp.where(active, vals_new, -jnp.inf)))
+
+    # engine-boundary accounting: one engine call scores the element against
+    # every live sieve (min. 1 — the singleton gain is always computed)
+    n_active = jnp.sum(active).astype(jnp.int32)
+    evals = evals + jnp.where(valid, jnp.maximum(n_active, 1), 0)
+    state = SieveState(caches, slot_exp, active, sizes, members, m_seen, lb,
+                       evals)
+    return state, jnp.any(accept)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _element_step_jit(state, d_e0, idx, dvec, valid, *, spec):
+    d_e0f = d_e0.astype(jnp.float32)
+    return _element_step(spec, d_e0f, jnp.mean(d_e0f), state, idx, dvec,
+                         valid)
+
+
+@partial(jax.jit, static_argnames=("spec", "counter_key"))
+def _offer_block_scan(state, d_e0, idxb, dmatb, validb, *, spec, counter_key):
+    """Consume a stream block: ONE jitted ``lax.scan`` over its elements."""
+    DEVICE_TRACE_COUNTS[counter_key] += 1
+    d_e0f = d_e0.astype(jnp.float32)
+    L0 = jnp.mean(d_e0f)
+
+    def step(st, xs):
+        idx, dvec, valid = xs
+        return _element_step(spec, d_e0f, L0, st, idx, dvec, valid)
+
+    return jax.lax.scan(step, state, (idxb, dmatb, validb))
+
+
+@jax.jit
+def _table_values(caches, d_e0):
+    """Per-sieve f-values — shared by both engines' ``best`` so equal caches
+    yield bit-equal values."""
+    d_e0f = d_e0.astype(jnp.float32)
+    return jnp.mean(d_e0f) - jnp.mean(caches, axis=1)
+
+
+class _SieveEngineBase:
+    """Block handling and state access shared by both execution plans.
+
+    ``offer`` chunks the payload to ``block_size`` and pads ragged tails, so
+    BOTH plans run the distance executable at the one (block_size, n) shape
+    — the bitwise-parity invariant is structural, not backend luck — and
+    every block reuses one traced executable. Padded elements carry
+    ``valid=False`` (their step is a no-op by construction).
+    """
+
+    def __init__(self, f, spec: SieveSpec, block_size: int = 64):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.f = f
+        self.spec = spec
+        self.block_size = block_size
+        self.state = init_state(f.n, spec)
+        # device state counts in int32; folding into a Python int per offer
+        # keeps unbounded streams (the service's live-sensor case) exact
+        self._evals = 0
+
+    def offer(self, idx, X) -> np.ndarray:
+        idx = np.atleast_1d(np.asarray(idx, np.int32))
+        X = jnp.atleast_2d(jnp.asarray(X))
+        B = self.block_size
+        out = []
+        for s in range(0, len(idx), B):
+            ib, Xb = idx[s:s + B], X[s:s + B]
+            nb = len(ib)
+            dmat = self._distance_rows(jnp.pad(Xb, ((0, B - nb), (0, 0))))
+            idxp = np.full(B, -1, np.int32)
+            idxp[:nb] = ib
+            valid = np.zeros(B, bool)
+            valid[:nb] = True
+            out.append(self._consume(idxp, dmat, valid)[:nb])
+            self._evals += int(np.asarray(self.state.evals))
+            self.state = self.state._replace(evals=jnp.int32(0))
+        return np.concatenate(out) if out else np.zeros(0, bool)
+
+    def best(self) -> tuple[list[int], float]:
+        """Members and value of the best live sieve ([], 0.0 when none)."""
+        active = np.asarray(self.state.active)
+        if not active.any():
+            return [], 0.0
+        vals = np.asarray(_table_values(self.state.caches, self.f.d_e0))
+        vals = np.where(active, vals, -np.inf)
+        b = int(np.argmax(vals))
+        size = int(np.asarray(self.state.sizes)[b])
+        return [int(i) for i in np.asarray(self.state.members)[b, :size]], \
+            float(vals[b])
+
+    def evaluations(self) -> int:
+        return self._evals + int(np.asarray(self.state.evals))
+
+    def member_ids(self) -> list[int]:
+        """Ids present in any live sieve's member table (service retention)."""
+        st = self.state
+        live = np.asarray(st.active)[:, None] & (
+            np.arange(self.spec.k)[None, :] < np.asarray(st.sizes)[:, None])
+        return sorted({int(i) for i in np.asarray(st.members)[live]})
+
+    def _distance_rows(self, X) -> jax.Array:
+        # both engines consume rows from the SAME jitted executable — host
+        # and device decisions see bitwise-identical distances
+        return self.f.point_distances_block(X).astype(jnp.float32)
+
+    def _consume(self, idxp, dmat, valid) -> np.ndarray:
+        raise NotImplementedError
+
+
+class HostSieveMirror(_SieveEngineBase):
+    """The exact array-semantics mirror: one dispatch per element.
+
+    Runs the identical :func:`_element_step` the device scan runs, but jitted
+    per element — the per-element host↔device round-trip the device engine
+    exists to amortize, and the parity reference for it.
+    """
+
+    def _consume(self, idxp, dmat, valid) -> np.ndarray:
+        accepted = np.zeros(len(idxp), bool)
+        for b in range(len(idxp)):
+            if not valid[b]:  # padded no-op step: state provably unchanged
+                continue
+            self.state, acc = _element_step_jit(
+                self.state, self.f.d_e0, jnp.int32(idxp[b]), dmat[b], True,
+                spec=self.spec)
+            accepted[b] = bool(acc)
+        return accepted
+
+
+class DeviceSieveEngine(_SieveEngineBase):
+    """Device-resident sieve table: one scan dispatch per stream block.
+
+    State never leaves the device between blocks (beyond the accept mask
+    and the evaluation-counter fold the block boundary reads anyway)."""
+
+    def __init__(self, f, spec: SieveSpec, block_size: int = 64):
+        super().__init__(f, spec, block_size)
+        self._counter_key = f"sieve_{spec.variant}"
+
+    def _consume(self, idxp, dmat, valid) -> np.ndarray:
+        self.state, acc = _offer_block_scan(
+            self.state, self.f.d_e0, jnp.asarray(idxp), dmat,
+            jnp.asarray(valid), spec=self.spec,
+            counter_key=self._counter_key)
+        return np.asarray(acc)
+
+
+def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
+                      mode: str = "device", s_max: Optional[int] = None,
+                      block_size: int = 64) -> _SieveEngineBase:
+    """Build a sieve engine under an execution plan (``host`` | ``device``),
+    mirroring the selection engine's strategy×plan composition. Both plans
+    take ``block_size`` — it shapes the (padded) distance dispatch, so host
+    and device engines built with the same value run the same executables."""
+    spec = make_spec(k, eps, variant, s_max)
+    if mode == "host":
+        return HostSieveMirror(f, spec, block_size=block_size)
+    if mode == "device":
+        return DeviceSieveEngine(f, spec, block_size=block_size)
+    raise ValueError(f"unknown streaming mode {mode!r}; 'host' or 'device'")

@@ -100,3 +100,19 @@ def test_nonnegative_all_distances(seed, dist):
     s = f.value(V[:3])
     assert s >= -1e-6
     assert f.value(V[:5]) >= s - 1e-5
+
+
+@given(seed=st.integers(0, 40), k=st.integers(2, 3),
+       eps=st.sampled_from([0.1, 0.2]),
+       mode=st.sampled_from(["host", "device"]))
+@settings(max_examples=20, deadline=None)
+def test_streamed_value_within_sieve_bound(seed, k, eps, mode):
+    """SieveStreaming ≥ (1/2 − ε)·OPT ≥ (1/2 − ε)·greedy for any stream
+    order (Badanidiyuru et al.) — on both execution plans."""
+    from repro.core.optimizers import sieve_streaming
+
+    f, V = _f(seed=seed)
+    base = greedy(f, k)
+    res = sieve_streaming(f, k, eps=eps, seed=seed, mode=mode)
+    assert len(res.indices) <= k
+    assert res.value >= (0.5 - eps) * base.value - 1e-5

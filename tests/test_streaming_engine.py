@@ -1,0 +1,225 @@
+"""Streaming sieve engine: host/device parity, sieve-family regressions,
+and the async ingestion service."""
+import asyncio
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ExemplarClustering, StreamIngestionService, greedy
+from repro.core.engine import DEVICE_TRACE_COUNTS
+from repro.core.optimizers import (salsa, sieve_streaming,
+                                   sieve_streaming_pp, three_sieves)
+from repro.core.streaming import (SieveState, _element_step_jit,
+                                  default_capacity, init_state,
+                                  make_sieve_engine, make_spec)
+from repro.data.synthetic import blobs
+
+
+@pytest.fixture(scope="module")
+def f():
+    X, _ = blobs(300, 16, centers=8, seed=1)
+    return ExemplarClustering(jnp.asarray(X))
+
+
+ALGS = {"sieve_streaming": sieve_streaming, "salsa": salsa,
+        "pp": sieve_streaming_pp}
+
+
+@pytest.mark.parametrize("alg", sorted(ALGS))
+def test_sieve_host_device_parity(f, alg):
+    """Host mirror and device scan run the same element step: identical
+    members, values, AND evaluation counts."""
+    host = ALGS[alg](f, 6, eps=0.1, seed=2, mode="host")
+    dev = ALGS[alg](f, 6, eps=0.1, seed=2, mode="device")
+    assert host.indices == dev.indices
+    assert host.evaluations == dev.evaluations
+    np.testing.assert_allclose(host.value, dev.value, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1024, 8192])
+@pytest.mark.parametrize("alg", ["sieve_streaming", "salsa"])
+def test_sieve_parity_at_scale(n, alg):
+    """Acceptance sizes: identical host/device selections and counts."""
+    X, _ = blobs(n, 24, centers=12, seed=13)
+    fn = ExemplarClustering(jnp.asarray(X))
+    host = ALGS[alg](fn, 8, seed=5, mode="host", block_size=128)
+    dev = ALGS[alg](fn, 8, seed=5, mode="device", block_size=128)
+    assert host.indices == dev.indices
+    assert host.evaluations == dev.evaluations
+    np.testing.assert_allclose(host.value, dev.value, atol=1e-6)
+
+
+def test_device_block_size_invariance(f):
+    """Blocking is a pure dispatch optimization: block size (including a
+    ragged tail) must not change decisions or accounting in either mode."""
+    runs = [sieve_streaming(f, 5, eps=0.1, seed=2, mode="device",
+                            block_size=b) for b in (1, 64, 97, 300)]
+    runs.append(sieve_streaming(f, 5, eps=0.1, seed=2, mode="host",
+                                block_size=41))
+    assert all(r.indices == runs[0].indices for r in runs)
+    assert all(r.evaluations == runs[0].evaluations for r in runs)
+
+
+def test_device_sieve_single_trace(f):
+    """One trace per (spec, shapes) signature: repeat runs and ragged tail
+    blocks reuse the same executable (tail blocks are padded, not re-shaped)."""
+    before = DEVICE_TRACE_COUNTS["sieve_sieve"]
+    first = sieve_streaming(f, 5, eps=0.15, seed=4, mode="device",
+                            block_size=77)  # 300 → 3 full + 1 ragged block
+    mid = DEVICE_TRACE_COUNTS["sieve_sieve"]
+    again = sieve_streaming(f, 5, eps=0.15, seed=4, mode="device",
+                            block_size=77)
+    assert mid <= before + 1
+    assert DEVICE_TRACE_COUNTS["sieve_sieve"] == mid
+    assert first.indices == again.indices
+
+
+def test_salsa_k1_applies_early_rate(f):
+    """Regression: the dense schedule's early 1/2 rate must apply to the
+    first ⌈k/2⌉ members — for k=1, sieves were jumping straight to the late
+    1/(2e) rate (``sizes < k // 2`` is never true at k=1)."""
+    n, d = 6, 3
+    V = np.full((n, d), 2.0, np.float32)
+    fn = ExemplarClustering(jnp.asarray(V))
+    spec = make_spec(1, 0.1, "salsa")
+    state = init_state(n, spec)
+    # one armed sieve at τ = (1+ε)^0 = 1, fresh cache, grid frozen (m_seen
+    # high so no rebuild); an element with gain 0.3 sits between the late
+    # rate 1/(2e)·τ ≈ 0.18 (buggy accept) and the early rate τ/2 (reject)
+    state = SieveState(
+        caches=jnp.asarray(fn.d_e0, jnp.float32)[None, :].repeat(
+            spec.s_max, 0),
+        slot_exp=state.slot_exp.at[0].set(0),
+        active=state.active.at[0].set(True),
+        sizes=state.sizes, members=state.members,
+        m_seen=jnp.float32(100.0), lb=state.lb, evals=state.evals)
+    dvec = jnp.asarray(fn.d_e0, jnp.float32) - 0.3
+    new, accepted = _element_step_jit(state, fn.d_e0, jnp.int32(0), dvec,
+                                      True, spec=spec)
+    assert not bool(accepted)
+    assert int(new.sizes[0]) == 0
+    # and a gain past τ/2 is accepted
+    _, accepted = _element_step_jit(state, fn.d_e0, jnp.int32(0),
+                                    jnp.asarray(fn.d_e0) - 0.6, True,
+                                    spec=spec)
+    assert bool(accepted)
+
+
+def test_salsa_k1_end_to_end(f):
+    res = salsa(f, 1, seed=4)
+    base = greedy(f, 1)
+    assert len(res.indices) == 1
+    assert res.value >= 0.5 * base.value
+
+
+def test_three_sieves_counts_only_scored_elements(f):
+    """Regression: once the sieve is full (or unarmed) elements are
+    short-circuited before the gain — ``evaluations`` reflects work done."""
+    res = three_sieves(f, 6, eps=0.1, T=10, seed=3)
+    assert len(res.indices) <= 6
+    assert res.evaluations >= len(res.indices)
+    # the easy-blobs sieve fills well before the stream ends; the old
+    # accounting charged one evaluation per arriving element (== n)
+    assert res.evaluations < f.n
+
+
+def test_capacity_validation():
+    X, _ = blobs(64, 8, centers=4, seed=0)
+    fn = ExemplarClustering(jnp.asarray(X))
+    with pytest.raises(ValueError, match="s_max"):
+        sieve_streaming(fn, 6, eps=0.1, s_max=2)
+    with pytest.raises(ValueError, match="k >= 1"):
+        sieve_streaming(fn, 0)
+    with pytest.raises(ValueError, match="mode"):
+        sieve_streaming(fn, 3, mode="sharded")
+    assert default_capacity(6, 0.1, "salsa") > default_capacity(6, 0.1, "sieve")
+
+
+def test_salsa_capacity_eviction_keeps_parity():
+    """Under capacity pressure the grow-only salsa grid evicts the lowest
+    exponent — identically in both modes (the rule lives in the shared
+    element step)."""
+    X, _ = blobs(200, 8, centers=6, seed=3)
+    fn = ExemplarClustering(jnp.asarray(X))
+    cap = default_capacity(4, 0.1, "sieve")  # too small for salsa's grid
+    host = salsa(fn, 4, seed=6, mode="host", s_max=cap)
+    dev = salsa(fn, 4, seed=6, mode="device", s_max=cap)
+    assert host.indices == dev.indices
+    assert host.evaluations == dev.evaluations
+    assert host.value > 0
+
+
+# ---------------------------------------------------------------------------
+# Ingestion service
+# ---------------------------------------------------------------------------
+
+
+def test_service_matches_streaming_optimizer(f):
+    """Offering V's rows in a fixed order through the service reproduces
+    ``sieve_streaming`` exactly (ids map back through the order)."""
+    X = np.asarray(f.V)
+    order = np.random.default_rng(7).permutation(f.n)
+
+    async def main():
+        async with StreamIngestionService(f, k=6, mode="device",
+                                          block_size=32) as svc:
+            await svc.offer_batch(X[order])
+            await svc.drain()
+            return await svc.snapshot()
+
+    snap = asyncio.run(main())
+    ref = sieve_streaming(f, 6, order=order, mode="device")
+    assert [int(order[i]) for i in snap.indices] == ref.indices
+    assert snap.evaluations == ref.evaluations
+    np.testing.assert_allclose(snap.value, ref.value, atol=1e-6)
+    np.testing.assert_allclose(snap.exemplars, X[order[snap.indices]],
+                               atol=0)
+    assert snap.n_ingested == f.n
+    assert snap.pending == 0
+
+
+def test_service_backpressure_and_midstream_snapshot(f):
+    """A tiny queue bound forces offer-side backpressure; snapshots taken
+    mid-stream observe consistent, monotone state."""
+    X = np.asarray(f.V)
+
+    async def main():
+        svc = StreamIngestionService(f, k=5, mode="host", block_size=8,
+                                     max_pending=4)
+        await svc.start()
+        vals = []
+        for j in range(120):
+            await svc.offer(X[j])
+            if j in (40, 80):
+                await svc.drain()
+                vals.append((await svc.snapshot()).value)
+        await svc.stop()  # drains the tail
+        snap = await svc.snapshot()
+        return vals, snap
+
+    vals, snap = asyncio.run(main())
+    assert snap.n_offered == snap.n_ingested == 120
+    assert all(v > 0 for v in vals)  # mid-stream snapshots see live sieves
+    assert snap.value > 0
+
+
+def test_service_accepts_external_vectors(f):
+    """Stream elements need not be ground-set rows: arbitrary vectors are
+    scored against V and returned as exemplar vectors."""
+    rng = np.random.default_rng(11)
+    base = np.asarray(f.V)[rng.choice(f.n, size=90)]
+    stream = (base + 0.05 * rng.normal(size=base.shape)).astype(np.float32)
+
+    async def main():
+        async with StreamIngestionService(f, k=4, mode="device",
+                                          block_size=16) as svc:
+            ids = await svc.offer_batch(stream)
+            await svc.drain()
+            return ids, await svc.snapshot()
+
+    ids, snap = asyncio.run(main())
+    assert ids == list(range(90))
+    assert 1 <= len(snap.indices) <= 4
+    np.testing.assert_allclose(snap.exemplars, stream[snap.indices], atol=0)
+    assert snap.n_accepted >= len(snap.indices)
