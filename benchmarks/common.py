@@ -19,6 +19,11 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     return float(np.median(ts))
 
 
-def emit(rows: list[tuple[str, float, str]]):
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+def emit(rows: list[tuple]):
+    """Print CSV rows. Rows are ``(name, us, derived)`` or, for entries that
+    score through a non-default evaluation backend, ``(name, us, derived,
+    backend)`` — the backend column feeds ``run.py --json`` attribution."""
+    for row in rows:
+        name, us, derived = row[0], row[1], row[2]
+        backend = row[3] if len(row) > 3 else "jnp"
+        print(f"{name},{us:.1f},{derived},{backend}")

@@ -52,6 +52,6 @@ def run(quick: bool = False):
         iters = 1 if "pallas" in name else 3
         t = time_call(lambda cfg=cfg: evaluate_multiset(V, pk, cfg),
                       iters=iters)
-        rows.append((name, t, ""))
+        rows.append((name, t, "", cfg.backend))
     emit(rows)
     return rows

@@ -12,8 +12,12 @@ CSV rows: name,us_per_call,derived. Mapping to the paper:
   streaming       — sieve family: per-element host loop vs device block offer
 
 ``--json`` additionally writes the rows as a machine-readable artifact
-(``{module: [{name, us_per_call, derived}, ...]}``) so CI can accumulate a
-perf trajectory across PRs. ``--only`` takes a comma-separated module list.
+(``{module: [{name, us_per_call, derived, backend}, ...]}``) so CI can
+accumulate a perf trajectory across PRs; ``backend`` records the evaluation
+backend each entry scored through ("jnp" unless the module tagged the row
+"pallas"/"pallas_interpret"), so BENCH_*.json trajectories can attribute
+speedups to the kernel wiring. ``--only`` takes a comma-separated module
+list.
 """
 from __future__ import annotations
 
@@ -34,14 +38,16 @@ def main() -> None:
                     help="also write rows to PATH as JSON (CI artifact)")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,backend")
     collected: dict[str, list[dict]] = {}
     for m in mods:
         mod = importlib.import_module(f"benchmarks.{m}")
         rows = mod.run(quick=args.quick)
         collected[m] = [
-            {"name": name, "us_per_call": us, "derived": derived}
-            for name, us, derived in (rows or [])
+            {"name": row[0], "us_per_call": row[1], "derived": row[2],
+             # 4th column = the evaluation backend the entry scored through
+             "backend": row[3] if len(row) > 3 else "jnp"}
+            for row in (rows or [])
         ]
     if args.json:
         with open(args.json, "w") as fh:

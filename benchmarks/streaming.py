@@ -11,10 +11,11 @@ from __future__ import annotations
 
 import time
 
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core import ExemplarClustering
+from repro.core import EvalConfig, ExemplarClustering
 from repro.core.optimizers import salsa, sieve_streaming
 from repro.data.synthetic import blobs
 
@@ -47,5 +48,16 @@ def run(quick: bool = False):
         rows.append((f"stream_{name}_device_n{n}", t_dev,
                      f"elements_per_sec={eps_dev:.0f};"
                      f"speedup={eps_dev / eps_host:.2f}x;agree={agree}"))
+    # device plan with the fused sieve-gain kernel in the scan body (the
+    # (S_max, n) relu intermediate never reaches HBM); interpret on CPU
+    kb = "pallas" if jax.default_backend() != "cpu" else "pallas_interpret"
+    fk = ExemplarClustering(f.V, EvalConfig(backend=kb))
+    r_k, t_k, eps_k = _throughput(
+        lambda: sieve_streaming(fk, k, seed=5, mode="device", block_size=64),
+        n)
+    r_j = sieve_streaming(f, k, seed=5, mode="device", block_size=64)
+    rows.append((f"stream_sieve_device_kernel_n{n}", t_k,
+                 f"elements_per_sec={eps_k:.0f};"
+                 f"agree={r_k.indices == r_j.indices}", kb))
     emit(rows)
     return rows

@@ -35,8 +35,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import distances as dist_mod
 from repro.core.engine import (DEVICE_TRACE_COUNTS, _device_block_m,
-                               _score_blocked, celf_max_iters,
-                               make_lazy_step, make_rounds_step)
+                               _score_blocked, drive_selection_scan)
 from repro.core.evaluator import EvalConfig
 from repro.core.functions import gains_formula
 from repro.core.multiset import PackedMultiset
@@ -161,6 +160,8 @@ def make_selection_scan(
     distance: str,
     policy_name: str,
     counter_key: str,
+    backend: str = "jnp",    # "jnp" | "pallas" | "pallas_interpret"
+    rbf_gamma: Optional[float] = None,
 ):
     """Build (and cache) the jitted mesh-sharded k-round selection scan.
 
@@ -171,17 +172,31 @@ def make_selection_scan(
     is (k, m) int32 for stochastic, ONE (1, m) row for dense (closed over by
     every round, never replicated k times), (1, 0) for lazy. The builder is
     cached per (mesh, statics) so repeat runs reuse one traced executable.
+
+    On ``backend="pallas"``/``"pallas_interpret"`` each shard scores its
+    local (n_loc, m) tile through the fused Pallas gain kernels
+    (:func:`repro.kernels.ops.fused_gain_update` for dense/stochastic
+    rounds — the winner fold rides in-tile — and ``marginal_gain`` for CELF
+    re-scoring). The kernels already normalize by the *global* ``n_total``,
+    so the per-shard outputs are exact gain partials and the one-psum-per-
+    batch collective pattern is byte-identical to the jnp path. Shard-tile
+    blocking note: ``block_m`` bounds the *jnp* path's streamed HBM tile
+    only; the kernels tile their own VMEM blocks from the local shard height
+    (padding n_loc/m to block multiples in-wrapper), so the MXU tiling is
+    per-shard and never sees mesh topology.
     """
     axes = tuple(data_axes)
     key = (mesh, axes, kind, k, top_b, n_total, block_m, distance,
-           policy_name, counter_key)
+           policy_name, counter_key, backend, rbf_gamma)
     if key in _SELECTION_SCAN_CACHE:
         return _SELECTION_SCAN_CACHE[key]
     policy = resolve_policy(policy_name)
     pair = dist_mod.resolve_pairwise(distance)
+    use_kernel = backend in ("pallas", "pallas_interpret")
+    if use_kernel:
+        from repro.kernels import ops as kops
 
     def local_scan(V_loc, pool, d_e0_loc, cand_rounds, w0):
-        n_pool = pool.shape[0]
         cache0 = d_e0_loc.astype(jnp.float32)
         L0 = jax.lax.psum(jnp.sum(cache0), axes) / n_total
 
@@ -189,58 +204,58 @@ def make_selection_scan(
             dw = pair(V_loc, w[None, :], policy)[:, 0]
             return jnp.minimum(cache, dw.astype(jnp.float32))
 
-        def score_psum(cache, C):
-            """Global gains of replicated candidates C + global mean cache.
-
-            The per-shard gain partials stream in (n_loc, block_m) tiles —
-            no shard ever materializes an (n_loc, m) distance block — and
-            the (m,) partials plus the shard's cache row-sum ride ONE psum:
-            this call is the scored batch's single O(m)-byte collective.
-            """
-            g_part = _score_blocked(V_loc, C, cache, pair, policy, block_m,
-                                    n_total=n_total)
+        def psum_gains_mean(g_part, cache):
+            """ONE O(m)-byte collective per scored batch: the (m,) per-shard
+            gain partials plus the shard's cache row-sum ride one psum."""
             payload = jnp.concatenate(
                 [g_part.astype(jnp.float32),
                  (jnp.sum(cache) / n_total)[None]])
             out = jax.lax.psum(payload, axes)
             return out[:-1], out[-1]
 
-        if kind == "lazy":
-            # the shared CELF round body; every shard agrees on the loop's
+        def score_part(cache, C):
+            # per-shard gain partials: the kernel path tiles VMEM blocks
+            # itself, the jnp path streams (n_loc, block_m) tiles — neither
+            # materializes an (n_loc, m) distance block on any shard
+            if use_kernel:
+                return kops.marginal_gain(
+                    V_loc, C, cache, policy=policy, rbf_gamma=rbf_gamma,
+                    interpret=(backend != "pallas"), n_total=n_total)
+            return _score_blocked(V_loc, C, cache, pair, policy, block_m,
+                                  n_total=n_total)
+
+        def score_mean(cache, C):
+            # CELF re-scoring: every shard agrees on the while-loop's
             # iteration count because the bound state is replicated
             # (post-psum gains), so the per-iteration collectives line up
-            step = make_lazy_step(pool, fold, score_psum, L0, top_b,
-                                  celf_max_iters(n_total, top_b))
-            ub0, _ = score_psum(cache0, pool)
-            init = (cache0, jnp.zeros((n_pool,), bool),
-                    w0.astype(pool.dtype), ub0)
-            (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
-                step, init, None, length=k)
-            n_scored = jnp.asarray(n_pool, jnp.int32) + jnp.sum(scored)
+            return psum_gains_mean(score_part(cache, C), cache)
+
+        if use_kernel:
+
+            def fold_score_mean(cache, w_prev, C):
+                # fused dense/stochastic round: the winner fold happens
+                # inside the kernel on the local shard tile
+                g_part, cache = kops.fused_gain_update(
+                    V_loc, C, cache, w_prev, policy=policy,
+                    rbf_gamma=rbf_gamma, interpret=(backend != "pallas"),
+                    n_total=n_total)
+                gains, mean_c = psum_gains_mean(g_part, cache)
+                return gains, cache, mean_c
         else:
 
             def fold_score_mean(cache, w_prev, C):
                 cache = fold(cache, w_prev)
-                gains, mean_c = score_psum(cache, C)
+                gains, mean_c = score_mean(cache, C)
                 return gains, cache, mean_c
 
-            step = make_rounds_step(pool, fold_score_mean, L0)
-            init = (cache0, jnp.zeros((n_pool,), bool), w0.astype(pool.dtype))
-            if kind == "dense":
-                cand_row = cand_rounds[0]
-                (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
-                    lambda carry, _: step(carry, cand_row), init, None,
-                    length=k)
-            else:
-                (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
-                    step, init, cand_rounds)
-            n_scored = jnp.sum(scored)
+        def mean_of(cache):
+            return jax.lax.psum(jnp.sum(cache) / n_total, axes)
 
-        # one final fold + scalar psum for the last trajectory point
-        cache = fold(cache, w_last)
-        final_val = L0 - jax.lax.psum(jnp.sum(cache) / n_total, axes)
-        traj = jnp.concatenate([vals[1:], final_val[None]])
-        return sel.astype(jnp.int32), traj, n_scored
+        return drive_selection_scan(
+            kind=kind, k=k, top_b=top_b, n_global=n_total, pool=pool,
+            cand_rounds=cand_rounds, cache0=cache0, w0=w0, L0=L0, fold=fold,
+            score_mean=score_mean, fold_score_mean=fold_score_mean,
+            mean_of=mean_of)
 
     smapped = shard_map(
         local_scan,
@@ -273,6 +288,8 @@ def run_sharded_selection(
     block_m: Optional[int] = None,
     mesh: Optional[Mesh] = None,
     data_axes: Sequence[str] = ("data",),
+    backend: str = "jnp",
+    rbf_gamma: Optional[float] = None,
 ):
     """Place operands on the mesh and run the sharded selection scan.
 
@@ -321,7 +338,7 @@ def run_sharded_selection(
     fn = make_selection_scan(
         mesh, axes, kind=kind, k=k, top_b=top_b, n_total=n, block_m=bm,
         distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
-        counter_key=counter_key)
+        counter_key=counter_key, backend=backend, rbf_gamma=rbf_gamma)
     return fn(V_sh, pool, d_e0_sh, cand_rounds, w0)
 
 

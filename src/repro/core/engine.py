@@ -288,6 +288,68 @@ def make_lazy_step(pool, fold, score_mean, L0, top_b: int, max_iters: int):
 
 
 # ---------------------------------------------------------------------------
+# Shared scan driver — ub0 seeding, n_scored accounting, final fold, and
+# trajectory concat were once duplicated between the single-device scan below
+# and distributed.make_selection_scan; both now supply only callbacks.
+# ---------------------------------------------------------------------------
+
+
+def drive_selection_scan(*, kind, k, top_b, n_global, pool, cand_rounds,
+                         cache0, w0, L0, fold, score_mean, fold_score_mean,
+                         mean_of):
+    """Run k selection rounds for any execution plan, given its callbacks.
+
+    The plan supplies only how a candidate batch is scored and how the
+    winner folds into the (possibly sharded) cache; everything else — CELF's
+    ub0 bound seeding, the dense one-row closure vs the stochastic per-round
+    scan xs, ``n_scored`` accounting, the final fold, and the trajectory
+    concat — is plan-independent and lives here, once.
+
+    Callbacks (single-device: plain jnp/kernel ops; sharded: the same ops on
+    the local shard with ONE psum per scored batch riding the gains):
+
+    * ``fold(cache, w) -> cache`` — fold a winner's distances into the cache
+      (used per lazy round and for the final trajectory point).
+    * ``score_mean(cache, C) -> (gains, mean_cache)`` — score a candidate
+      batch against the already-folded cache (lazy rescore + ub0 seeding).
+    * ``fold_score_mean(cache, w_prev, C) -> (gains, cache, mean_cache)`` —
+      the fused dense/stochastic round step (on Pallas backends the fold
+      rides inside the gain kernel).
+    * ``mean_of(cache) -> scalar`` — global mean of the cache.
+
+    Returns ``(sel, traj, n_scored)`` per-round stacked outputs.
+    """
+    if kind == "lazy":
+        step = make_lazy_step(pool, fold, score_mean, L0, top_b,
+                              celf_max_iters(n_global, top_b))
+        # round -1: fresh singleton gains seed the bounds (counts one eval
+        # per pool row, exactly like host CELF's initial full scoring)
+        ub0, _ = score_mean(cache0, pool)
+        init = (cache0, jnp.zeros(pool.shape[:1], bool),
+                w0.astype(pool.dtype), ub0)
+        (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
+            step, init, None, length=k)
+        n_scored = jnp.asarray(pool.shape[0], jnp.int32) + jnp.sum(scored)
+    else:
+        step = make_rounds_step(pool, fold_score_mean, L0)
+        init = (cache0, jnp.zeros(pool.shape[:1], bool), w0.astype(pool.dtype))
+        if kind == "dense":
+            # one candidate row closed over by all k rounds
+            cand_row = cand_rounds[0]
+            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                lambda carry, _: step(carry, cand_row), init, None, length=k)
+        else:
+            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                step, init, cand_rounds)
+        n_scored = jnp.sum(scored)
+
+    # one final fold for the last trajectory point
+    final_val = L0 - mean_of(fold(cache, w_last))
+    traj = jnp.concatenate([vals[1:], final_val[None]])
+    return sel.astype(jnp.int32), traj, n_scored
+
+
+# ---------------------------------------------------------------------------
 # Single-device one-dispatch scan (plans: device)
 # ---------------------------------------------------------------------------
 
@@ -316,10 +378,14 @@ def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
     DEVICE_TRACE_COUNTS[counter_key] += 1
     policy = resolve_policy(policy_name)
     pair = dist_mod.resolve_pairwise(distance)
-    n = V.shape[0]
     d_e0f = d_e0.astype(jnp.float32)
     L0 = jnp.mean(d_e0f)
 
+    def fold(cache, w):
+        dw = pair(V, w[None, :], policy)[:, 0]
+        return jnp.minimum(cache, dw.astype(jnp.float32))
+
+    score_mean = fold_score_mean = None
     if kind == "lazy":
         use_kernel = backend in ("pallas", "pallas_interpret")
         if use_kernel:
@@ -334,22 +400,9 @@ def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
             def score(cache, C):
                 return _score_blocked(V, C, cache, pair, policy, block_m)
 
-        def fold(cache, w):
-            dw = pair(V, w[None, :], policy)[:, 0]
-            return jnp.minimum(cache, dw.astype(jnp.float32))
-
         def score_mean(cache, C):
             return score(cache, C), jnp.mean(cache)
 
-        step = make_lazy_step(V, fold, score_mean, L0, top_b,
-                              celf_max_iters(n, top_b))
-        # round -1: fresh singleton gains seed the bounds (counts n evals,
-        # exactly like the host CELF's initial full scoring)
-        ub0 = score(d_e0f, V)
-        init = (d_e0f, jnp.zeros((n,), bool), w0.astype(V.dtype), ub0)
-        (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
-            step, init, None, length=k)
-        n_scored = jnp.asarray(n, jnp.int32) + jnp.sum(scored)
     else:
         # no outer candidate padding: _score_blocked (jnp) and the fused
         # kernel (pallas) both pad internally, so the step construction is
@@ -361,23 +414,11 @@ def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
             gains, cache = fold_and_score(cache, w_prev, C)
             return gains, cache, jnp.mean(cache)
 
-        step = make_rounds_step(V, fold_score_mean, L0)
-        init = (d_e0f, jnp.zeros((n,), bool), w0.astype(V.dtype))
-        if kind == "dense":
-            # one candidate row closed over by all k rounds
-            cand_row = cand_rounds[0]
-            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
-                lambda carry, _: step(carry, cand_row), init, None, length=k)
-        else:
-            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
-                step, init, cand_rounds)
-        n_scored = jnp.sum(scored)
-
-    # one final fold for the last trajectory point
-    dw = pair(V, w_last[None, :], policy)[:, 0]
-    final_val = L0 - jnp.mean(jnp.minimum(cache, dw.astype(jnp.float32)))
-    traj = jnp.concatenate([vals[1:], final_val[None]])
-    return sel.astype(jnp.int32), traj, n_scored
+    return drive_selection_scan(
+        kind=kind, k=k, top_b=top_b, n_global=V.shape[0], pool=V,
+        cand_rounds=cand_rounds, cache0=d_e0f, w0=w0, L0=L0, fold=fold,
+        score_mean=score_mean, fold_score_mean=fold_score_mean,
+        mean_of=jnp.mean)
 
 
 # ---------------------------------------------------------------------------
@@ -449,14 +490,11 @@ def run_selection(
     elif plan == "device_sharded":
         from repro.core import distributed as dist_engine
 
-        if backend != "jnp":
-            raise ValueError(
-                "plan='device_sharded' runs the jnp scoring path; pallas "
-                "kernels are per-device and compose with mode='device'")
         sel, traj, n_scored = dist_engine.run_sharded_selection(
             f, jnp.asarray(cand_rounds, jnp.int32), w0, kind=kind, k=k,
             top_b=top_b, counter_key=counter_key, m_widest=m_widest,
-            block_m=block_m, mesh=mesh, data_axes=data_axes)
+            block_m=block_m, mesh=mesh, data_axes=data_axes,
+            backend=backend, rbf_gamma=rbf_gamma)
     else:
         raise ValueError(f"unknown execution plan {plan!r}")
 

@@ -37,7 +37,10 @@ Parity: :func:`_element_step` is the ONE definition of the per-element
 transition, written in pure ``jax.numpy``. The host mirror jits it per
 element (the honest per-element dispatch round-trip the device engine
 replaces); the device engine runs the identical function inside the per-block
-scan. Both consume distance rows from the same
+scan. On kernel backends (``SieveSpec.backend``) the step's relu-mean gains
+route through the fused table × element Pallas kernel
+(:func:`repro.kernels.ops.sieve_gains`) — in BOTH plans, so the parity
+argument is unchanged. Both consume distance rows from the same
 ``ExemplarClustering.point_distances_block`` executable, so host and device
 see bitwise-identical inputs and — all float reductions being the same HLO —
 make identical accept decisions, select identical members, and report
@@ -70,6 +73,12 @@ class SieveSpec(NamedTuple):
     s_max: int
     variant: str        # "sieve" | "pp" | "salsa"
     log1p_eps: float    # np.float32(log1p(eps)) — the ONE grid-log constant
+    #: scoring backend for the element step's relu-mean gains: "jnp" runs the
+    #: plain (S_max, n) reduction; "pallas"/"pallas_interpret" run the fused
+    #: table × element kernel (:func:`repro.kernels.ops.sieve_gains`). Part
+    #: of the spec (not the engine) so the host mirror and the device scan
+    #: share ONE definition per backend — parity by construction either way.
+    backend: str = "jnp"
 
 
 class SieveState(NamedTuple):
@@ -90,13 +99,18 @@ class SieveState(NamedTuple):
 
 
 def make_spec(k: int, eps: float, variant: str,
-              s_max: Optional[int] = None) -> SieveSpec:
+              s_max: Optional[int] = None,
+              backend: str = "jnp") -> SieveSpec:
     if variant not in VARIANTS:
         raise ValueError(f"unknown sieve variant {variant!r}; one of {VARIANTS}")
     if k < 1:
         raise ValueError(f"sieve streaming needs k >= 1, got k={k}")
     if not 0.0 < eps < 1.0:
         raise ValueError(f"eps must lie in (0, 1), got {eps}")
+    if backend not in ("jnp", "pallas", "pallas_interpret"):
+        raise ValueError(
+            f"unknown sieve backend {backend!r}; "
+            f"'jnp', 'pallas' or 'pallas_interpret'")
     cap = s_max if s_max is not None else default_capacity(k, eps, variant)
     width = grid_width_bound(k, eps)
     if cap < width + 2:
@@ -104,7 +118,7 @@ def make_spec(k: int, eps: float, variant: str,
             f"s_max={cap} cannot hold the live threshold window "
             f"(width ≤ {width}, +2 slack required)")
     return SieveSpec(k, float(eps), int(cap), variant,
-                     float(np.float32(np.log1p(np.float32(eps)))))
+                     float(np.float32(np.log1p(np.float32(eps)))), backend)
 
 
 def grid_width_bound(k: int, eps: float) -> int:
@@ -148,8 +162,23 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
     L = spec.log1p_eps
     caches, slot_exp, active, sizes, members, m_seen, lb, evals = state
 
-    # singleton gain Δ(e | ∅) — the grid anchor m = max singleton seen
-    single = jnp.mean(jnp.maximum(d_e0 - dvec, 0.0))
+    # singleton gain Δ(e | ∅) — the grid anchor m = max singleton seen.
+    # Kernel backends score the whole table in ONE fused pass up front:
+    # row 0 is d_e0 (the empty-set cache, whose gain IS the singleton),
+    # rows 1: are the pre-rebuild sieve caches. A slot the rebuild below
+    # claims is reset to exactly d_e0, so its post-rebuild gain is the
+    # singleton — ``where(claim, single, ...)`` recovers the post-rebuild
+    # gains without a second kernel pass.
+    use_kernel = spec.backend != "jnp"
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        g_all = kops.sieve_gains(
+            jnp.concatenate([d_e0[None, :], caches], axis=0), dvec,
+            interpret=(spec.backend != "pallas"))
+        single, gains_pre = g_all[0], g_all[1:]
+    else:
+        single = jnp.mean(jnp.maximum(d_e0 - dvec, 0.0))
     new_max = valid & (single > m_seen)
     m_seen = jnp.where(new_max, single, m_seen)
 
@@ -185,8 +214,12 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
     sizes = jnp.where(claim, 0, sizes)
     members = jnp.where(claim[:, None], -1, members)
 
-    # offer to every sieve: marginal gain vs each cache, one accept rule
-    gains = jnp.mean(jnp.maximum(caches - dvec[None, :], 0.0), axis=1)
+    # offer to every sieve: marginal gain vs each (post-rebuild) cache, one
+    # accept rule
+    if use_kernel:
+        gains = jnp.where(claim, single, gains_pre)
+    else:
+        gains = jnp.mean(jnp.maximum(caches - dvec[None, :], 0.0), axis=1)
     taus = jnp.exp(slot_exp.astype(jnp.float32) * L)
     if spec.variant == "salsa":
         # dense-threshold schedule: rate 1/2 for the first ⌈k/2⌉ members,
@@ -355,12 +388,22 @@ class DeviceSieveEngine(_SieveEngineBase):
 
 def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
                       mode: str = "device", s_max: Optional[int] = None,
-                      block_size: int = 64) -> _SieveEngineBase:
+                      block_size: int = 64,
+                      backend: Optional[str] = None) -> _SieveEngineBase:
     """Build a sieve engine under an execution plan (``host`` | ``device``),
     mirroring the selection engine's strategy×plan composition. Both plans
     take ``block_size`` — it shapes the (padded) distance dispatch, so host
-    and device engines built with the same value run the same executables."""
-    spec = make_spec(k, eps, variant, s_max)
+    and device engines built with the same value run the same executables.
+
+    ``backend`` picks the element step's scoring path (``None`` inherits
+    ``f.cfg.backend``): kernel backends run the fused table × element
+    relu-mean (:func:`repro.kernels.ops.sieve_gains`) instead of the plain
+    jnp reduction — in BOTH plans, so parity stays structural.
+    """
+    if backend is None:
+        backend = f.cfg.backend \
+            if f.cfg.backend in ("pallas", "pallas_interpret") else "jnp"
+    spec = make_spec(k, eps, variant, s_max, backend=backend)
     if mode == "host":
         return HostSieveMirror(f, spec, block_size=block_size)
     if mode == "device":

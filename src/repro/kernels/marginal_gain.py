@@ -20,7 +20,17 @@ Two kernels:
   column never re-materializes in HBM (only the (n,) cache itself, which is
   required state, is written back).
 
-Both kernels normalize by an explicit ``n_total`` rather than ``V.shape[0]``:
+A third kernel serves the streaming sieve engine:
+
+* :func:`sieve_gain_eval` — the fused relu-mean of a whole sieve cache
+  *table* against one stream element's distance row: for every table row r,
+  ``|V|⁻¹ Σ_i relu(T[r, i] − dvec[i])``. The (S, n) relu intermediate the
+  jnp scan body materializes per element never exists; table tiles stream
+  past the resident (Bs, 1) accumulator exactly like :func:`gain_eval`
+  streams V tiles past the gain block. No matmul (the distances are already
+  computed) — this is a VPU reduction kernel, fused for HBM traffic.
+
+All kernels normalize by an explicit ``n_total`` rather than ``V.shape[0]``:
 passed the *global* ground-set size, they are callable on one row-shard of a
 mesh-sharded V (cache sharded alongside), and the per-shard outputs are exact
 gain partials that an O(m) ``psum`` turns into the global gains — the
@@ -159,3 +169,48 @@ def gain_update_eval(
         ),
         interpret=interpret,
     )(V, C, cache, winner)
+
+
+def _sieve_gain_kernel(t_ref, dvec_ref, out_ref, *, n_total: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    t = t_ref[...].astype(jnp.float32)               # (Bs, Bn) cache rows
+    dv = dvec_ref[...].astype(jnp.float32)           # (1, Bn) element row
+    g = jnp.maximum(t - dv, 0.0)
+    out_ref[...] += (jnp.sum(g, axis=1) / n_total)[:, None]
+
+
+def sieve_gain_eval(
+    T: jax.Array,          # (s_pad, n_pad) float32 cache-table rows
+    dvec: jax.Array,       # (1, n_pad) float32 distance row of one element
+    *,
+    n_total: int,
+    block_s: int,
+    block_n: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (s_pad, 1) float32 per-row relu-mean gains.
+
+    Rows are arbitrary min-distance caches (live sieves, stale slots, or the
+    ``d_e0`` empty-set cache whose gain is the singleton Δ(e | ∅)); callers
+    mask rows downstream. Zero-padded rows/columns contribute exactly 0
+    (``relu(0 − d) = 0`` for d ≥ 0), so padding never changes a gain.
+    """
+    s_pad, n_pad = T.shape
+    grid = (s_pad // block_s, n_pad // block_n)
+    kern = functools.partial(_sieve_gain_kernel, n_total=n_total)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_s, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_s, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(T, dvec)

@@ -293,3 +293,40 @@ def fused_gain_update(
         V, C, mincache, winner, policy=policy, interpret=interpret,
         rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
         block_n=bn, block_m=bm)
+
+
+# ---------------------------------------------------------------------------
+# sieve_gain — streaming sieve engine's fused table × element scoring
+# ---------------------------------------------------------------------------
+
+
+def sieve_gains(
+    table: jax.Array,      # (r, n) float32 min-distance cache rows
+    dvec: jax.Array,       # (n,) float32 one element's distances to V
+    *,
+    n_total: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    block_s: int = 64,
+    block_n: int = 512,
+) -> jax.Array:
+    """Per-row relu-mean gains of a cache table vs one stream element — (r,).
+
+    Row r gets ``n_total⁻¹ Σ_i relu(table[r, i] − dvec[i])``: row = a sieve's
+    min-distance cache → its marginal gain Δ(e | S_r); row = ``d_e0`` → the
+    singleton gain Δ(e | ∅). Unlike the jnp scan body, the (r, n) relu
+    intermediate never reaches HBM. NOT jit-wrapped: the streaming engine
+    traces it inside its per-block scan (and the host mirror inside the
+    per-element step), so a wrapper jit would only add dispatch layers.
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    r, n = table.shape
+    bs = min(block_s, _round_up(r, SUBLANE))
+    bn = min(block_n, _round_up(n, LANE))
+    Tp = _pad_axis(_pad_axis(table.astype(jnp.float32), _round_up(r, bs), 0),
+                   _round_up(n, bn), 1)
+    dp = _pad_axis(dvec.astype(jnp.float32), _round_up(n, bn), 0)[None, :]
+    out = _mg.sieve_gain_eval(
+        Tp, dp, n_total=n_total if n_total is not None else n,
+        block_s=bs, block_n=bn, interpret=interpret)
+    return out[:r, 0]

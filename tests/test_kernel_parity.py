@@ -1,19 +1,36 @@
-"""Pallas-vs-oracle parity on shapes that exercise the padding path.
+"""Pallas-vs-oracle parity on shapes that exercise the padding path, plus
+the precision-policy sweep over the gain kernels.
 
 Unlike test_kernels.py (hypothesis shape sweeps, skipped when the optional
 dep is absent), these run unconditionally: ragged ``lengths`` with n, l, d
 all *not* divisible by the kernel block sizes, so every pad/mask branch in
-``kernels/ops.py`` is hit.
+``kernels/ops.py`` is hit. The precision sweep runs every kernel parity
+check at fp32/bf16/fp16 with per-dtype tolerances, so the half-precision
+speedup path (paper §V-B) is exercised in CI instead of only fp32.
 """
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EvalConfig, evaluate_multiset
+from repro.core import EvalConfig, ExemplarClustering, evaluate_multiset
 from repro.core.multiset import PackedMultiset
+from repro.core.optimizers import greedy, lazy_greedy
+from repro.data.synthetic import blobs
 
 # n, l, k, d chosen indivisible by LANE(128)/SUBLANE(8)/block_n/block_l
 RAGGED_SHAPES = [(137, 13, 5, 19), (257, 21, 7, 33), (65, 9, 3, 129)]
+
+# Per-policy tolerance for kernel-vs-jnp AT THE SAME POLICY (both sides
+# round inputs/products identically; only reduction/tiling order differs, so
+# the band scales with the compute dtype's eps × the blobs problem scale) and
+# for policy-vs-fp32 (the paper's §V-B precision-study question: how much
+# does half-precision evaluation move the objective?). bf16 keeps 8 mantissa
+# bits (eps ≈ 7.8e-3), fp16 has 11 (eps ≈ 9.8e-4), both accumulate fp32.
+POLICY_TOLS = {
+    "fp32": {"kernel_atol": 1e-5, "vs_fp32_atol": 1e-5},
+    "bf16": {"kernel_atol": 5e-2, "vs_fp32_atol": 2e-1},
+    "fp16": {"kernel_atol": 1e-2, "vs_fp32_atol": 3e-2},
+}
 
 
 def _ragged_problem(n, l, k, d, seed):
@@ -41,6 +58,71 @@ def test_fused_pallas_matches_jnp_oracle_ragged(variant):
         V, pk, EvalConfig(mode="fused", backend="pallas_interpret",
                           kernel_variant=variant)))
     np.testing.assert_allclose(got, oracle, atol=1e-4)
+
+
+@pytest.mark.parametrize("policy", sorted(POLICY_TOLS))
+def test_gain_kernels_precision_sweep(policy):
+    """marginal_gain + fused_gain_update at each PrecisionPolicy: the kernel
+    must match the jnp path run at the SAME policy within the dtype band,
+    and the policy itself must stay within the precision-study band of the
+    fp32 oracle (non-vacuous: distances are computed in the low precision)."""
+    from repro.core import distances as dist_mod
+    from repro.core.precision import resolve as resolve_policy
+    from repro.kernels import ops
+
+    tol = POLICY_TOLS[policy]
+    rng = np.random.default_rng(17)
+    n, m, d = 133, 41, 21
+    V = jnp.asarray((rng.normal(size=(n, d)) + 1.5).astype(np.float32))
+    C = V[:m]
+    cache = jnp.asarray(rng.uniform(1.0, 5.0, size=n).astype(np.float32))
+    w = V[n // 2]
+    pol = resolve_policy(policy)
+    pair = dist_mod.resolve_pairwise("sqeuclidean")
+
+    def jnp_gains(at):
+        D = pair(V, C, at)
+        return np.asarray(jnp.sum(
+            jnp.maximum(cache[:, None] - D, 0.0), axis=0) / n)
+
+    got = np.asarray(ops.marginal_gain(V, C, cache, policy=pol,
+                                       interpret=True))
+    np.testing.assert_allclose(got, jnp_gains(pol), atol=tol["kernel_atol"])
+    np.testing.assert_allclose(got, jnp_gains(resolve_policy("fp32")),
+                               atol=tol["vs_fp32_atol"])
+
+    # fused fold-and-score vs explicit jnp fold + score at the same policy
+    dw = pair(V, w[None, :], pol)[:, 0]
+    cache_f = jnp.minimum(cache, dw.astype(jnp.float32))
+    D = pair(V, C, pol)
+    g_ref = np.asarray(jnp.sum(
+        jnp.maximum(cache_f[:, None] - D, 0.0), axis=0) / n)
+    g, nc = ops.fused_gain_update(V, C, cache, w, policy=pol, interpret=True)
+    np.testing.assert_allclose(np.asarray(nc), np.asarray(cache_f),
+                               atol=tol["kernel_atol"])
+    np.testing.assert_allclose(np.asarray(g), g_ref, atol=tol["kernel_atol"])
+
+
+@pytest.mark.parametrize("policy", sorted(POLICY_TOLS))
+def test_engine_selection_precision_sweep(policy):
+    """End-to-end half-precision engine runs: host and device plans must
+    still pick identical exemplars at each policy (same kernel scoring, same
+    rounding), and the achieved value must sit within the precision-study
+    band of the fp32 run."""
+    X, _ = blobs(96, 8, centers=4, seed=7)
+    fp = ExemplarClustering(
+        jnp.asarray(X), EvalConfig(policy=policy, backend="pallas_interpret"))
+    f32 = ExemplarClustering(jnp.asarray(X))
+    ref = greedy(f32, 4, mode="device")
+    host = greedy(fp, 4, mode="host")
+    dev = greedy(fp, 4, mode="device")
+    assert host.indices == dev.indices
+    np.testing.assert_allclose(
+        dev.value, ref.value, atol=POLICY_TOLS[policy]["vs_fp32_atol"])
+    lh = lazy_greedy(fp, 4, mode="host")
+    ld = lazy_greedy(fp, 4, mode="device")
+    assert lh.indices == ld.indices
+    assert lh.evaluations == ld.evaluations
 
 
 def test_two_pass_pallas_all_singleton_lengths():

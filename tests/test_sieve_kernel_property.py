@@ -1,0 +1,92 @@
+"""Hypothesis property test: the Pallas sieve-scan body is bit-identical to
+the jnp scan body.
+
+The sieve engine's ``_element_step`` is ONE definition with two scoring
+paths — the plain jnp (S_max, n) relu-mean and the fused
+:func:`repro.kernels.ops.sieve_gains` kernel. This suite drives random
+streams through BOTH paths (kernel in interpret mode on CPU) and asserts the
+resulting sieve tables are *bit-identical*: caches, threshold exponents,
+active masks, sizes, member slots, and evaluation counts.
+
+To make bitwise equality a theorem rather than luck, stream vectors are
+drawn from a dyadic grid (multiples of 1/32 in [0, 4]) with n a power of
+two: every distance, relu, sum, and mean both paths compute is then *exact*
+in float32, so any divergence is a structural bug in the kernel wiring
+(tiling, padding, the claim/single post-rebuild override), not reduction-
+order rounding. Streams are shaped to hit the interesting edges: prefix
+maxima trigger grid rebuilds, and salsa under a squeezed ``s_max`` exercises
+the capacity-eviction rule.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test extra; pip install .[test]")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ExemplarClustering
+from repro.core.streaming import (VARIANTS, default_capacity,
+                                  make_sieve_engine)
+
+SETTINGS = dict(max_examples=20, deadline=None)
+N, D = 64, 6  # n a power of two → the /n mean is exact on dyadic sums
+
+
+def _grid_ground_set(seed: int) -> np.ndarray:
+    """(N, D) vectors on the 1/32 grid in [0, 4] — exact f32 arithmetic."""
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, 129, size=(N, D)) / 32.0).astype(np.float32)
+
+
+def _state_tuple(eng):
+    st_ = eng.state
+    return {name: np.asarray(getattr(st_, name))
+            for name in ("caches", "slot_exp", "active", "sizes", "members",
+                         "m_seen", "lb")}
+
+
+def _run_both(V, order, k, eps, variant, s_max, block_size):
+    f = ExemplarClustering(jnp.asarray(V))
+    engines = {}
+    for backend in ("jnp", "pallas_interpret"):
+        eng = make_sieve_engine(f, k, eps, variant=variant, mode="device",
+                                s_max=s_max, block_size=block_size,
+                                backend=backend)
+        eng.offer(order, V[order])
+        engines[backend] = eng
+    return engines["jnp"], engines["pallas_interpret"]
+
+
+@given(seed=st.integers(0, 1000),
+       k=st.integers(1, 4),
+       eps=st.sampled_from([0.1, 0.25, 0.5]),
+       variant=st.sampled_from(sorted(VARIANTS)),
+       block_size=st.sampled_from([1, 17, 64]))
+@settings(**SETTINGS)
+def test_sieve_scan_kernel_bit_identical(seed, k, eps, variant, block_size):
+    V = _grid_ground_set(seed)
+    order = np.random.default_rng(seed + 1).permutation(N).astype(np.int32)
+    ej, ep = _run_both(V, order, k, eps, variant, None, block_size)
+    assert ej.evaluations() == ep.evaluations()
+    assert ej.best() == ep.best()
+    sj, sp = _state_tuple(ej), _state_tuple(ep)
+    for name in sj:
+        np.testing.assert_array_equal(sj[name], sp[name], err_msg=name)
+
+
+@given(seed=st.integers(0, 1000), k=st.integers(2, 4))
+@settings(**SETTINGS)
+def test_sieve_scan_kernel_bit_identical_under_eviction(seed, k):
+    """Capacity edge: salsa's grow-only grid squeezed into a sieve-sized
+    table forces the lowest-exponent eviction rule — identically on both
+    scoring paths (rebuild claims flow through the ``single`` override)."""
+    V = _grid_ground_set(seed)
+    # ascending-norm order maximizes rebuild count (every new max re-derives
+    # the window); eviction then fires as the window climbs past s_max slots
+    order = np.argsort((V ** 2).sum(axis=1)).astype(np.int32)
+    cap = default_capacity(k, 0.1, "sieve")  # too small for salsa's grid
+    ej, ep = _run_both(V, order, k, 0.1, "salsa", cap, 32)
+    assert ej.evaluations() == ep.evaluations()
+    sj, sp = _state_tuple(ej), _state_tuple(ep)
+    for name in sj:
+        np.testing.assert_array_equal(sj[name], sp[name], err_msg=name)
