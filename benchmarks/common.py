@@ -1,7 +1,9 @@
-"""Shared benchmark utilities. CSV rows: name,us_per_call,derived."""
+"""Shared benchmark utilities. CSV rows:
+name,us_per_call,derived,backend,peak_device_bytes."""
 from __future__ import annotations
 
 import time
+from typing import Optional
 
 import jax
 import numpy as np
@@ -19,11 +21,34 @@ def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     return float(np.median(ts))
 
 
+def peak_device_bytes(device=None) -> Optional[int]:
+    """Allocator high-water mark of ``device`` (default: device 0).
+
+    This is a PROCESS-LIFETIME peak (``peak_bytes_in_use`` never resets),
+    so within one benchmark run it reflects the largest-footprint plan
+    executed so far, not the row it is attached to — a cross-PR trend line
+    for the whole module, not a per-plan measurement. The per-plan O(n/p)
+    certification is the analytic ``*_bytes_per_device`` model each sharded
+    row carries in ``derived``. Backends without allocator stats (CPU)
+    return None."""
+    try:
+        dev = device if device is not None else jax.local_devices()[0]
+        stats = dev.memory_stats() or {}
+    except Exception:
+        return None
+    v = stats.get("peak_bytes_in_use")
+    return int(v) if v is not None else None
+
+
 def emit(rows: list[tuple]):
-    """Print CSV rows. Rows are ``(name, us, derived)`` or, for entries that
-    score through a non-default evaluation backend, ``(name, us, derived,
-    backend)`` — the backend column feeds ``run.py --json`` attribution."""
+    """Print CSV rows. Rows are ``(name, us, derived)`` plus up to two
+    optional columns: ``backend`` (for entries scoring through a
+    non-default evaluation backend) and ``peak_device_bytes`` (an int from
+    :func:`peak_device_bytes`, or None) — both feed ``run.py --json``
+    attribution."""
     for row in rows:
         name, us, derived = row[0], row[1], row[2]
         backend = row[3] if len(row) > 3 else "jnp"
-        print(f"{name},{us:.1f},{derived},{backend}")
+        peak = row[4] if len(row) > 4 else None
+        peak_s = "" if peak is None else str(int(peak))
+        print(f"{name},{us:.1f},{derived},{backend},{peak_s}")

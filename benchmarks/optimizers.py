@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, peak_device_bytes, time_call
 from repro.core import EvalConfig, ExemplarClustering
 from repro.core.optimizers import (OPTIMIZERS, greedy, lazy_greedy,
                                    stochastic_greedy)
@@ -97,5 +97,32 @@ def run(quick: bool = False):
             rows.append((f"greedy_sharded_kernel_n{nn}_d{ndev}", t_shk,
                          f"speedup_vs_jnp={t_shd / t_shk:.2f}x;"
                          f"agree={r_shk.indices == r_sh.indices}", kb))
+            # fully-sharded memory plane: the candidate-pool bytes column
+            # is the O(n/p) acceptance artifact — replicated-pool plans
+            # pin n·d·itemsize per device, the sharded pool n_pad/p·d
+            # (it *is* V's shard: zero extra resident bytes), greedi
+            # n_pad/p·d + the gathered p·k·d merge pool
+            item = jnp.asarray(Xs).dtype.itemsize
+            n_loc = -(-nn // ndev)
+            pool_repl = nn * dd * item
+            pool_shard = n_loc * dd * item
+            r_sp = greedy(fs, kk, mode="device_sharded_pool")
+            t_sp = time_call(
+                lambda fs=fs: greedy(fs, kk, mode="device_sharded_pool"),
+                iters=1, warmup=0)
+            rows.append((f"greedy_sharded_pool_n{nn}_d{ndev}", t_sp,
+                         f"agree={r_sp.indices == r_dev.indices};"
+                         f"pool_bytes_per_device={pool_shard};"
+                         f"replicated_pool_bytes={pool_repl}",
+                         "jnp", peak_device_bytes()))
+            r_gd = greedy(fs, kk, mode="greedi")
+            t_gd = time_call(lambda fs=fs: greedy(fs, kk, mode="greedi"),
+                             iters=1, warmup=0)
+            rows.append((f"greedy_greedi_n{nn}_d{ndev}", t_gd,
+                         f"value_ratio={r_gd.value / r_dev.value:.4f};"
+                         f"evals={r_gd.evaluations};"
+                         f"pool_bytes_per_device="
+                         f"{pool_shard + ndev * kk * dd * item}",
+                         "jnp", peak_device_bytes()))
     emit(rows)
     return rows

@@ -12,12 +12,17 @@ CSV rows: name,us_per_call,derived. Mapping to the paper:
   streaming       — sieve family: per-element host loop vs device block offer
 
 ``--json`` additionally writes the rows as a machine-readable artifact
-(``{module: [{name, us_per_call, derived, backend}, ...]}``) so CI can
-accumulate a perf trajectory across PRs; ``backend`` records the evaluation
-backend each entry scored through ("jnp" unless the module tagged the row
-"pallas"/"pallas_interpret"), so BENCH_*.json trajectories can attribute
-speedups to the kernel wiring. ``--only`` takes a comma-separated module
-list.
+(``{module: [{name, us_per_call, derived, backend, peak_device_bytes},
+...]}``) so CI can accumulate a perf trajectory across PRs; ``backend``
+records the evaluation backend each entry scored through ("jnp" unless the
+module tagged the row "pallas"/"pallas_interpret"), so BENCH_*.json
+trajectories can attribute speedups to the kernel wiring, and
+``peak_device_bytes`` the device-0 allocator *process-lifetime* high-water
+mark (None on backends without stats; a cross-PR trend line for the whole
+module run, not a per-row measurement). The sharded plans' O(n/p)
+per-device memory claim is certified by the analytic
+``*_bytes_per_device`` columns those rows carry in ``derived``. ``--only``
+takes a comma-separated module list.
 """
 from __future__ import annotations
 
@@ -38,15 +43,18 @@ def main() -> None:
                     help="also write rows to PATH as JSON (CI artifact)")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
-    print("name,us_per_call,derived,backend")
+    print("name,us_per_call,derived,backend,peak_device_bytes")
     collected: dict[str, list[dict]] = {}
     for m in mods:
         mod = importlib.import_module(f"benchmarks.{m}")
         rows = mod.run(quick=args.quick)
         collected[m] = [
             {"name": row[0], "us_per_call": row[1], "derived": row[2],
-             # 4th column = the evaluation backend the entry scored through
-             "backend": row[3] if len(row) > 3 else "jnp"}
+             # 4th column = the evaluation backend the entry scored
+             # through; 5th = device-0 peak allocator bytes (None on
+             # backends without memory stats)
+             "backend": row[3] if len(row) > 3 else "jnp",
+             "peak_device_bytes": row[4] if len(row) > 4 else None}
             for row in (rows or [])
         ]
     if args.json:

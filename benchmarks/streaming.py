@@ -14,7 +14,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import emit, peak_device_bytes
 from repro.core import EvalConfig, ExemplarClustering
 from repro.core.optimizers import salsa, sieve_streaming
 from repro.data.synthetic import blobs
@@ -59,5 +59,24 @@ def run(quick: bool = False):
     rows.append((f"stream_sieve_device_kernel_n{n}", t_k,
                  f"elements_per_sec={eps_k:.0f};"
                  f"agree={r_k.indices == r_j.indices}", kb))
+    # mesh-sharded sieve table (only meaningful with >1 device, e.g. under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N): the (S_max, n)
+    # cache table column-shards — the table-bytes column is the O(n/p)
+    # acceptance artifact for the streaming plane
+    if jax.device_count() > 1:
+        ndev = jax.device_count()
+        from repro.core.streaming import make_spec
+
+        s_max = make_spec(k, 0.1, "sieve").s_max
+        n_loc = -(-n // ndev)
+        r_sh, t_sh, eps_sh = _throughput(
+            lambda: sieve_streaming(f, k, seed=5, mode="device_sharded",
+                                    block_size=64), n)
+        rows.append((f"stream_sieve_sharded_n{n}_d{ndev}", t_sh,
+                     f"elements_per_sec={eps_sh:.0f};"
+                     f"agree={r_sh.indices == r_j.indices};"
+                     f"table_bytes_per_device={s_max * n_loc * 4};"
+                     f"single_device_table_bytes={s_max * n * 4}",
+                     "jnp", peak_device_bytes()))
     emit(rows)
     return rows

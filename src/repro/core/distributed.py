@@ -7,20 +7,37 @@ sums. This scales the technique from one GPU to a pod: each chip holds
 n/|data| ground vectors of the *working* distance/cache state, the multiset
 payload is replicated (it is l·k·d ≪ n·d), and the only communication is one
 (l,)-sized all-reduce per evaluation — the technique is embarrassingly
-scalable along exactly the axis that grows with corpus size. (The selection
-engine's dense strategy additionally replicates its candidate pool — all of
-V — per device for now; sharding the pool is a ROADMAP item.)
+scalable along exactly the axis that grows with corpus size.
 
 This module is the **sharded backend of the selection engine**
-(:mod:`repro.core.engine`, plan ``device_sharded``): the whole k-round greedy
-scan runs *inside* ``shard_map``, with V's rows and the min-distance cache
-sharded over the mesh's data axes and the candidate payload replicated. Each
-scored candidate batch reduces its (m,) per-shard gain partials with ONE
-``psum`` of O(m) bytes (the trajectory scalar rides in the same collective):
-dense/stochastic rounds issue exactly one; a CELF round issues one per top-B
-re-scoring iteration (typically one, ⌈n/B⌉ in the degenerate full-re-score
-case). The argmax — and for CELF the stale-bound state — stays replicated.
-The standalone ``make_distributed_*`` evaluators remain as the
+(:mod:`repro.core.engine`): the whole k-round greedy scan runs *inside*
+``shard_map``, with V's rows and the min-distance cache sharded over the
+mesh's data axes. Three execution plans live here:
+
+* ``device_sharded`` — the candidate payload replicates (O(n·d) resident per
+  device; fine for sampled/lazy candidate sets, the documented tradeoff for
+  dense greedy). Each scored candidate batch reduces its (m,) per-shard gain
+  partials with ONE ``psum`` of O(m) bytes (the trajectory scalar rides in
+  the same collective): dense/stochastic rounds issue exactly one; a CELF
+  round issues one per top-B re-scoring iteration.
+* ``device_sharded_pool`` — **no O(n·d) array is ever replicated**: the
+  candidate payload row-shards exactly like V (for the selection engine it
+  *is* V's shard — zero extra resident bytes), taking per-device memory to
+  O(n/p·d). Candidate scoring blocks psum-materialize transiently from
+  their owning shards (one O(Bm·d) collective per block), and the round
+  winner's column is all-gathered by the same ``take`` (one O(d) psum per
+  round) instead of riding a resident replica — the CELF top-B re-score and
+  its ub0 seeding pass stream through the identical blocked takes. Only the
+  O(n) *scalar* CELF bound state (and the argmax) stays replicated.
+* ``greedi`` — Mirzasoleiman et al.'s distributed partition-then-merge for
+  dense greedy: each shard greedily solves its own V-partition in-place (no
+  collectives), the p·k partial solutions all-gather in one O(p·k·d) psum,
+  and a merge greedy over that small replicated pool runs under the
+  sharded-cache callbacks. Selections carry the GreeDi constant-factor
+  guarantee rather than matching centralized greedy exactly.
+
+The argmax — and for CELF the stale-bound state — stays replicated in every
+plan. The standalone ``make_distributed_*`` evaluators remain as the
 one-collective-per-call building blocks for external drivers.
 """
 from __future__ import annotations
@@ -35,7 +52,8 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import distances as dist_mod
 from repro.core.engine import (DEVICE_TRACE_COUNTS, _device_block_m,
-                               _score_blocked, drive_selection_scan)
+                               _make_fold_and_score, _score_blocked,
+                               drive_selection_scan, mesh_tiles_per_memory)
 from repro.core.evaluator import EvalConfig
 from repro.core.functions import gains_formula
 from repro.core.multiset import PackedMultiset
@@ -162,37 +180,61 @@ def make_selection_scan(
     counter_key: str,
     backend: str = "jnp",    # "jnp" | "pallas" | "pallas_interpret"
     rbf_gamma: Optional[float] = None,
+    pool_plan: str = "replicated",  # "replicated" | "sharded"
 ):
     """Build (and cache) the jitted mesh-sharded k-round selection scan.
 
     Returns ``fn(V_sh, pool, d_e0_sh, cand_rounds, w0) -> (sel, traj,
     n_scored)`` where ``V_sh``/``d_e0_sh`` are row-sharded over
-    ``data_axes``, ``pool`` is the replicated candidate payload (rows indexed
-    by ``cand_rounds`` — and by the CELF top-B gather), and ``cand_rounds``
-    is (k, m) int32 for stochastic, ONE (1, m) row for dense (closed over by
-    every round, never replicated k times), (1, 0) for lazy. The builder is
-    cached per (mesh, statics) so repeat runs reuse one traced executable.
+    ``data_axes`` and ``cand_rounds`` is (k, m) int32 for stochastic, ONE
+    (1, m) row for dense (closed over by every round, never replicated k
+    times), (1, 0) for lazy. The builder is cached per (mesh, statics) so
+    repeat runs reuse one traced executable.
+
+    ``pool_plan`` picks the candidate-payload memory plan:
+
+    * ``"replicated"`` — ``pool`` is the full candidate payload, resident
+      on every device; candidate rows gather locally and each scored batch
+      costs one O(m) psum.
+    * ``"sharded"`` — ``pool`` row-shards over ``data_axes`` exactly like V
+      (callers pass V's own shard — zero extra resident bytes, O(n/p·d) per
+      device). Candidate *indices* resolve through a ``take`` that
+      psum-materializes only the requested columns from their owning shards
+      (zero-padded rows elsewhere make the psum an exact gather): scoring
+      streams ⌈m/block_m⌉ such O(Bm·d) collectives per batch and the round
+      winner's (d,) column is all-gathered the same way, so no shard ever
+      holds more than one candidate block. The CELF ub0 seeding pass and
+      top-B re-scores run through the identical blocked takes; the O(n)
+      scalar bound state stays replicated (it is the documented exception —
+      bounds are per-candidate scalars, not payload).
 
     On ``backend="pallas"``/``"pallas_interpret"`` each shard scores its
     local (n_loc, m) tile through the fused Pallas gain kernels
     (:func:`repro.kernels.ops.fused_gain_update` for dense/stochastic
     rounds — the winner fold rides in-tile — and ``marginal_gain`` for CELF
-    re-scoring). The kernels already normalize by the *global* ``n_total``,
-    so the per-shard outputs are exact gain partials and the one-psum-per-
-    batch collective pattern is byte-identical to the jnp path. Shard-tile
-    blocking note: ``block_m`` bounds the *jnp* path's streamed HBM tile
-    only; the kernels tile their own VMEM blocks from the local shard height
-    (padding n_loc/m to block multiples in-wrapper), so the MXU tiling is
-    per-shard and never sees mesh topology.
+    re-scoring; the sharded pool streams take-blocks through
+    ``marginal_gain`` with an explicit jnp winner fold, since a block
+    materializes only after the fold's winner column is gathered). The
+    kernels already normalize by the *global* ``n_total``, so the per-shard
+    outputs are exact gain partials and the one-psum-per-batch collective
+    pattern is byte-identical to the jnp path. Shard-tile blocking note:
+    ``block_m`` bounds the *jnp* path's streamed HBM tile (and the sharded
+    pool's take-block width) only; the kernels tile their own VMEM blocks
+    from the local shard height (padding n_loc/m to block multiples
+    in-wrapper), so the MXU tiling is per-shard and never sees mesh
+    topology.
     """
     axes = tuple(data_axes)
     key = (mesh, axes, kind, k, top_b, n_total, block_m, distance,
-           policy_name, counter_key, backend, rbf_gamma)
+           policy_name, counter_key, backend, rbf_gamma, pool_plan)
     if key in _SELECTION_SCAN_CACHE:
         return _SELECTION_SCAN_CACHE[key]
+    if pool_plan not in ("replicated", "sharded"):
+        raise ValueError(f"unknown pool_plan {pool_plan!r}")
     policy = resolve_policy(policy_name)
     pair = dist_mod.resolve_pairwise(distance)
     use_kernel = backend in ("pallas", "pallas_interpret")
+    sharded_pool = pool_plan == "sharded"
     if use_kernel:
         from repro.kernels import ops as kops
 
@@ -230,38 +272,92 @@ def make_selection_scan(
             # (post-psum gains), so the per-iteration collectives line up
             return psum_gains_mean(score_part(cache, C), cache)
 
+        def mean_of(cache):
+            return jax.lax.psum(jnp.sum(cache) / n_total, axes)
+
+        if sharded_pool:
+            n_loc_pool = pool.shape[0]
+            off = jax.lax.axis_index(axes) * n_loc_pool
+
+            def take(idx):
+                """Materialize pool rows for *global* indices: one psum of
+                the owner's rows against everyone else's zeros (exact — the
+                psum adds one real row and p−1 zero rows)."""
+                scalar = jnp.ndim(idx) == 0
+                idxv = jnp.atleast_1d(idx)
+                rel = idxv - off
+                own = (rel >= 0) & (rel < n_loc_pool)
+                rows = pool[jnp.clip(rel, 0, n_loc_pool - 1)]
+                rows = jax.lax.psum(
+                    jnp.where(own[:, None], rows, jnp.zeros_like(rows)),
+                    axes)
+                return rows[0] if scalar else rows
+
+            def score_idx_part(cache, idx):
+                # stream index blocks: take-materialize (block_m, d), score
+                # the local tile, never hold two blocks at once
+                m = idx.shape[0]
+                bm = min(block_m, m)
+                m_pad = -(-m // bm) * bm
+                idx_p = jnp.pad(idx, (0, m_pad - m))
+                parts = jax.lax.map(
+                    lambda ib: score_part(cache, take(ib)),
+                    idx_p.reshape(-1, bm)).reshape(-1)
+                return parts[:m]
+
+            def score_idx_mean(cache, idx):
+                return psum_gains_mean(score_idx_part(cache, idx), cache)
+
+            def fold_score_mean(cache, w_prev, cand_t):
+                # the fold stays an explicit jnp minimum: the winner column
+                # was already gathered last round, and blocks only
+                # materialize inside the streamed scoring below
+                cache = fold(cache, w_prev)
+                gains, mean_c = score_idx_mean(cache, cand_t)
+                return gains, cache, mean_c
+
+            def seed_mean(cache):
+                return score_idx_mean(
+                    cache, jnp.arange(n_total, dtype=jnp.int32))
+
+            return drive_selection_scan(
+                kind=kind, k=k, top_b=top_b, n_global=n_total, take=take,
+                n_pool=n_total, seed_mean=seed_mean,
+                score_idx_mean=score_idx_mean, cand_rounds=cand_rounds,
+                cache0=cache0, w0=w0.astype(pool.dtype), L0=L0, fold=fold,
+                score_mean=score_mean, fold_score_mean=fold_score_mean,
+                mean_of=mean_of)
+
         if use_kernel:
 
-            def fold_score_mean(cache, w_prev, C):
+            def fold_score_mean(cache, w_prev, cand_t):
                 # fused dense/stochastic round: the winner fold happens
                 # inside the kernel on the local shard tile
                 g_part, cache = kops.fused_gain_update(
-                    V_loc, C, cache, w_prev, policy=policy,
+                    V_loc, pool[cand_t], cache, w_prev, policy=policy,
                     rbf_gamma=rbf_gamma, interpret=(backend != "pallas"),
                     n_total=n_total)
                 gains, mean_c = psum_gains_mean(g_part, cache)
                 return gains, cache, mean_c
         else:
 
-            def fold_score_mean(cache, w_prev, C):
+            def fold_score_mean(cache, w_prev, cand_t):
                 cache = fold(cache, w_prev)
-                gains, mean_c = score_mean(cache, C)
+                gains, mean_c = score_mean(cache, pool[cand_t])
                 return gains, cache, mean_c
-
-        def mean_of(cache):
-            return jax.lax.psum(jnp.sum(cache) / n_total, axes)
 
         return drive_selection_scan(
             kind=kind, k=k, top_b=top_b, n_global=n_total, pool=pool,
-            cand_rounds=cand_rounds, cache0=cache0, w0=w0, L0=L0, fold=fold,
-            score_mean=score_mean, fold_score_mean=fold_score_mean,
-            mean_of=mean_of)
+            cand_rounds=cand_rounds, cache0=cache0, w0=w0.astype(pool.dtype),
+            L0=L0, fold=fold, score_mean=score_mean,
+            fold_score_mean=fold_score_mean, mean_of=mean_of)
 
     smapped = shard_map(
         local_scan,
         mesh=mesh,
-        in_specs=(P(axes, None), P(None, None), P(axes), P(None, None),
-                  P(None)),
+        in_specs=(P(axes, None),
+                  P(axes, None) if sharded_pool else P(None, None),
+                  P(axes), P(None, None), P(None)),
         out_specs=(P(None), P(None), P(None)),
         check_rep=False,
     )
@@ -273,6 +369,53 @@ def make_selection_scan(
 
     _SELECTION_SCAN_CACHE[key] = run
     return run
+
+
+def _resolve_mesh(mesh: Optional[Mesh], data_axes: Sequence[str]) -> Mesh:
+    if mesh is None:
+        if len(data_axes) != 1:
+            raise ValueError(
+                "the default mesh is 1-D; pass an explicit mesh to shard "
+                f"over multiple axes {tuple(data_axes)}")
+        mesh = jax.make_mesh((jax.device_count(),), tuple(data_axes))
+    return mesh
+
+
+def _mesh_extent(mesh: Mesh, axes: Sequence[str]) -> int:
+    ndev = 1
+    for a in axes:
+        ndev *= mesh.shape[a]
+    return ndev
+
+
+def _placed_sharded(f, mesh: Mesh, axes: tuple, replicated_pool: bool):
+    """Shard-place (and cache on ``f``) V's padded rows and the d_e0 seed.
+
+    Zero padding rows carry cache entries of 0, so they contribute nothing
+    to gains or sums. The placement is cached on the function instance (V
+    is immutable) so repeat runs pay no transfer; delete
+    ``f._sharded_placement_cache`` to release the device memory. Only the
+    MOST RECENT (mesh, axes) is kept, and the **replicated** candidate pool
+    — O(n·d) resident per device, the ``device_sharded`` plan's documented
+    tradeoff — is built lazily, only when that plan actually runs: the
+    sharded-pool and greedi plans never pin it.
+    """
+    n = f.n
+    ndev = _mesh_extent(mesh, axes)
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    placed = getattr(f, "_sharded_placement_cache", None)
+    if placed is None or placed[0] != (mesh, axes):
+        Vp = jnp.pad(f.V, ((0, n_pad - n), (0, 0)))
+        d_e0p = jnp.pad(f.d_e0.astype(jnp.float32), (0, n_pad - n))
+        placed = f._sharded_placement_cache = ((mesh, axes), {
+            "V_sh": jax.device_put(Vp, NamedSharding(mesh, P(axes, None))),
+            "d_e0_sh": jax.device_put(d_e0p, NamedSharding(mesh, P(axes))),
+        })
+    entry = placed[1]
+    if replicated_pool and "pool" not in entry:
+        entry["pool"] = jax.device_put(
+            f.V, NamedSharding(mesh, P(None, None)))
+    return entry
 
 
 def run_sharded_selection(
@@ -290,56 +433,238 @@ def run_sharded_selection(
     data_axes: Sequence[str] = ("data",),
     backend: str = "jnp",
     rbf_gamma: Optional[float] = None,
+    pool_plan: str = "replicated",
 ):
     """Place operands on the mesh and run the sharded selection scan.
 
-    V's rows (padded to a shard multiple with zero rows — their cache
-    entries are 0, so they contribute nothing to gains or sums) and the
-    min-distance cache seed shard over ``data_axes``; the candidate pool
-    **replicates** — O(n·d) resident bytes per device for the dense
-    strategy (the distance/cache *work* is what shards; see the "sharded
-    candidate pool" ROADMAP item for the O(n/p) follow-up). The placement
-    is cached on ``f`` (most recent mesh only) so repeat runs pay no
-    transfer; delete ``f._sharded_placement_cache`` to release the device
-    memory. The per-shard gain tile is bounded by ``block_m`` (autotuned
-    from the *local* shard height and the widest candidate round
-    ``m_widest`` when not given). Returns ``(sel, traj, n_scored)`` device
-    arrays.
+    ``pool_plan="replicated"`` keeps the candidate payload resident on
+    every device (O(n·d) — fine for sampled/lazy candidates);
+    ``pool_plan="sharded"`` passes V's own row-shard as the pool (zero
+    extra resident bytes — O(n/p·d) per device total) and
+    psum-materializes candidate blocks on demand (see
+    :func:`make_selection_scan`). The per-shard gain tile is bounded by
+    ``block_m``: autotuned from the *local* shard height n/p (never global
+    n — that would under-fill every shard's memory p×), the widest
+    candidate round ``m_widest``, and the number of shards whose tiles
+    share one physical memory space (forced host devices: p tiles carve
+    one allocator pool — sizing each from the full probe would over-commit
+    p×). Under the sharded pool the take-block width is additionally
+    capped at n_loc so the transient gathered block never exceeds the
+    resident shard — the O(n/p) peak-memory claim covers transients too.
+    Returns ``(sel, traj, n_scored)`` device arrays.
     """
-    if mesh is None:
-        if len(data_axes) != 1:
-            raise ValueError(
-                "the default mesh is 1-D; pass an explicit mesh to shard "
-                f"over multiple axes {tuple(data_axes)}")
-        mesh = jax.make_mesh((jax.device_count(),), tuple(data_axes))
+    mesh = _resolve_mesh(mesh, data_axes)
     axes = tuple(data_axes)
-    ndev = 1
-    for a in axes:
-        ndev *= mesh.shape[a]
+    ndev = _mesh_extent(mesh, axes)
     n = f.n
     n_pad = ((n + ndev - 1) // ndev) * ndev
+    n_loc = n_pad // ndev
     bm = block_m if block_m is not None \
-        else _device_block_m(n_pad // ndev, m_widest)
-    # pad + placement cached on the function instance (V is immutable): a
-    # repeat run reuses the resident shards, paying no per-call transfer.
-    # Only the MOST RECENT (mesh, axes) is kept — the replicated pool is
-    # O(n·d) per device (a documented ROADMAP tradeoff), so accumulating
-    # one resident copy per mesh ever used would pin unbounded memory.
-    placed = getattr(f, "_sharded_placement_cache", None)
-    if placed is None or placed[0] != (mesh, axes):
-        Vp = jnp.pad(f.V, ((0, n_pad - n), (0, 0)))
-        d_e0p = jnp.pad(f.d_e0.astype(jnp.float32), (0, n_pad - n))
-        placed = f._sharded_placement_cache = ((mesh, axes), (
-            jax.device_put(Vp, NamedSharding(mesh, P(axes, None))),
-            jax.device_put(d_e0p, NamedSharding(mesh, P(axes))),
-            jax.device_put(f.V, NamedSharding(mesh, P(None, None))),
-        ))
-    V_sh, d_e0_sh, pool = placed[1]
+        else _device_block_m(n_loc, m_widest, mesh_tiles_per_memory(mesh))
+    if pool_plan == "sharded":
+        bm = min(bm, max(8, n_loc))
+    entry = _placed_sharded(f, mesh, axes, pool_plan == "replicated")
+    V_sh, d_e0_sh = entry["V_sh"], entry["d_e0_sh"]
+    pool = entry["pool"] if pool_plan == "replicated" else V_sh
     fn = make_selection_scan(
         mesh, axes, kind=kind, k=k, top_b=top_b, n_total=n, block_m=bm,
         distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
-        counter_key=counter_key, backend=backend, rbf_gamma=rbf_gamma)
+        counter_key=counter_key, backend=backend, rbf_gamma=rbf_gamma,
+        pool_plan=pool_plan)
     return fn(V_sh, pool, d_e0_sh, cand_rounds, w0)
+
+
+# ---------------------------------------------------------------------------
+# GreeDi partition-then-merge (plan ``greedi``) — Mirzasoleiman et al.,
+# "Distributed Submodular Maximization". Phase 1 runs the single-device
+# one-dispatch dense greedy scan on every shard's own V-partition (no
+# collectives at all); one O(p·k·d) psum all-gathers the p·k partial
+# solutions; phase 2 re-runs the same drive_selection_scan as a merge round
+# over that small replicated pool with the cache sharded (one O(p·k) psum
+# per merge round). Per-device memory is O(n/p·d) + O(p·k·d).
+# ---------------------------------------------------------------------------
+
+_GREEDI_SCAN_CACHE: dict = {}
+
+
+def make_greedi_scan(
+    mesh: Mesh,
+    data_axes: Sequence[str],
+    *,
+    k: int,
+    n_total: int,
+    block_m: int,
+    distance: str,
+    policy_name: str,
+    counter_key: str,
+    backend: str = "jnp",
+    rbf_gamma: Optional[float] = None,
+):
+    """Build (and cache) the jitted two-phase GreeDi scan.
+
+    Returns ``fn(V_sh, d_e0_sh, w0) -> (sel, traj, n_scored)``. Both phases
+    run inside ONE ``shard_map`` dispatch: phase 1 is the *existing*
+    single-device scan construction (:func:`engine._make_fold_and_score` on
+    the local partition — on Pallas backends the winner fold rides in the
+    fused kernel exactly like plan ``device``), driven with ``taken0``
+    masking the shard's zero-padding rows; phase 2 reuses
+    ``drive_selection_scan`` with the sharded-cache psum callbacks and the
+    gathered (p·k, d) pool replicated (it is k·p·d ≪ n·d, the same budget
+    class as the multiset payload). The merge trajectory is the *global*
+    f(S_t) (cache sharded, psum'd mean), so the returned trajectory is
+    directly comparable with every other plan; ``n_scored`` sums the
+    partition rounds' actually-scored candidates (psum) plus the merge
+    round's. Selections carry the GreeDi partition bound rather than
+    matching centralized greedy.
+    """
+    axes = tuple(data_axes)
+    key = (mesh, axes, k, n_total, block_m, distance, policy_name,
+           counter_key, backend, rbf_gamma)
+    if key in _GREEDI_SCAN_CACHE:
+        return _GREEDI_SCAN_CACHE[key]
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+    use_kernel = backend in ("pallas", "pallas_interpret")
+    if use_kernel:
+        from repro.kernels import ops as kops
+    p_total = _mesh_extent(mesh, axes)
+
+    def local_scan(V_loc, d_e0_loc, w0):
+        n_loc, d = V_loc.shape
+        lin = jax.lax.axis_index(axes)
+        off = lin * n_loc
+        cache0 = d_e0_loc.astype(jnp.float32)
+        w0 = w0.astype(V_loc.dtype)
+
+        # ---- phase 1: independent dense greedy over the local partition
+        # (the single-device scan construction verbatim; gains normalized by
+        # the global n — a positive constant, so the argmax is unchanged)
+        fold_and_score = _make_fold_and_score(
+            V_loc, pair, policy, backend, rbf_gamma, block_m)
+
+        def fold_local(cache, w):
+            dw = pair(V_loc, w[None, :], policy)[:, 0]
+            return jnp.minimum(cache, dw.astype(jnp.float32))
+
+        def fold_score_local(cache, w_prev, cand_t):
+            gains, cache = fold_and_score(cache, w_prev, V_loc[cand_t])
+            return gains, cache, jnp.mean(cache)
+
+        pad_taken = (jnp.arange(n_loc, dtype=jnp.int32) + off) >= n_total
+        sel1, _, nsc1 = drive_selection_scan(
+            kind="dense", k=k, top_b=0, n_global=n_total, pool=V_loc,
+            taken0=pad_taken,
+            cand_rounds=jnp.arange(n_loc, dtype=jnp.int32)[None, :],
+            cache0=cache0, w0=w0, L0=jnp.float32(0.0), fold=fold_local,
+            score_mean=None, fold_score_mean=fold_score_local,
+            mean_of=jnp.mean)
+
+        # ---- all-gather the p·k partial solutions: each shard owns one
+        # slot of the (p, k, ·) buffers, one psum fills them all
+        sel1 = sel1.astype(jnp.int32)
+        slot = jnp.arange(p_total, dtype=jnp.int32) == lin
+        merged_vec = jax.lax.psum(
+            jnp.where(slot[:, None, None], V_loc[sel1][None], 0),
+            axes).reshape(p_total * k, d)
+        merged_idx = jax.lax.psum(
+            jnp.where(slot[:, None], (sel1 + off)[None], 0),
+            axes).reshape(p_total * k)
+        nsc1_total = jax.lax.psum(nsc1, axes)
+
+        # ---- phase 2: merge greedy over the gathered pool, cache sharded
+        L0g = jax.lax.psum(jnp.sum(cache0), axes) / n_total
+
+        def psum_gains_mean(g_part, cache):
+            payload = jnp.concatenate(
+                [g_part.astype(jnp.float32),
+                 (jnp.sum(cache) / n_total)[None]])
+            out = jax.lax.psum(payload, axes)
+            return out[:-1], out[-1]
+
+        if use_kernel:
+
+            def fold_score_merge(cache, w_prev, cand_t):
+                g_part, cache = kops.fused_gain_update(
+                    V_loc, merged_vec[cand_t], cache, w_prev, policy=policy,
+                    rbf_gamma=rbf_gamma, interpret=(backend != "pallas"),
+                    n_total=n_total)
+                gains, mean_c = psum_gains_mean(g_part, cache)
+                return gains, cache, mean_c
+        else:
+
+            def fold_score_merge(cache, w_prev, cand_t):
+                cache = fold_local(cache, w_prev)
+                g_part = _score_blocked(
+                    V_loc, merged_vec[cand_t], cache, pair, policy, block_m,
+                    n_total=n_total)
+                gains, mean_c = psum_gains_mean(g_part, cache)
+                return gains, cache, mean_c
+
+        def mean_of(cache):
+            return jax.lax.psum(jnp.sum(cache) / n_total, axes)
+
+        sel2, traj2, nsc2 = drive_selection_scan(
+            kind="dense", k=k, top_b=0, n_global=n_total, pool=merged_vec,
+            cand_rounds=jnp.arange(p_total * k, dtype=jnp.int32)[None, :],
+            cache0=cache0, w0=w0, L0=L0g, fold=fold_local, score_mean=None,
+            fold_score_mean=fold_score_merge, mean_of=mean_of)
+        return merged_idx[sel2], traj2, nsc1_total + nsc2
+
+    smapped = shard_map(
+        local_scan,
+        mesh=mesh,
+        in_specs=(P(axes, None), P(axes), P(None)),
+        out_specs=(P(None), P(None), P(None)),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def run(V_sh, d_e0_sh, w0):
+        DEVICE_TRACE_COUNTS[counter_key] += 1
+        return smapped(V_sh, d_e0_sh, w0)
+
+    _GREEDI_SCAN_CACHE[key] = run
+    return run
+
+
+def run_greedi_selection(
+    f,                       # ExemplarClustering (untyped: avoids circularity)
+    w0: jax.Array,
+    *,
+    k: int,
+    counter_key: str,
+    block_m: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+    backend: str = "jnp",
+    rbf_gamma: Optional[float] = None,
+):
+    """Place operands and run the GreeDi partition-then-merge scan.
+
+    Every partition must hold at least k *real* (non-padding) rows — each
+    runs an independent k-round greedy whose argmax would otherwise run out
+    of candidates. Returns ``(sel, traj, n_scored)`` device arrays.
+    """
+    mesh = _resolve_mesh(mesh, data_axes)
+    axes = tuple(data_axes)
+    ndev = _mesh_extent(mesh, axes)
+    n = f.n
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    n_loc = n_pad // ndev
+    tail_real = n - (ndev - 1) * n_loc
+    if tail_real < k:
+        raise ValueError(
+            f"greedi partitions V into {ndev} shards of {n_loc} rows; the "
+            f"last shard holds only {tail_real} real rows, fewer than k={k}"
+            f" — its partition greedy would run out of candidates")
+    bm = block_m if block_m is not None \
+        else _device_block_m(n_loc, n_loc, mesh_tiles_per_memory(mesh))
+    entry = _placed_sharded(f, mesh, axes, replicated_pool=False)
+    fn = make_greedi_scan(
+        mesh, axes, k=k, n_total=n, block_m=bm, distance=f.cfg.distance,
+        policy_name=f.cfg.resolved_policy().name, counter_key=counter_key,
+        backend=backend, rbf_gamma=rbf_gamma)
+    return fn(entry["V_sh"], entry["d_e0_sh"], w0)
 
 
 def distributed_greedy(

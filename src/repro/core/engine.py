@@ -127,7 +127,7 @@ def _gain_tile_cap_elems(itemsize: int = 4) -> int:
     return _GAIN_TILE_CAP_ELEMS
 
 
-def _device_block_m(n: int, m: int) -> int:
+def _device_block_m(n: int, m: int, tiles_per_memory: int = 1) -> int:
     """Candidate block size bounding the (n, Bm) gain tile.
 
     Autotuned from the same free-memory probe ``plan_chunks`` uses
@@ -135,11 +135,34 @@ def _device_block_m(n: int, m: int) -> int:
     (see :func:`_gain_tile_cap_elems`). The floor of 8 (one TPU sublane)
     lets the cap be exceeded only at ground-set sizes where chunking V
     itself is the right tool.
+
+    ``n`` must be the height of the tile that actually materializes — the
+    *local shard* height n/p under the sharded plans, never the global n
+    (sizing from global n under-fills every shard's memory by p×).
+    ``tiles_per_memory`` divides the probed cap when several shards' tiles
+    coexist in ONE physical memory space (forced host devices share the
+    host allocator: p live tiles would over-commit the probe's free-bytes
+    answer p×); real multi-chip meshes keep the default of 1 because each
+    shard's tile lives in its own device memory.
     """
-    cap_elems = _gain_tile_cap_elems()
+    cap_elems = _gain_tile_cap_elems() // max(tiles_per_memory, 1)
     if n * m <= cap_elems:
         return m
     return max(8, min(m, cap_elems // max(n, 1)))
+
+
+def mesh_tiles_per_memory(mesh) -> int:
+    """How many of ``mesh``'s shards carve tiles out of one memory space.
+
+    Forced host devices (``--xla_force_host_platform_device_count``) all
+    allocate from the same host RAM the free-memory probe measured, so a
+    p-device mesh runs p concurrent gain tiles against one pool;
+    accelerator meshes place one tile per device memory.
+    """
+    devs = list(mesh.devices.flat)
+    if devs and devs[0].platform == "cpu":
+        return len(devs)
+    return 1
 
 
 # ---------------------------------------------------------------------------
@@ -203,19 +226,22 @@ def _make_fold_and_score(V, pair, policy, backend, rbf_gamma, block_m):
 # ---------------------------------------------------------------------------
 
 
-def make_rounds_step(pool, fold_score_mean, L0):
+def make_rounds_step(take, fold_score_mean, L0):
     """Dense/stochastic scan step over per-round candidate index rows.
 
-    ``fold_score_mean(cache, w_prev, C) -> (gains, new_cache, mean_cache)``
-    folds the previous winner and scores candidates C (single-device: fused
-    kernel or jnp; sharded: fold + one psum). The winner's vector is taken
-    from the candidate payload, never gathered from (possibly sharded) V.
+    ``fold_score_mean(cache, w_prev, cand_t) -> (gains, new_cache,
+    mean_cache)`` folds the previous winner and scores the round's candidate
+    indices; how the candidate *payload* materializes is the plan's business
+    (single-device: one gather from the resident pool; sharded pool: index
+    blocks psum-materialized from their owning shards, never all at once).
+    ``take(idx)`` resolves indices to payload rows — for the round winner it
+    is the per-round "winner column all-gather" that replaces carrying a
+    materialized candidate block.
     """
 
     def step(carry, cand_t):
         cache, taken, w_prev = carry
-        C = pool[cand_t]
-        gains, cache, mean_c = fold_score_mean(cache, w_prev, C)
+        gains, cache, mean_c = fold_score_mean(cache, w_prev, cand_t)
         live = ~taken[cand_t]
         gains = jnp.where(live, gains, -jnp.inf)
         p = jnp.argmax(gains)
@@ -226,7 +252,7 @@ def make_rounds_step(pool, fold_score_mean, L0):
         j_out = jnp.where(gains[p] > -jnp.inf, j, -1)
         # cache includes winners 0..t-1 here → this is trajectory[t-1]
         val = L0 - mean_c
-        return ((cache, taken.at[j].set(True), C[p]),
+        return ((cache, taken.at[j].set(True), take(j)),
                 (j_out, val, jnp.sum(live).astype(jnp.int32)))
 
     return step
@@ -240,16 +266,23 @@ def celf_max_iters(n: int, top_b: int) -> int:
     return -(-n // top_b) + 1
 
 
-def make_lazy_step(pool, fold, score_mean, L0, top_b: int, max_iters: int):
+def make_lazy_step(take, n_pool, fold, score_idx_mean, L0, top_b: int,
+                   max_iters: int):
     """CELF scan step: while-loop of top-B re-scoring over stale bounds.
 
     ``fold(cache, w) -> cache`` folds the previous winner once per round;
-    ``score_mean(cache, C) -> (gains, mean_cache)`` scores a candidate batch
-    (sharded: one psum carrying both). The loop body always runs ≥ once per
-    round (nothing starts fresh), so ``mean_c`` is always the round's true
-    mean cache; it stops when the fresh-top invariant — best re-scored gain
-    ≥ every remaining stale bound — certifies the winner, degenerating to a
-    full re-score after ⌈n/B⌉ iterations.
+    ``score_idx_mean(cache, idx) -> (gains, mean_cache)`` scores candidate
+    *indices* (replicated plans gather-and-score in one batch; the sharded
+    pool streams blocked takes so the transient block never exceeds the
+    resident shard even when top_b > n/p) with one psum carrying both on
+    mesh plans; ``take(idx)`` resolves the winner's index to its payload
+    row (sharded pool: one psum materializing only that column — the bound
+    state itself stays a replicated (n,) scalar array, never an (n, d)
+    payload). The loop body always runs ≥ once per round (nothing starts
+    fresh), so ``mean_c`` is always the round's true mean cache; it stops
+    when the fresh-top invariant — best re-scored gain ≥ every remaining
+    stale bound — certifies the winner, degenerating to a full re-score
+    after ⌈n/B⌉ iterations.
     """
 
     def step(carry, _):
@@ -267,7 +300,7 @@ def make_lazy_step(pool, fold, score_mean, L0, top_b: int, max_iters: int):
             stale = jnp.where(fresh | taken, -jnp.inf, ub_c)
             top_ub, top_idx = jax.lax.top_k(stale, top_b)
             live = top_ub > -jnp.inf
-            gains_b, mean_c = score_mean(cache, pool[top_idx])
+            gains_b, mean_c = score_idx_mean(cache, top_idx)
             gains_b = jnp.where(live, gains_b, -jnp.inf)
             ub_c = ub_c.at[top_idx].set(
                 jnp.where(live, gains_b, ub_c[top_idx]))
@@ -276,12 +309,12 @@ def make_lazy_step(pool, fold, score_mean, L0, top_b: int, max_iters: int):
 
         ub, fresh, scored, mean_c, _ = jax.lax.while_loop(
             invariant_fails, rescore_top_b,
-            (ub, jnp.zeros(pool.shape[:1], bool), jnp.asarray(0, jnp.int32),
+            (ub, jnp.zeros((n_pool,), bool), jnp.asarray(0, jnp.int32),
              jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32)))
         j = jnp.argmax(jnp.where(fresh & ~taken, ub, -jnp.inf))
         # cache includes winners 0..t-1 here → this is trajectory[t-1]
         val = L0 - mean_c
-        return ((cache, taken.at[j].set(True), pool[j], ub),
+        return ((cache, taken.at[j].set(True), take(j), ub),
                 (j, val, scored))
 
     return step
@@ -294,9 +327,10 @@ def make_lazy_step(pool, fold, score_mean, L0, top_b: int, max_iters: int):
 # ---------------------------------------------------------------------------
 
 
-def drive_selection_scan(*, kind, k, top_b, n_global, pool, cand_rounds,
-                         cache0, w0, L0, fold, score_mean, fold_score_mean,
-                         mean_of):
+def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
+                         n_pool=None, taken0=None, seed_mean=None,
+                         score_idx_mean=None, cand_rounds, cache0, w0, L0,
+                         fold, score_mean, fold_score_mean, mean_of):
     """Run k selection rounds for any execution plan, given its callbacks.
 
     The plan supplies only how a candidate batch is scored and how the
@@ -305,6 +339,16 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool, cand_rounds,
     scan xs, ``n_scored`` accounting, the final fold, and the trajectory
     concat — is plan-independent and lives here, once.
 
+    The candidate payload is addressed through ``take(idx) -> rows``: pass a
+    resident ``pool`` (single-device / replicated plans; ``take`` defaults
+    to ``pool[idx]``) or an explicit ``take`` + ``n_pool`` when no plan-wide
+    payload exists (sharded pool: ``take`` psum-materializes the requested
+    columns from their owning shards). ``taken0`` optionally pre-marks pool
+    rows as taken (GreeDi partitions mask their zero-padding rows this way);
+    ``seed_mean`` overrides CELF's ub0 seeding pass and ``score_idx_mean``
+    its per-round top-B re-score (sharded pool: blocked take-and-score for
+    both, so no transient ever exceeds the resident shard).
+
     Callbacks (single-device: plain jnp/kernel ops; sharded: the same ops on
     the local shard with ONE psum per scored batch riding the gains):
 
@@ -312,27 +356,40 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool, cand_rounds,
       (used per lazy round and for the final trajectory point).
     * ``score_mean(cache, C) -> (gains, mean_cache)`` — score a candidate
       batch against the already-folded cache (lazy rescore + ub0 seeding).
-    * ``fold_score_mean(cache, w_prev, C) -> (gains, cache, mean_cache)`` —
-      the fused dense/stochastic round step (on Pallas backends the fold
-      rides inside the gain kernel).
+    * ``fold_score_mean(cache, w_prev, cand_t) -> (gains, cache,
+      mean_cache)`` — the fused dense/stochastic round step over the round's
+      candidate *indices* (on Pallas backends the fold rides inside the gain
+      kernel; sharded pool: blocked take-and-score).
     * ``mean_of(cache) -> scalar`` — global mean of the cache.
 
     Returns ``(sel, traj, n_scored)`` per-round stacked outputs.
     """
+    if take is None:
+        take = lambda idx: pool[idx]  # noqa: E731 — the replicated default
+        n_pool = pool.shape[0]
+    taken_init = taken0 if taken0 is not None \
+        else jnp.zeros((n_pool,), bool)
     if kind == "lazy":
-        step = make_lazy_step(pool, fold, score_mean, L0, top_b,
+        if score_idx_mean is None:
+            score_idx_mean = lambda cache, idx: \
+                score_mean(cache, take(idx))  # noqa: E731
+        step = make_lazy_step(take, n_pool, fold, score_idx_mean, L0, top_b,
                               celf_max_iters(n_global, top_b))
         # round -1: fresh singleton gains seed the bounds (counts one eval
         # per pool row, exactly like host CELF's initial full scoring)
-        ub0, _ = score_mean(cache0, pool)
-        init = (cache0, jnp.zeros(pool.shape[:1], bool),
-                w0.astype(pool.dtype), ub0)
+        if seed_mean is not None:
+            ub0, _ = seed_mean(cache0)
+        else:
+            ub0, _ = score_mean(
+                cache0, pool if pool is not None
+                else take(jnp.arange(n_pool, dtype=jnp.int32)))
+        init = (cache0, taken_init, w0, ub0)
         (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
             step, init, None, length=k)
-        n_scored = jnp.asarray(pool.shape[0], jnp.int32) + jnp.sum(scored)
+        n_scored = jnp.asarray(n_pool, jnp.int32) + jnp.sum(scored)
     else:
-        step = make_rounds_step(pool, fold_score_mean, L0)
-        init = (cache0, jnp.zeros(pool.shape[:1], bool), w0.astype(pool.dtype))
+        step = make_rounds_step(take, fold_score_mean, L0)
+        init = (cache0, taken_init, w0)
         if kind == "dense":
             # one candidate row closed over by all k rounds
             cand_row = cand_rounds[0]
@@ -410,14 +467,14 @@ def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
         fold_and_score = _make_fold_and_score(
             V, pair, policy, backend, rbf_gamma, block_m)
 
-        def fold_score_mean(cache, w_prev, C):
-            gains, cache = fold_and_score(cache, w_prev, C)
+        def fold_score_mean(cache, w_prev, cand_t):
+            gains, cache = fold_and_score(cache, w_prev, V[cand_t])
             return gains, cache, jnp.mean(cache)
 
     return drive_selection_scan(
         kind=kind, k=k, top_b=top_b, n_global=V.shape[0], pool=V,
-        cand_rounds=cand_rounds, cache0=d_e0f, w0=w0, L0=L0, fold=fold,
-        score_mean=score_mean, fold_score_mean=fold_score_mean,
+        cand_rounds=cand_rounds, cache0=d_e0f, w0=w0.astype(V.dtype), L0=L0,
+        fold=fold, score_mean=score_mean, fold_score_mean=fold_score_mean,
         mean_of=jnp.mean)
 
 
@@ -433,7 +490,8 @@ def run_selection(
     k: int,
     cand_rounds: Optional[np.ndarray] = None,
     top_b: int = 0,
-    plan: str = "device",             # "device" | "device_sharded"
+    plan: str = "device",             # "device" | "device_sharded" |
+                                      # "device_sharded_pool" | "greedi"
     counter_key: str,
     block_m: Optional[int] = None,
     mesh=None,
@@ -447,6 +505,17 @@ def run_selection(
     default re-score width of 256). A stochastic round whose sample row is
     entirely exhausted by earlier selections raises rather than silently
     re-selecting a taken index.
+
+    Plans: ``device`` (one-dispatch scan), ``device_sharded`` (mesh-sharded
+    V + cache, candidate payload replicated), ``device_sharded_pool`` (the
+    candidate payload row-shards too — O(n/p·d) resident per device; scoring
+    blocks and the per-round winner column psum-materialize from their
+    owning shards), ``greedi`` (dense strategy only: GreeDi
+    partition-then-merge — each shard greedily solves its own partition,
+    the p·k partial solutions all-gather, and a merge round over that small
+    replicated pool runs under the sharded-cache callbacks; selections are
+    *not* identical to host greedy but carry the GreeDi constant-factor
+    guarantee).
     """
     if k == 0:
         return OptResult([], 0.0, [], 0)
@@ -487,14 +556,32 @@ def run_selection(
             kind=kind, k=k, top_b=top_b, distance=f.cfg.distance,
             policy_name=policy.name, block_m=bm, backend=backend,
             rbf_gamma=rbf_gamma, counter_key=counter_key)
-    elif plan == "device_sharded":
+    elif plan in ("device_sharded", "device_sharded_pool"):
         from repro.core import distributed as dist_engine
 
         sel, traj, n_scored = dist_engine.run_sharded_selection(
             f, jnp.asarray(cand_rounds, jnp.int32), w0, kind=kind, k=k,
             top_b=top_b, counter_key=counter_key, m_widest=m_widest,
             block_m=block_m, mesh=mesh, data_axes=data_axes,
-            backend=backend, rbf_gamma=rbf_gamma)
+            backend=backend, rbf_gamma=rbf_gamma,
+            pool_plan="sharded" if plan == "device_sharded_pool"
+            else "replicated")
+    elif plan == "greedi":
+        from repro.core import distributed as dist_engine
+
+        if kind != "dense":
+            raise ValueError(
+                "plan 'greedi' partitions the *dense* greedy strategy; "
+                f"strategy {kind!r} has no partition-then-merge form here")
+        if cand_rounds.shape[1] != f.n:
+            raise ValueError(
+                "plan 'greedi' partitions the full ground set; candidate "
+                "subsets are not supported (every V row must be eligible "
+                "in its own partition)")
+        sel, traj, n_scored = dist_engine.run_greedi_selection(
+            f, w0, k=k, counter_key=counter_key, block_m=block_m,
+            mesh=mesh, data_axes=data_axes, backend=backend,
+            rbf_gamma=rbf_gamma)
     else:
         raise ValueError(f"unknown execution plan {plan!r}")
 

@@ -109,7 +109,18 @@ def greedy(
     ``"device"``  — all k rounds in one jitted ``lax.scan`` dispatch.
     ``"device_sharded"`` — the same scan with V and the min-distance cache
     row-sharded over a device ``mesh`` (defaults to all local devices on a
-    1-D "data" mesh); one O(m) psum per round.
+    1-D "data" mesh); one O(m) psum per round; candidate payload replicated.
+    ``"device_sharded_pool"`` — additionally row-shards the candidate
+    payload (O(n/p·d) resident per device; candidate blocks and the round
+    winner psum-materialize from their owning shards). Selections are
+    identical to every other exact plan.
+    ``"greedi"`` — GreeDi partition-then-merge (Mirzasoleiman et al.): each
+    shard greedily solves its own V-partition, the p·k partial solutions
+    all-gather, and a merge greedy over them yields the answer. O(n/p·d)
+    per device and the cheapest collective footprint, but selections carry
+    the GreeDi constant-factor guarantee instead of matching centralized
+    greedy; requires the full candidate pool (no ``candidates`` subset) and
+    ≥ k rows per partition.
     """
     n = f.n
     cand_idx = np.arange(n) if candidates is None \
@@ -120,13 +131,15 @@ def greedy(
             f"candidates")
     if mode == "host":
         mode = "mincache"
-    if mode in ("device", "device_sharded"):
+    if mode in ("device", "device_sharded", "device_sharded_pool", "greedi"):
         # ONE candidate row: the engine closes over it for all k rounds
         cand_rounds = cand_idx[None, :]
+        counter = {"device": "greedy", "device_sharded": "greedy_sharded",
+                   "device_sharded_pool": "greedy_sharded_pool",
+                   "greedi": "greedy_greedi"}[mode]
         return run_selection(
             f, kind="dense", k=k, cand_rounds=cand_rounds,
-            plan=mode, counter_key="greedy" if mode == "device"
-            else "greedy_sharded", block_m=block_m, mesh=mesh,
+            plan=mode, counter_key=counter, block_m=block_m, mesh=mesh,
             data_axes=data_axes)
     selected: list[int] = []
     traj: list[float] = []
@@ -181,7 +194,11 @@ def lazy_greedy(
     the one-dispatch scan carry, each iteration re-scores the top-``batch``
     of them via ``jax.lax.top_k``. ``mode="device_sharded"`` additionally
     row-shards V and the cache over a ``mesh``; the bound state stays
-    replicated.
+    replicated. ``mode="device_sharded_pool"`` also row-shards the
+    candidate payload — the ub0 seeding pass and every top-B re-score
+    psum-materialize their candidate blocks from the owning shards, so
+    resident per-device memory is O(n/p·d) plus the O(n)-scalar bound
+    state.
     """
     if k > f.n:
         raise ValueError(f"cannot select k={k} exemplars from n={f.n}")
@@ -189,11 +206,13 @@ def lazy_greedy(
         raise ValueError(f"batch must be >= 1, got {batch}")
     if k == 0:
         return OptResult([], 0.0, [], 0)
-    if mode in ("device", "device_sharded"):
+    if mode in ("device", "device_sharded", "device_sharded_pool"):
+        counter = {"device": "lazy_greedy",
+                   "device_sharded": "lazy_greedy_sharded",
+                   "device_sharded_pool": "lazy_greedy_sharded_pool"}[mode]
         return run_selection(
             f, kind="lazy", k=k, top_b=batch, plan=mode,
-            counter_key="lazy_greedy" if mode == "device"
-            else "lazy_greedy_sharded", mesh=mesh, data_axes=data_axes)
+            counter_key=counter, mesh=mesh, data_axes=data_axes)
     if mode != "host":
         raise ValueError(f"unknown lazy_greedy mode {mode!r}")
     n = f.n
@@ -250,11 +269,14 @@ def stochastic_greedy(
     m_draw = min(n, m + k)
     samples = np.stack(
         [rng.choice(n, size=m_draw, replace=False) for _ in range(k)])
-    if mode in ("device", "device_sharded"):
+    if mode in ("device", "device_sharded", "device_sharded_pool"):
+        counter = {"device": "stochastic_greedy",
+                   "device_sharded": "stochastic_greedy_sharded",
+                   "device_sharded_pool":
+                       "stochastic_greedy_sharded_pool"}[mode]
         return run_selection(
             f, kind="stochastic", k=k, cand_rounds=samples,
-            plan=mode, counter_key="stochastic_greedy" if mode == "device"
-            else "stochastic_greedy_sharded", block_m=block_m, mesh=mesh,
+            plan=mode, counter_key=counter, block_m=block_m, mesh=mesh,
             data_axes=data_axes)
     if mode != "host":
         raise ValueError(f"unknown stochastic_greedy mode {mode!r}")
@@ -321,13 +343,16 @@ def _stream_blocks(f: ExemplarClustering, order: Optional[Sequence[int]],
 
 def _run_sieve(f: ExemplarClustering, k: int, eps: float, variant: str,
                order, seed: int, block_size: int, mode: str,
-               s_max: Optional[int]) -> OptResult:
-    """Drive a sieve-table engine over the stream under a host/device plan."""
+               s_max: Optional[int], mesh=None,
+               data_axes: Sequence[str] = ("data",)) -> OptResult:
+    """Drive a sieve-table engine over the stream under a host/device/
+    device_sharded plan."""
     from repro.core.streaming import make_sieve_engine
 
     idx = np.asarray(_stream(f, order, seed))
     eng = make_sieve_engine(f, k, eps, variant=variant, mode=mode,
-                            s_max=s_max, block_size=block_size)
+                            s_max=s_max, block_size=block_size, mesh=mesh,
+                            data_axes=data_axes)
     for s in range(0, len(idx), block_size):
         ib = idx[s:s + block_size]
         eng.offer(ib, f.V[ib])
@@ -339,30 +364,36 @@ def sieve_streaming(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64, mode: str = "host",
-    s_max: Optional[int] = None,
+    s_max: Optional[int] = None, mesh=None,
+    data_axes: Sequence[str] = ("data",),
 ) -> OptResult:
     """SieveStreaming [4]: thresholds (1+ε)^i ∈ [m, 2km], m = max singleton.
 
     ``mode="device"`` consumes each stream block in one jitted scan dispatch;
     ``mode="host"`` is the per-element array-semantics mirror. ``s_max``
     overrides the sieve-table capacity (see :mod:`repro.core.streaming`).
+    ``mode="device_sharded"`` (or an explicit ``mesh``) column-shards the
+    sieve cache table over the mesh — O(S_max·n/p) streaming state per
+    device.
     """
     return _run_sieve(f, k, eps, "sieve", order, seed, block_size, mode,
-                      s_max)
+                      s_max, mesh=mesh, data_axes=data_axes)
 
 
 def sieve_streaming_pp(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64, mode: str = "host",
-    s_max: Optional[int] = None,
+    s_max: Optional[int] = None, mesh=None,
+    data_axes: Sequence[str] = ("data",),
 ) -> OptResult:
     """SieveStreaming++ [19]: prune sieves below LB = best current value.
 
     LB moves after every accept, so the grid window is re-derived per
     element — inside the scan body under ``mode="device"``.
     """
-    return _run_sieve(f, k, eps, "pp", order, seed, block_size, mode, s_max)
+    return _run_sieve(f, k, eps, "pp", order, seed, block_size, mode, s_max,
+                      mesh=mesh, data_axes=data_axes)
 
 
 def three_sieves(
@@ -418,7 +449,8 @@ def salsa(
     f: ExemplarClustering, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64, mode: str = "host",
-    s_max: Optional[int] = None,
+    s_max: Optional[int] = None, mesh=None,
+    data_axes: Sequence[str] = ("data",),
 ) -> OptResult:
     """Salsa [20], simplified: an ensemble of dense-threshold passes.
 
@@ -432,7 +464,7 @@ def salsa(
     table evicts the lowest exponent (see :mod:`repro.core.streaming`).
     """
     return _run_sieve(f, k, eps, "salsa", order, seed, block_size, mode,
-                      s_max)
+                      s_max, mesh=mesh, data_axes=data_axes)
 
 
 OPTIMIZERS = {

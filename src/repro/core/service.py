@@ -73,10 +73,16 @@ class StreamIngestionService:
     def __init__(self, f: ExemplarClustering, k: int, eps: float = 0.1,
                  variant: str = "sieve", mode: str = "device",
                  block_size: int = 64, s_max: Optional[int] = None,
-                 max_pending: int = 1024):
+                 max_pending: int = 1024, mesh=None,
+                 data_axes: Sequence[str] = ("data",)):
+        # ``mesh`` / ``mode="device_sharded"`` wrap the mesh-sharded engine:
+        # the cache table shards, but the member slots / sizes / active mask
+        # a snapshot reads are replicated table state, so ``snapshot`` still
+        # gathers the best sieve's members ONCE — not per shard
         self._engine = make_sieve_engine(f, k, eps, variant=variant,
                                          mode=mode, s_max=s_max,
-                                         block_size=block_size)
+                                         block_size=block_size, mesh=mesh,
+                                         data_axes=data_axes)
         self._dim = f.dim
         self._block = block_size
         self._max_pending = max_pending

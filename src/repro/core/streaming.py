@@ -50,7 +50,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -151,16 +151,30 @@ def init_state(n: int, spec: SieveSpec) -> SieveState:
 
 
 def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
-                  valid):
+                  valid, *, mean_rows=None, table_gains=None):
     """The per-element sieve-table transition — ONE definition, pure jnp.
 
     The host mirror jits this per element; the device engine scans it per
     block. ``valid=False`` (block padding) makes the whole step a no-op.
     Returns ``(new_state, accepted_anywhere)``.
+
+    The two optional callbacks are the step's only reductions over the
+    ground-set axis, injectable so the mesh-sharded engine can run the
+    *identical* transition on (S_max, n/p) cache shards: ``mean_rows(M)``
+    is the trailing-axis mean (sharded: per-shard row sums psum'd and
+    normalized by the global n — exactly how selection gains shard) and
+    ``table_gains(table, dvec)`` the kernel-backend fused table × element
+    relu-mean (sharded: :func:`repro.kernels.ops.sieve_gains` with the
+    global ``n_total`` normalizer, partials psum'd). Defaults are the
+    single-device reductions. Everything else in the step — thresholds,
+    slot bookkeeping, member tables — is O(S_max)/O(k) state that stays
+    replicated.
     """
     k, S = spec.k, spec.s_max
     L = spec.log1p_eps
     caches, slot_exp, active, sizes, members, m_seen, lb, evals = state
+    if mean_rows is None:
+        mean_rows = lambda M: jnp.mean(M, axis=-1)  # noqa: E731
 
     # singleton gain Δ(e | ∅) — the grid anchor m = max singleton seen.
     # Kernel backends score the whole table in ONE fused pass up front:
@@ -171,14 +185,17 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
     # gains without a second kernel pass.
     use_kernel = spec.backend != "jnp"
     if use_kernel:
-        from repro.kernels import ops as kops
+        if table_gains is None:
+            from repro.kernels import ops as kops
 
-        g_all = kops.sieve_gains(
-            jnp.concatenate([d_e0[None, :], caches], axis=0), dvec,
-            interpret=(spec.backend != "pallas"))
+            table_gains = partial(
+                kops.sieve_gains, interpret=(spec.backend != "pallas"))
+
+        g_all = table_gains(
+            jnp.concatenate([d_e0[None, :], caches], axis=0), dvec)
         single, gains_pre = g_all[0], g_all[1:]
     else:
-        single = jnp.mean(jnp.maximum(d_e0 - dvec, 0.0))
+        single = mean_rows(jnp.maximum(d_e0 - dvec, 0.0))
     new_max = valid & (single > m_seen)
     m_seen = jnp.where(new_max, single, m_seen)
 
@@ -219,7 +236,7 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
     if use_kernel:
         gains = jnp.where(claim, single, gains_pre)
     else:
-        gains = jnp.mean(jnp.maximum(caches - dvec[None, :], 0.0), axis=1)
+        gains = mean_rows(jnp.maximum(caches - dvec[None, :], 0.0))
     taus = jnp.exp(slot_exp.astype(jnp.float32) * L)
     if spec.variant == "salsa":
         # dense-threshold schedule: rate 1/2 for the first ⌈k/2⌉ members,
@@ -227,7 +244,7 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
         rate = jnp.where(sizes < (k + 1) // 2, 0.5, 1.0 / (2.0 * math.e))
         need = rate * taus / k
     else:
-        values = L0 - jnp.mean(caches, axis=1)
+        values = L0 - mean_rows(caches)
         need = (taus / 2.0 - values) / jnp.maximum(k - sizes, 1)
     accept = valid & active & (sizes < k) & (gains >= need)
     caches = jnp.where(accept[:, None], jnp.minimum(caches, dvec[None, :]),
@@ -237,7 +254,7 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
         idx, members)
     sizes = sizes + accept.astype(jnp.int32)
     if spec.variant == "pp":
-        vals_new = L0 - jnp.mean(caches, axis=1)
+        vals_new = L0 - mean_rows(caches)
         lb = jnp.maximum(lb, jnp.max(jnp.where(active, vals_new, -jnp.inf)))
 
     # engine-boundary accounting: one engine call scores the element against
@@ -278,6 +295,110 @@ def _table_values(caches, d_e0):
     return jnp.mean(d_e0f) - jnp.mean(caches, axis=1)
 
 
+@partial(jax.jit, static_argnames=("n_total",))
+def _table_values_padded(caches, d_e0, n_total: int):
+    """f-values of a zero-padded (mesh-sharded) table: padding rows carry
+    0 in both ``d_e0`` and every cache, so the sums are exact and only the
+    normalizer must be the real n. Runs on the global sharded arrays — the
+    partitioner turns the row sums into one small cross-device reduce, so
+    ``best`` never gathers the (S_max, n) table to one device."""
+    d_e0f = d_e0.astype(jnp.float32)
+    return jnp.sum(d_e0f) / n_total - jnp.sum(caches, axis=1) / n_total
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded block consumption: the (S_max, n) sieve cache table (and the
+# d_e0 seed + per-element distance rows) column-shard over the mesh's data
+# axes, taking per-device streaming state from O(S_max·n) to O(S_max·n/p).
+# The scan body is the IDENTICAL _element_step with its two ground-set
+# reductions swapped for psum'd per-shard partials — the same collective
+# shape as the selection engine's sharded gains (2–3 psums of O(S_max)
+# bytes per element, distances computed shard-locally so the (B, n) block
+# never exists anywhere).
+# ---------------------------------------------------------------------------
+
+_SHARDED_OFFER_CACHE: dict = {}
+
+
+def _state_specs(axes):
+    from jax.sharding import PartitionSpec as P
+
+    return SieveState(
+        caches=P(None, axes), slot_exp=P(None), active=P(None),
+        sizes=P(None), members=P(None, None), m_seen=P(), lb=P(), evals=P())
+
+
+def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
+                            n_total: int, distance: str, policy_name: str,
+                            counter_key: str):
+    """Build (and cache) the jitted mesh-sharded per-block sieve scan.
+
+    Returns ``fn(state, V_sh, d_e0_sh, Xb, idxb, validb) -> (state,
+    accepted)`` where the state's ``caches`` (and ``V_sh``/``d_e0_sh``)
+    shard over ``data_axes`` and every other state leaf is replicated.
+    Distance rows are computed *inside* the shard_map against the local V
+    tile (each entry depends only on its own ground row, so per-entry
+    arithmetic matches ``point_distances_block`` exactly).
+    """
+    from repro.core import distances as dist_mod
+    from repro.core.precision import resolve as resolve_policy
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    axes = tuple(data_axes)
+    key = (mesh, axes, spec, n_total, distance, policy_name, counter_key)
+    if key in _SHARDED_OFFER_CACHE:
+        return _SHARDED_OFFER_CACHE[key]
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+    use_kernel = spec.backend != "jnp"
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+    def local_consume(state, V_loc, d_e0_loc, Xb, idxb, validb):
+        d_e0f = d_e0_loc.astype(jnp.float32)
+        L0 = jax.lax.psum(jnp.sum(d_e0f), axes) / n_total
+        dmat_loc = pair(V_loc, Xb, policy).T.astype(jnp.float32)
+
+        def mean_rows(M):
+            return jax.lax.psum(jnp.sum(M, axis=-1), axes) / n_total
+
+        table_gains = None
+        if use_kernel:
+
+            def table_gains(table, dvec):
+                part = kops.sieve_gains(
+                    table, dvec, n_total=n_total,
+                    interpret=(spec.backend != "pallas"))
+                return jax.lax.psum(part, axes)
+
+        def step(st, xs):
+            idx, dvec, valid = xs
+            return _element_step(spec, d_e0f, L0, st, idx, dvec, valid,
+                                 mean_rows=mean_rows,
+                                 table_gains=table_gains)
+
+        return jax.lax.scan(step, state, (idxb, dmat_loc, validb))
+
+    specs = _state_specs(axes)
+    smapped = shard_map(
+        local_consume,
+        mesh=mesh,
+        in_specs=(specs, P(axes, None), P(axes), P(None, None), P(None),
+                  P(None)),
+        out_specs=(specs, P(None)),
+        check_rep=False,
+    )
+
+    @jax.jit
+    def run(state, V_sh, d_e0_sh, Xb, idxb, validb):
+        DEVICE_TRACE_COUNTS[counter_key] += 1
+        return smapped(state, V_sh, d_e0_sh, Xb, idxb, validb)
+
+    _SHARDED_OFFER_CACHE[key] = run
+    return run
+
+
 class _SieveEngineBase:
     """Block handling and state access shared by both execution plans.
 
@@ -294,10 +415,16 @@ class _SieveEngineBase:
         self.f = f
         self.spec = spec
         self.block_size = block_size
-        self.state = init_state(f.n, spec)
+        self.state = self._initial_state()
         # device state counts in int32; folding into a Python int per offer
         # keeps unbounded streams (the service's live-sensor case) exact
         self._evals = 0
+
+    def _initial_state(self) -> SieveState:
+        """Hook: the mesh-sharded engine builds the table *born sharded* —
+        the (S_max, n) zeros must never materialize on one device in the
+        regime the mesh exists for."""
+        return init_state(self.f.n, self.spec)
 
     def offer(self, idx, X) -> np.ndarray:
         idx = np.atleast_1d(np.asarray(idx, np.int32))
@@ -307,27 +434,34 @@ class _SieveEngineBase:
         for s in range(0, len(idx), B):
             ib, Xb = idx[s:s + B], X[s:s + B]
             nb = len(ib)
-            dmat = self._distance_rows(jnp.pad(Xb, ((0, B - nb), (0, 0))))
+            payload = self._block_payload(jnp.pad(Xb, ((0, B - nb), (0, 0))))
             idxp = np.full(B, -1, np.int32)
             idxp[:nb] = ib
             valid = np.zeros(B, bool)
             valid[:nb] = True
-            out.append(self._consume(idxp, dmat, valid)[:nb])
+            out.append(self._consume(idxp, payload, valid)[:nb])
             self._evals += int(np.asarray(self.state.evals))
             self.state = self.state._replace(evals=jnp.int32(0))
         return np.concatenate(out) if out else np.zeros(0, bool)
 
     def best(self) -> tuple[list[int], float]:
-        """Members and value of the best live sieve ([], 0.0 when none)."""
+        """Members and value of the best live sieve ([], 0.0 when none).
+
+        Member slots, sizes and the active mask are replicated table state:
+        one host fetch each regardless of mesh width — never a per-shard
+        gather."""
         active = np.asarray(self.state.active)
         if not active.any():
             return [], 0.0
-        vals = np.asarray(_table_values(self.state.caches, self.f.d_e0))
+        vals = np.asarray(self._values())
         vals = np.where(active, vals, -np.inf)
         b = int(np.argmax(vals))
         size = int(np.asarray(self.state.sizes)[b])
         return [int(i) for i in np.asarray(self.state.members)[b, :size]], \
             float(vals[b])
+
+    def _values(self) -> jax.Array:
+        return _table_values(self.state.caches, self.f.d_e0)
 
     def evaluations(self) -> int:
         return self._evals + int(np.asarray(self.state.evals))
@@ -344,7 +478,13 @@ class _SieveEngineBase:
         # and device decisions see bitwise-identical distances
         return self.f.point_distances_block(X).astype(jnp.float32)
 
-    def _consume(self, idxp, dmat, valid) -> np.ndarray:
+    def _block_payload(self, X) -> jax.Array:
+        """What ``offer`` hands ``_consume`` per padded block: distance rows
+        by default; the mesh-sharded engine passes the raw vectors through
+        and computes distances shard-locally inside its scan."""
+        return self._distance_rows(X)
+
+    def _consume(self, idxp, payload, valid) -> np.ndarray:
         raise NotImplementedError
 
 
@@ -372,40 +512,131 @@ class DeviceSieveEngine(_SieveEngineBase):
     """Device-resident sieve table: one scan dispatch per stream block.
 
     State never leaves the device between blocks (beyond the accept mask
-    and the evaluation-counter fold the block boundary reads anyway)."""
+    and the evaluation-counter fold the block boundary reads anyway).
 
-    def __init__(self, f, spec: SieveSpec, block_size: int = 64):
+    ``mesh`` column-shards the (S_max, n) cache table — and the d_e0 seed
+    and each element's distance row — over the mesh's ``data_axes``,
+    cutting per-device streaming state to O(S_max·n/p): the pod-scale
+    ground-set regime. The scan body is the identical
+    :func:`_element_step`; only its two ground-set reductions become
+    psum'd per-shard partials (the sieve-gain kernel already normalizes by
+    an explicit global n, so per-shard table tiles psum exactly like
+    selection gains). Thresholds, sizes, member slots, and the evaluation
+    counter stay replicated, so ``best``/``member_ids``/snapshots read
+    them with one fetch — never a per-shard gather."""
+
+    def __init__(self, f, spec: SieveSpec, block_size: int = 64,
+                 mesh=None, data_axes: Sequence[str] = ("data",)):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # mesh geometry first: _SieveEngineBase.__init__ asks the
+        # _initial_state hook for the table, which must be born sharded
+        self.mesh = mesh
+        if mesh is not None:
+            axes = tuple(data_axes)
+            self._axes = axes
+            ndev = 1
+            for a in axes:
+                ndev *= mesh.shape[a]
+            self._n_pad = ((f.n + ndev - 1) // ndev) * ndev
+            self._n_total = f.n
+            self._shardings = SieveState(
+                *[NamedSharding(mesh, s) for s in _state_specs(axes)])
         super().__init__(f, spec, block_size)
         self._counter_key = f"sieve_{spec.variant}"
+        if mesh is None:
+            return
+        self._counter_key = f"sieve_{spec.variant}_sharded"
+        # zero padding rows: d_e0 = 0 and cache = 0 ⇒ relu(0 − d) = 0 gain
+        # contribution and 0 in every sum — exact under the real-n
+        # normalizer. The padded placement itself is the selection engine's
+        # (cached on f), so a sieve engine and a sharded selection run on
+        # the same mesh share ONE resident copy of V's shards.
+        from repro.core.distributed import _placed_sharded
 
-    def _consume(self, idxp, dmat, valid) -> np.ndarray:
-        self.state, acc = _offer_block_scan(
-            self.state, self.f.d_e0, jnp.asarray(idxp), dmat,
-            jnp.asarray(valid), spec=self.spec,
+        entry = _placed_sharded(f, mesh, self._axes, replicated_pool=False)
+        self._V_sh = entry["V_sh"]
+        self._d_e0_sh = entry["d_e0_sh"]
+        self._offer_fn = make_sharded_offer_scan(
+            mesh, self._axes, spec=spec, n_total=f.n,
+            distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
             counter_key=self._counter_key)
+
+    def _initial_state(self) -> SieveState:
+        if self.mesh is None:
+            return super()._initial_state()
+        # jit with out_shardings lays the zeros out sharded from birth: the
+        # full (S_max, n_pad) table never exists on any single device
+        return jax.jit(
+            lambda: init_state(self._n_pad, self.spec),
+            out_shardings=self._shardings)()
+
+    def _block_payload(self, X) -> jax.Array:
+        if self.mesh is None:
+            return self._distance_rows(X)
+        # raw vectors pass through replicated; distance rows are computed
+        # shard-locally inside the scan, so no (B, n) block ever exists
+        return jnp.asarray(X)
+
+    def _values(self) -> jax.Array:
+        if self.mesh is None:
+            return _table_values(self.state.caches, self.f.d_e0)
+        return _table_values_padded(self.state.caches, self._d_e0_sh,
+                                    self._n_total)
+
+    def _consume(self, idxp, payload, valid) -> np.ndarray:
+        if self.mesh is None:
+            self.state, acc = _offer_block_scan(
+                self.state, self.f.d_e0, jnp.asarray(idxp), payload,
+                jnp.asarray(valid), spec=self.spec,
+                counter_key=self._counter_key)
+        else:
+            self.state, acc = self._offer_fn(
+                self.state, self._V_sh, self._d_e0_sh, payload,
+                jnp.asarray(idxp), jnp.asarray(valid))
         return np.asarray(acc)
 
 
 def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
                       mode: str = "device", s_max: Optional[int] = None,
                       block_size: int = 64,
-                      backend: Optional[str] = None) -> _SieveEngineBase:
-    """Build a sieve engine under an execution plan (``host`` | ``device``),
-    mirroring the selection engine's strategy×plan composition. Both plans
-    take ``block_size`` — it shapes the (padded) distance dispatch, so host
-    and device engines built with the same value run the same executables.
+                      backend: Optional[str] = None,
+                      mesh=None,
+                      data_axes: Sequence[str] = ("data",)
+                      ) -> _SieveEngineBase:
+    """Build a sieve engine under an execution plan (``host`` | ``device`` |
+    ``device_sharded``), mirroring the selection engine's strategy×plan
+    composition. Both plans take ``block_size`` — it shapes the (padded)
+    distance dispatch, so host and device engines built with the same value
+    run the same executables.
 
     ``backend`` picks the element step's scoring path (``None`` inherits
     ``f.cfg.backend``): kernel backends run the fused table × element
     relu-mean (:func:`repro.kernels.ops.sieve_gains`) instead of the plain
     jnp reduction — in BOTH plans, so parity stays structural.
+
+    ``mesh`` (or ``mode="device_sharded"``, which defaults to a 1-D mesh
+    over all local devices) column-shards the sieve cache table over
+    ``data_axes`` — see :class:`DeviceSieveEngine`. The host mirror is a
+    per-element reference and does not shard.
     """
     if backend is None:
         backend = f.cfg.backend \
             if f.cfg.backend in ("pallas", "pallas_interpret") else "jnp"
     spec = make_spec(k, eps, variant, s_max, backend=backend)
+    if mode == "device_sharded":
+        from repro.core.distributed import _resolve_mesh
+
+        mesh = _resolve_mesh(mesh, tuple(data_axes))
+        mode = "device"
     if mode == "host":
+        if mesh is not None:
+            raise ValueError(
+                "the host mirror is the per-element reference; it does not "
+                "take a mesh")
         return HostSieveMirror(f, spec, block_size=block_size)
     if mode == "device":
-        return DeviceSieveEngine(f, spec, block_size=block_size)
-    raise ValueError(f"unknown streaming mode {mode!r}; 'host' or 'device'")
+        return DeviceSieveEngine(f, spec, block_size=block_size, mesh=mesh,
+                                 data_axes=data_axes)
+    raise ValueError(f"unknown streaming mode {mode!r}; 'host', 'device' "
+                     f"or 'device_sharded'")

@@ -105,6 +105,61 @@ def test_device_block_m_uses_probe(monkeypatch):
     assert ev.resolve_memory_budget("auto") == 0  # 0 free ≠ "no budget"
 
 
+def test_device_block_m_mesh_aware_sizing(monkeypatch):
+    """Regression (sharded autotuning): the gain tile must be sized from
+    the LOCAL shard height n/p — sizing from global n under-fills every
+    shard p× — and, when p shards' tiles coexist in one physical memory
+    space (forced host devices share the allocator the probe measured),
+    the cap must divide by p or the shards jointly over-commit it."""
+    import jax
+
+    from repro.core import engine as eng
+
+    monkeypatch.setattr(eng, "_GAIN_TILE_CAP_ELEMS", None)
+    monkeypatch.setattr(eng, "free_memory_bytes", lambda device=None: None)
+    # one tile per memory: 2^25 fallback cap over a 2^20-row tile → 32 wide
+    assert eng._device_block_m(1 << 20, 64) == 32
+    # 4 coexisting tiles: each gets a quarter of the cap → 8 wide
+    assert eng._device_block_m(1 << 20, 64, tiles_per_memory=4) == 8
+    # …but sized from the LOCAL height n/4, the same global problem fits
+    # the exact same 32-wide tile per shard — under-filling fixed
+    assert eng._device_block_m((1 << 20) // 4, 64, tiles_per_memory=4) == 32
+
+    # forced host devices share one memory space; a real accelerator mesh
+    # reports 1 tile per device memory
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    expected = jax.device_count() \
+        if jax.local_devices()[0].platform == "cpu" else 1
+    assert eng.mesh_tiles_per_memory(mesh) == expected
+
+
+def test_sharded_selection_sizes_tile_from_local_height(monkeypatch):
+    """End to end: run_sharded_selection must hand the autotuner the local
+    shard height (n_pad/p) and the mesh's tiles-per-memory count."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import distributed as dist
+    from repro.core.functions import ExemplarClustering
+    from repro.core.optimizers import greedy
+
+    calls = []
+    real = dist._device_block_m
+
+    def spy(n, m, tiles=1):
+        calls.append((n, m, tiles))
+        return real(n, m, tiles)
+
+    monkeypatch.setattr(dist, "_device_block_m", spy)
+    rng = np.random.default_rng(3)
+    V = jnp.asarray((rng.normal(size=(250, 8)) + 2).astype(np.float32))
+    f = ExemplarClustering(V)
+    greedy(f, 3, mode="device_sharded")
+    ndev = jax.device_count()
+    n_loc = -(-250 // ndev)
+    assert calls == [(n_loc, 250, ndev)], calls
+
+
 def test_fp16_strict_reduces_mu():
     """The paper's remediation: FP16 shrinks the per-set footprint."""
     assert bytes_per_set(1000, 10, 100, FP16_STRICT, "fused") < \

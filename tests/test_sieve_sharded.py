@@ -1,0 +1,149 @@
+"""Mesh-sharded sieve engine: parity vs the single-device engine.
+
+Mirrors test_streaming_engine.py's host/device parity suite one level up:
+the (S_max, n) sieve cache table (plus the d_e0 seed and every element's
+distance row) column-shards over a mesh, and the sharded engine must
+reproduce the single-device device plan's members, values, AND evaluation
+counts — the scan body is the identical ``_element_step`` with its two
+ground-set reductions psum'd, so divergence means the sharding wiring (not
+the sieve logic) regressed.
+
+Under plain pytest this runs on a 1-device mesh (shard_map semantics, no
+collective traffic); the CI pallas-interpret job forces 2 host devices so
+the psums reduce across real shards, and test_engine_sharded.py runs the
+8-device subprocess variant.
+"""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EvalConfig, ExemplarClustering,
+                        StreamIngestionService)
+from repro.core.engine import DEVICE_TRACE_COUNTS
+from repro.core.optimizers import salsa, sieve_streaming, sieve_streaming_pp
+from repro.data.synthetic import blobs
+
+ALGS = {"sieve_streaming": sieve_streaming, "salsa": salsa,
+        "pp": sieve_streaming_pp}
+
+
+@pytest.fixture(scope="module")
+def f():
+    X, _ = blobs(300, 16, centers=8, seed=1)
+    return ExemplarClustering(jnp.asarray(X))
+
+
+@pytest.mark.parametrize("alg", sorted(ALGS))
+def test_sharded_sieve_matches_single_device(f, alg):
+    """n = 300 is not a device-count multiple → exercises the zero padding
+    (pad rows contribute exactly 0 to every psum'd sum)."""
+    dev = ALGS[alg](f, 6, eps=0.1, seed=2, mode="device")
+    sh = ALGS[alg](f, 6, eps=0.1, seed=2, mode="device_sharded")
+    assert sh.indices == dev.indices
+    assert sh.evaluations == dev.evaluations
+    np.testing.assert_allclose(sh.value, dev.value, atol=1e-6)
+
+
+@pytest.mark.parametrize("alg", sorted(ALGS))
+def test_sharded_sieve_kernel_backend(f, alg):
+    """The fused sieve-gain kernel runs per shard with the global n_total
+    normalizer, so per-shard table tiles psum exactly like selection
+    gains."""
+    fp = ExemplarClustering(f.V, EvalConfig(backend="pallas_interpret"))
+    dev = ALGS[alg](fp, 6, eps=0.1, seed=2, mode="device")
+    sh = ALGS[alg](fp, 6, eps=0.1, seed=2, mode="device_sharded")
+    assert sh.indices == dev.indices
+    assert sh.evaluations == dev.evaluations
+    np.testing.assert_allclose(sh.value, dev.value, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [1024, 8192])
+def test_sharded_sieve_parity_at_scale(n):
+    """Acceptance sizes: identical members and counts at n ∈ {1k, 8k}."""
+    X, _ = blobs(n, 24, centers=12, seed=13)
+    fn = ExemplarClustering(jnp.asarray(X))
+    dev = sieve_streaming(fn, 8, seed=5, mode="device", block_size=128)
+    sh = sieve_streaming(fn, 8, seed=5, mode="device_sharded",
+                         block_size=128)
+    assert sh.indices == dev.indices
+    assert sh.evaluations == dev.evaluations
+    np.testing.assert_allclose(sh.value, dev.value, atol=1e-6)
+
+
+def test_sharded_sieve_block_size_invariance(f):
+    """Blocking stays a pure dispatch optimization under the mesh."""
+    runs = [sieve_streaming(f, 5, eps=0.1, seed=2, mode="device_sharded",
+                            block_size=b) for b in (1, 64, 97)]
+    ref = sieve_streaming(f, 5, eps=0.1, seed=2, mode="device",
+                          block_size=64)
+    assert all(r.indices == ref.indices for r in runs)
+    assert all(r.evaluations == ref.evaluations for r in runs)
+
+
+def test_sharded_sieve_single_trace(f):
+    """One trace per (mesh, spec, shapes): repeat runs and the ragged tail
+    block reuse the same sharded executable."""
+    before = DEVICE_TRACE_COUNTS["sieve_sieve_sharded"]
+    first = sieve_streaming(f, 5, eps=0.15, seed=4, mode="device_sharded",
+                            block_size=77)
+    mid = DEVICE_TRACE_COUNTS["sieve_sieve_sharded"]
+    again = sieve_streaming(f, 5, eps=0.15, seed=4, mode="device_sharded",
+                            block_size=77)
+    assert mid <= before + 1
+    assert DEVICE_TRACE_COUNTS["sieve_sieve_sharded"] == mid
+    assert first.indices == again.indices
+
+
+def test_sharded_engine_table_is_sharded(f):
+    """The memory claim, structurally: the cache table's sharding really
+    splits its columns over the mesh (each addressable shard holds
+    S_max × n_pad/p entries), while member slots stay replicated — a
+    snapshot reads them once, not per shard."""
+    from repro.core.streaming import make_sieve_engine
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    eng = make_sieve_engine(f, 6, 0.1, mode="device", mesh=mesh)
+    eng.offer(np.arange(64), np.asarray(f.V)[:64])
+    p = jax.device_count()
+    n_pad = -(-f.n // p) * p
+    cshard = eng.state.caches.addressable_shards[0]
+    assert cshard.data.shape == (eng.spec.s_max, n_pad // p)
+    mshard = eng.state.members.addressable_shards[0]
+    assert mshard.data.shape == eng.state.members.shape  # replicated
+
+
+def test_service_snapshot_over_sharded_engine(f):
+    """The ingestion service wraps the mesh-sharded engine transparently:
+    block-aligned snapshots report the same members/values/counters as the
+    single-device service run."""
+    X = np.asarray(f.V)
+    order = np.random.default_rng(7).permutation(f.n)
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+
+    async def main(mesh_arg):
+        async with StreamIngestionService(f, k=6, mode="device",
+                                          mesh=mesh_arg,
+                                          block_size=32) as svc:
+            await svc.offer_batch(X[order])
+            await svc.drain()
+            mid = await svc.snapshot()   # block-aligned, mid-lifecycle
+            return mid
+
+    snap_sh = asyncio.run(main(mesh))
+    snap_1d = asyncio.run(main(None))
+    assert snap_sh.indices == snap_1d.indices
+    assert snap_sh.evaluations == snap_1d.evaluations
+    assert snap_sh.n_ingested == snap_1d.n_ingested == f.n
+    np.testing.assert_allclose(snap_sh.value, snap_1d.value, atol=1e-6)
+    np.testing.assert_allclose(snap_sh.exemplars, snap_1d.exemplars, atol=0)
+
+
+def test_host_mirror_rejects_mesh(f):
+    from repro.core.streaming import make_sieve_engine
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+    with pytest.raises(ValueError, match="host mirror"):
+        make_sieve_engine(f, 4, 0.1, mode="host", mesh=mesh)
