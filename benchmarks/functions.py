@@ -1,0 +1,53 @@
+"""Function zoo under the shared selection engine: per-objective cost rows.
+
+One engine, many objectives — the cache-semantics protocol means facility
+location and graph cut run the SAME device selection scan as exemplar
+clustering, differing only in the per-row gain formula (and, for graph cut,
+one winner-indexed penalty riding the gains reduction). These rows track
+the realized per-function cost of that generality at n ∈ {4k, 32k} so a
+regression in the shared gain-kernel template (min↔max fold flip) or the
+protocol dispatch shows up as a per-function slope change in the BENCH
+trajectory, not a silent tax on every objective.
+
+Rows carry the ``function`` column (6th field) that ``run.py --json``
+surfaces for per-objective attribution.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, peak_device_bytes, time_call
+from repro.core import EvalConfig
+from repro.core.functions import FUNCTIONS
+from repro.core.optimizers import stochastic_greedy
+from repro.data.synthetic import blobs
+
+#: the zoo entries certified through the shared min/max kernel template
+ZOO = ("facility_location", "graph_cut")
+
+
+def run(quick: bool = False):
+    ns = (4096,) if quick else (4096, 32768)
+    d, k = (16, 8) if quick else (32, 8)
+    rows = []
+    for n in ns:
+        X, _ = blobs(n, d, centers=16, seed=21)
+        # rbf on down-scaled blobs keeps the similarity dense (raw-scale
+        # sqeuclidean saturates s = relu(1 − d/2) to 0 for these objectives)
+        V = jnp.asarray(X) / 10.0
+        cfg = EvalConfig(distance="rbf")
+        base = None
+        for fname in ("exemplar",) + ZOO:
+            f = FUNCTIONS[fname](V, cfg)
+            t = time_call(
+                lambda f=f: stochastic_greedy(f, k, eps=0.1, seed=3,
+                                              mode="device"),
+                warmup=1, iters=1)
+            res = stochastic_greedy(f, k, eps=0.1, seed=3, mode="device")
+            base = t if base is None else base
+            rows.append((
+                f"{fname}_n{n}_device", t,
+                f"k={k};evals={res.evaluations};vs_exemplar={t / base:.2f}x",
+                "jnp", peak_device_bytes(), fname))
+    emit(rows)
+    return rows

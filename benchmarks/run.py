@@ -10,16 +10,19 @@ CSV rows: name,us_per_call,derived. Mapping to the paper:
   kernel_roofline — TPU roofline of the Pallas kernels at paper sizes
   optimizers      — §IV-A optimizer evaluation-count profile + engine plans
   streaming       — sieve family: per-element host loop vs device block offer
+  functions       — zoo objectives through the shared engine at n ∈ {4k, 32k}
 
 ``--json`` additionally writes the rows as a machine-readable artifact
-(``{module: [{name, us_per_call, derived, backend, peak_device_bytes},
-...]}``) so CI can accumulate a perf trajectory across PRs; ``backend``
-records the evaluation backend each entry scored through ("jnp" unless the
-module tagged the row "pallas"/"pallas_interpret"), so BENCH_*.json
-trajectories can attribute speedups to the kernel wiring, and
+(``{module: [{name, us_per_call, derived, backend, peak_device_bytes,
+function}, ...]}``) so CI can accumulate a perf trajectory across PRs;
+``backend`` records the evaluation backend each entry scored through ("jnp"
+unless the module tagged the row "pallas"/"pallas_interpret"), so
+BENCH_*.json trajectories can attribute speedups to the kernel wiring;
 ``peak_device_bytes`` the device-0 allocator *process-lifetime* high-water
 mark (None on backends without stats; a cross-PR trend line for the whole
-module run, not a per-row measurement). The sharded plans' O(n/p)
+module run, not a per-row measurement); and ``function`` the submodular
+objective the row scored ("exemplar" unless the module tagged it), so the
+function-zoo rows chart per-objective slopes. The sharded plans' O(n/p)
 per-device memory claim is certified by the analytic
 ``*_bytes_per_device`` columns those rows carry in ``derived``. ``--only``
 takes a comma-separated module list.
@@ -31,7 +34,7 @@ import importlib
 import json
 
 MODULES = ["sweeps", "precision", "chunking", "greedy_modes",
-           "kernel_roofline", "optimizers", "streaming"]
+           "kernel_roofline", "optimizers", "streaming", "functions"]
 
 
 def main() -> None:
@@ -43,7 +46,7 @@ def main() -> None:
                     help="also write rows to PATH as JSON (CI artifact)")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
-    print("name,us_per_call,derived,backend,peak_device_bytes")
+    print("name,us_per_call,derived,backend,peak_device_bytes,function")
     collected: dict[str, list[dict]] = {}
     for m in mods:
         mod = importlib.import_module(f"benchmarks.{m}")
@@ -52,9 +55,11 @@ def main() -> None:
             {"name": row[0], "us_per_call": row[1], "derived": row[2],
              # 4th column = the evaluation backend the entry scored
              # through; 5th = device-0 peak allocator bytes (None on
-             # backends without memory stats)
+             # backends without memory stats); 6th = the submodular
+             # objective the row scored (the function-zoo axis)
              "backend": row[3] if len(row) > 3 else "jnp",
-             "peak_device_bytes": row[4] if len(row) > 4 else None}
+             "peak_device_bytes": row[4] if len(row) > 4 else None,
+             "function": row[5] if len(row) > 5 else "exemplar"}
             for row in (rows or [])
         ]
     if args.json:

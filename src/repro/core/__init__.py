@@ -12,7 +12,16 @@ from repro.core.engine import (
     run_selection,
     validate_candidates,
 )
-from repro.core.functions import ExemplarClustering
+from repro.core.functions import (
+    FUNCTIONS,
+    ExemplarClustering,
+    FacilityLocation,
+    FeatureBased,
+    FnSpec,
+    GraphCut,
+    SaturatedCoverage,
+    SubmodularFunction,
+)
 from repro.core.multiset import PackedMultiset, pack_base_plus_candidates, pack_sets
 from repro.core.optimizers import (
     OPTIMIZERS,
@@ -40,7 +49,9 @@ __all__ = [
     "BF16", "FP16", "FP16_STRICT", "FP32", "PrecisionPolicy",
     "ChunkingError", "DEVICE_TRACE_COUNTS", "EvalConfig", "bytes_per_set",
     "evaluate_multiset", "run_selection", "validate_candidates",
-    "plan_chunks", "work_matrix", "ExemplarClustering", "PackedMultiset",
+    "plan_chunks", "work_matrix", "ExemplarClustering", "FacilityLocation",
+    "FeatureBased", "FnSpec", "FUNCTIONS", "GraphCut", "SaturatedCoverage",
+    "SubmodularFunction", "PackedMultiset",
     "pack_base_plus_candidates", "pack_sets", "OPTIMIZERS", "OptResult",
     "greedy", "lazy_greedy", "salsa", "sieve_streaming", "sieve_streaming_pp",
     "stochastic_greedy", "three_sieves", "ExemplarModel",

@@ -51,11 +51,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import distances as dist_mod
+from repro.core import functions as fx
 from repro.core.engine import (DEVICE_TRACE_COUNTS, _device_block_m,
-                               _make_fold_and_score, _score_blocked,
-                               drive_selection_scan, mesh_tiles_per_memory)
+                               _score_blocked, drive_selection_scan,
+                               mesh_tiles_per_memory)
 from repro.core.evaluator import EvalConfig
-from repro.core.functions import gains_formula
+from repro.core.functions import FnSpec, gains_formula
 from repro.core.multiset import PackedMultiset
 from repro.core.precision import resolve as resolve_policy
 
@@ -170,6 +171,7 @@ def make_selection_scan(
     mesh: Mesh,
     data_axes: Sequence[str],
     *,
+    fn: FnSpec = FnSpec(),   # the function's static identity
     kind: str,               # "dense" | "stochastic" | "lazy"
     k: int,                  # selection rounds
     top_b: int,              # CELF re-score width (lazy only)
@@ -184,12 +186,24 @@ def make_selection_scan(
 ):
     """Build (and cache) the jitted mesh-sharded k-round selection scan.
 
-    Returns ``fn(V_sh, pool, d_e0_sh, cand_rounds, w0) -> (sel, traj,
-    n_scored)`` where ``V_sh``/``d_e0_sh`` are row-sharded over
-    ``data_axes`` and ``cand_rounds`` is (k, m) int32 for stochastic, ONE
-    (1, m) row for dense (closed over by every round, never replicated k
-    times), (1, 0) for lazy. The builder is cached per (mesh, statics) so
-    repeat runs reuse one traced executable.
+    Returns ``run(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0) -> (sel,
+    traj, n_scored)`` where ``V_sh``/``seed_sh``/``aux_sh`` are row-sharded
+    over ``data_axes`` (the function's cache seed and static per-row
+    auxiliary, padded with its sentinel values — see
+    :func:`functions.pad_seed` / :func:`functions.pad_row_aux`) and
+    ``cand_rounds`` is (k, m) int32 for stochastic, ONE (1, m) row for dense
+    (closed over by every round, never replicated k times), (1, 0) for lazy.
+    The builder is cached per (mesh, fn, statics) so repeat runs reuse one
+    traced executable; ``fn`` rides the cache key exactly like a jit static.
+
+    The cache is the function's ``(vec, aux)`` pytree: the vec row-shards
+    with V, the scalar aux (graph cut's pairwise penalty) stays replicated —
+    its winner-indexed update is an owner-shard gather psum'd in
+    :func:`functions.fold_aux` (executed unconditionally so the collective
+    pattern is uniform across shards, then gated on winner validity). Graph
+    cut's index-addressed gain extra is a per-shard partial by construction
+    (the owner contributes the one real term, every other shard 0), so it
+    rides the existing per-batch gains psum with no extra collective.
 
     ``pool_plan`` picks the candidate-payload memory plan:
 
@@ -209,23 +223,23 @@ def make_selection_scan(
       bounds are per-candidate scalars, not payload).
 
     On ``backend="pallas"``/``"pallas_interpret"`` each shard scores its
-    local (n_loc, m) tile through the fused Pallas gain kernels
+    local (n_loc, m) tile through the shared min/max Pallas kernel template
     (:func:`repro.kernels.ops.fused_gain_update` for dense/stochastic
-    rounds — the winner fold rides in-tile — and ``marginal_gain`` for CELF
-    re-scoring; the sharded pool streams take-blocks through
-    ``marginal_gain`` with an explicit jnp winner fold, since a block
-    materializes only after the fold's winner column is gathered). The
-    kernels already normalize by the *global* ``n_total``, so the per-shard
-    outputs are exact gain partials and the one-psum-per-batch collective
-    pattern is byte-identical to the jnp path. Shard-tile blocking note:
-    ``block_m`` bounds the *jnp* path's streamed HBM tile (and the sharded
-    pool's take-block width) only; the kernels tile their own VMEM blocks
-    from the local shard height (padding n_loc/m to block multiples
-    in-wrapper), so the MXU tiling is per-shard and never sees mesh
-    topology.
+    rounds of fused-eligible functions — the winner fold rides in-tile —
+    and ``marginal_gain`` for CELF re-scoring and graph cut's add-fold
+    rounds; the sharded pool streams take-blocks through ``marginal_gain``
+    with an explicit fold, since a block materializes only after the fold's
+    winner column is gathered). The kernels already normalize by the
+    *global* ``n_total``, so the per-shard outputs are exact gain partials
+    and the one-psum-per-batch collective pattern is byte-identical to the
+    jnp path. Shard-tile blocking note: ``block_m`` bounds the *jnp* path's
+    streamed HBM tile (and the sharded pool's take-block width) only; the
+    kernels tile their own VMEM blocks from the local shard height (padding
+    n_loc/m to block multiples in-wrapper), so the MXU tiling is per-shard
+    and never sees mesh topology.
     """
     axes = tuple(data_axes)
-    key = (mesh, axes, kind, k, top_b, n_total, block_m, distance,
+    key = (mesh, axes, fn, kind, k, top_b, n_total, block_m, distance,
            policy_name, counter_key, backend, rbf_gamma, pool_plan)
     if key in _SELECTION_SCAN_CACHE:
         return _SELECTION_SCAN_CACHE[key]
@@ -233,139 +247,168 @@ def make_selection_scan(
         raise ValueError(f"unknown pool_plan {pool_plan!r}")
     policy = resolve_policy(policy_name)
     pair = dist_mod.resolve_pairwise(distance)
-    use_kernel = backend in ("pallas", "pallas_interpret")
+    tmpl = fx.kernel_template(fn)
+    use_kernel = backend in ("pallas", "pallas_interpret") and tmpl is not None
     sharded_pool = pool_plan == "sharded"
     if use_kernel:
         from repro.kernels import ops as kops
 
-    def local_scan(V_loc, pool, d_e0_loc, cand_rounds, w0):
-        cache0 = d_e0_loc.astype(jnp.float32)
-        L0 = jax.lax.psum(jnp.sum(cache0), axes) / n_total
+    def local_scan(V_loc, pool, seed_loc, aux_loc, cand_rounds, w0):
+        n_loc = V_loc.shape[0]
+        off = jax.lax.axis_index(axes) * n_loc
+        seedf = seed_loc.astype(jnp.float32)
+        v0 = jax.lax.psum(
+            jnp.sum(fx.stat_rows(fn, seedf, aux_loc)), axes) / n_total
+        psum_ = lambda x: jax.lax.psum(x, axes)  # noqa: E731
+
+        def value_of(cache):
+            vec, aux = cache
+            mean_stat = jax.lax.psum(
+                jnp.sum(fx.stat_rows(fn, vec, aux_loc)) / n_total, axes)
+            return fx.value_from_stat(fn, v0, mean_stat, aux, n_total)
 
         def fold(cache, w):
-            dw = pair(V_loc, w[None, :], policy)[:, 0]
-            return jnp.minimum(cache, dw.astype(jnp.float32))
+            vec, aux = cache
+            row, gidx = w
+            dw = pair(V_loc, row[None, :], policy)[:, 0]
+            folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+            # aux advances from the PRE-fold vec; its psum (graph cut's
+            # owner gather) executes unconditionally so every shard issues
+            # the same collectives, and the where gates after
+            new_aux = fx.fold_aux(fn, vec, aux, gidx, off, n_loc, psum=psum_)
+            ok = gidx >= 0
+            return (jnp.where(ok, folded, vec), jnp.where(ok, new_aux, aux))
 
-        def psum_gains_mean(g_part, cache):
+        def psum_gains_val(g_part, cache):
             """ONE O(m)-byte collective per scored batch: the (m,) per-shard
-            gain partials plus the shard's cache row-sum ride one psum."""
+            gain partials plus the shard's stat row-sum ride one psum."""
+            vec, aux = cache
             payload = jnp.concatenate(
                 [g_part.astype(jnp.float32),
-                 (jnp.sum(cache) / n_total)[None]])
+                 (jnp.sum(fx.stat_rows(fn, vec, aux_loc)) / n_total)[None]])
             out = jax.lax.psum(payload, axes)
-            return out[:-1], out[-1]
+            return out[:-1], fx.value_from_stat(fn, v0, out[-1], aux, n_total)
 
-        def score_part(cache, C):
+        def score_part(vec, C):
             # per-shard gain partials: the kernel path tiles VMEM blocks
             # itself, the jnp path streams (n_loc, block_m) tiles — neither
             # materializes an (n_loc, m) distance block on any shard
+            sc = fx.score_cache_rows(fn, vec, aux_loc)
             if use_kernel:
                 return kops.marginal_gain(
-                    V_loc, C, cache, policy=policy, rbf_gamma=rbf_gamma,
+                    V_loc, C, sc, policy=policy, rbf_gamma=rbf_gamma,
+                    fold=tmpl[0], score_affine=tmpl[1],
                     interpret=(backend != "pallas"), n_total=n_total)
-            return _score_blocked(V_loc, C, cache, pair, policy, block_m,
-                                  n_total=n_total)
+            return _score_blocked(V_loc, C, sc, pair, policy, block_m,
+                                  n_total=n_total, fn=fn, row_aux=aux_loc)
 
-        def score_mean(cache, C):
-            # CELF re-scoring: every shard agrees on the while-loop's
-            # iteration count because the bound state is replicated
-            # (post-psum gains), so the per-iteration collectives line up
-            return psum_gains_mean(score_part(cache, C), cache)
-
-        def mean_of(cache):
-            return jax.lax.psum(jnp.sum(cache) / n_total, axes)
+        cache0 = (seedf, jnp.float32(0.0))
+        w0c = (w0.astype(pool.dtype), jnp.asarray(-1, jnp.int32))
 
         if sharded_pool:
             n_loc_pool = pool.shape[0]
-            off = jax.lax.axis_index(axes) * n_loc_pool
+            off_pool = jax.lax.axis_index(axes) * n_loc_pool
 
-            def take(idx):
+            def take_rows(idxv):
                 """Materialize pool rows for *global* indices: one psum of
                 the owner's rows against everyone else's zeros (exact — the
                 psum adds one real row and p−1 zero rows)."""
-                scalar = jnp.ndim(idx) == 0
-                idxv = jnp.atleast_1d(idx)
-                rel = idxv - off
+                rel = idxv - off_pool
                 own = (rel >= 0) & (rel < n_loc_pool)
                 rows = pool[jnp.clip(rel, 0, n_loc_pool - 1)]
-                rows = jax.lax.psum(
+                return jax.lax.psum(
                     jnp.where(own[:, None], rows, jnp.zeros_like(rows)),
                     axes)
-                return rows[0] if scalar else rows
 
-            def score_idx_part(cache, idx):
+            def take(j):
+                return take_rows(jnp.atleast_1d(j))[0], j
+
+            def score_idx(cache, idx):
                 # stream index blocks: take-materialize (block_m, d), score
                 # the local tile, never hold two blocks at once
+                vec, _aux = cache
                 m = idx.shape[0]
                 bm = min(block_m, m)
                 m_pad = -(-m // bm) * bm
                 idx_p = jnp.pad(idx, (0, m_pad - m))
                 parts = jax.lax.map(
-                    lambda ib: score_part(cache, take(ib)),
-                    idx_p.reshape(-1, bm)).reshape(-1)
-                return parts[:m]
+                    lambda ib: score_part(vec, take_rows(ib)),
+                    idx_p.reshape(-1, bm)).reshape(-1)[:m]
+                extra = fx.gains_index_extra(fn, vec, idx, off, n_loc,
+                                             n_total)
+                return parts if extra is None else parts + extra
 
-            def score_idx_mean(cache, idx):
-                return psum_gains_mean(score_idx_part(cache, idx), cache)
+            def score_idx_val(cache, idx):
+                return psum_gains_val(score_idx(cache, idx), cache)
 
-            def fold_score_mean(cache, w_prev, cand_t):
-                # the fold stays an explicit jnp minimum: the winner column
-                # was already gathered last round, and blocks only
+            def fold_score_val(cache, w_prev, cand_t):
+                # the fold stays explicit: the winner column was already
+                # gathered last round, and candidate blocks only
                 # materialize inside the streamed scoring below
                 cache = fold(cache, w_prev)
-                gains, mean_c = score_idx_mean(cache, cand_t)
-                return gains, cache, mean_c
+                gains, val = score_idx_val(cache, cand_t)
+                return gains, cache, val
 
-            def seed_mean(cache):
-                return score_idx_mean(
+            def seed_val(cache):
+                return score_idx_val(
                     cache, jnp.arange(n_total, dtype=jnp.int32))
 
             return drive_selection_scan(
                 kind=kind, k=k, top_b=top_b, n_global=n_total, take=take,
-                n_pool=n_total, seed_mean=seed_mean,
-                score_idx_mean=score_idx_mean, cand_rounds=cand_rounds,
-                cache0=cache0, w0=w0.astype(pool.dtype), L0=L0, fold=fold,
-                score_mean=score_mean, fold_score_mean=fold_score_mean,
-                mean_of=mean_of)
+                n_pool=n_total, seed_val=seed_val,
+                score_idx_val=score_idx_val, cand_rounds=cand_rounds,
+                cache0=cache0, w0=w0c, fold=fold,
+                fold_score_val=fold_score_val, value_of=value_of)
 
-        if use_kernel:
+        def score_idx_val(cache, idx):
+            vec, _aux = cache
+            g = score_part(vec, pool[idx])
+            extra = fx.gains_index_extra(fn, vec, idx, off, n_loc, n_total)
+            return psum_gains_val(g if extra is None else g + extra, cache)
 
-            def fold_score_mean(cache, w_prev, cand_t):
+        if use_kernel and fx.kernel_fused_ok(fn):
+
+            def fold_score_val(cache, w_prev, cand_t):
                 # fused dense/stochastic round: the winner fold happens
-                # inside the kernel on the local shard tile
-                g_part, cache = kops.fused_gain_update(
-                    V_loc, pool[cand_t], cache, w_prev, policy=policy,
-                    rbf_gamma=rbf_gamma, interpret=(backend != "pallas"),
-                    n_total=n_total)
-                gains, mean_c = psum_gains_mean(g_part, cache)
-                return gains, cache, mean_c
+                # inside the kernel on the local shard tile (fused-eligible
+                # functions carry no aux and no index extra)
+                vec, aux = cache
+                row, gidx = w_prev
+                g_part, vec2 = kops.fused_gain_update(
+                    V_loc, pool[cand_t], vec, row, policy=policy,
+                    rbf_gamma=rbf_gamma, fold=tmpl[0], score_affine=tmpl[1],
+                    interpret=(backend != "pallas"), n_total=n_total,
+                    w_valid=(gidx >= 0).astype(jnp.float32))
+                cache2 = (vec2, aux)
+                gains, val = psum_gains_val(g_part, cache2)
+                return gains, cache2, val
         else:
 
-            def fold_score_mean(cache, w_prev, cand_t):
-                cache = fold(cache, w_prev)
-                gains, mean_c = score_mean(cache, pool[cand_t])
-                return gains, cache, mean_c
+            def fold_score_val(cache, w_prev, cand_t):
+                cache2 = fold(cache, w_prev)
+                gains, val = score_idx_val(cache2, cand_t)
+                return gains, cache2, val
 
         return drive_selection_scan(
             kind=kind, k=k, top_b=top_b, n_global=n_total, pool=pool,
-            cand_rounds=cand_rounds, cache0=cache0, w0=w0.astype(pool.dtype),
-            L0=L0, fold=fold, score_mean=score_mean,
-            fold_score_mean=fold_score_mean, mean_of=mean_of)
+            cand_rounds=cand_rounds, cache0=cache0, w0=w0c, fold=fold,
+            score_idx_val=score_idx_val, fold_score_val=fold_score_val,
+            value_of=value_of)
 
     smapped = shard_map(
         local_scan,
         mesh=mesh,
         in_specs=(P(axes, None),
                   P(axes, None) if sharded_pool else P(None, None),
-                  P(axes), P(None, None), P(None)),
+                  P(axes), P(axes), P(None, None), P(None)),
         out_specs=(P(None), P(None), P(None)),
         check_rep=False,
     )
 
     @jax.jit
-    def run(V_sh, pool, d_e0_sh, cand_rounds, w0):
+    def run(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0):
         DEVICE_TRACE_COUNTS[counter_key] += 1
-        return smapped(V_sh, pool, d_e0_sh, cand_rounds, w0)
+        return smapped(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0)
 
     _SELECTION_SCAN_CACHE[key] = run
     return run
@@ -389,16 +432,22 @@ def _mesh_extent(mesh: Mesh, axes: Sequence[str]) -> int:
 
 
 def _placed_sharded(f, mesh: Mesh, axes: tuple, replicated_pool: bool):
-    """Shard-place (and cache on ``f``) V's padded rows and the d_e0 seed.
+    """Shard-place (and cache on ``f``) V's padded rows plus the function's
+    cache seed and per-row auxiliary.
 
-    Zero padding rows carry cache entries of 0, so they contribute nothing
-    to gains or sums. The placement is cached on the function instance (V
-    is immutable) so repeat runs pay no transfer; delete
-    ``f._sharded_placement_cache`` to release the device memory. Only the
-    MOST RECENT (mesh, axes) is kept, and the **replicated** candidate pool
-    — O(n·d) resident per device, the ``device_sharded`` plan's documented
-    tradeoff — is built lazily, only when that plan actually runs: the
-    sharded-pool and greedi plans never pin it.
+    V pads with zero rows; the seed and row_aux pad with the function's
+    sentinel values (:func:`functions.pad_seed` / ``pad_row_aux``) so pad
+    rows contribute nothing to gains or stat sums — 0 for the min/additive
+    caches, +inf dead-row markers for the max-cache functions (a zero V row
+    is a *real-looking* point whose similarity to candidates is positive,
+    so only the sentinel makes it inert). The placement is cached on the
+    function instance (V, seed and aux are immutable) so repeat runs pay no
+    transfer; delete ``f._sharded_placement_cache`` to release the device
+    memory. Only the MOST RECENT (mesh, axes) is kept, and the
+    **replicated** candidate pool — O(n·d) resident per device, the
+    ``device_sharded`` plan's documented tradeoff — is built lazily, only
+    when that plan actually runs: the sharded-pool and greedi plans never
+    pin it.
     """
     n = f.n
     ndev = _mesh_extent(mesh, axes)
@@ -406,10 +455,14 @@ def _placed_sharded(f, mesh: Mesh, axes: tuple, replicated_pool: bool):
     placed = getattr(f, "_sharded_placement_cache", None)
     if placed is None or placed[0] != (mesh, axes):
         Vp = jnp.pad(f.V, ((0, n_pad - n), (0, 0)))
-        d_e0p = jnp.pad(f.d_e0.astype(jnp.float32), (0, n_pad - n))
+        seedp = jnp.pad(f.cache_seed, (0, n_pad - n),
+                        constant_values=fx.pad_seed(f.spec))
+        auxp = jnp.pad(f.row_aux, (0, n_pad - n),
+                       constant_values=fx.pad_row_aux(f.spec))
         placed = f._sharded_placement_cache = ((mesh, axes), {
             "V_sh": jax.device_put(Vp, NamedSharding(mesh, P(axes, None))),
-            "d_e0_sh": jax.device_put(d_e0p, NamedSharding(mesh, P(axes))),
+            "seed_sh": jax.device_put(seedp, NamedSharding(mesh, P(axes))),
+            "aux_sh": jax.device_put(auxp, NamedSharding(mesh, P(axes))),
         })
     entry = placed[1]
     if replicated_pool and "pool" not in entry:
@@ -419,7 +472,7 @@ def _placed_sharded(f, mesh: Mesh, axes: tuple, replicated_pool: bool):
 
 
 def run_sharded_selection(
-    f,                       # ExemplarClustering (untyped: avoids circularity)
+    f,                       # SubmodularFunction (untyped: avoids circularity)
     cand_rounds: jax.Array,  # (k, m) int32 global candidate indices
     w0: jax.Array,
     *,
@@ -464,14 +517,14 @@ def run_sharded_selection(
     if pool_plan == "sharded":
         bm = min(bm, max(8, n_loc))
     entry = _placed_sharded(f, mesh, axes, pool_plan == "replicated")
-    V_sh, d_e0_sh = entry["V_sh"], entry["d_e0_sh"]
+    V_sh, seed_sh, aux_sh = entry["V_sh"], entry["seed_sh"], entry["aux_sh"]
     pool = entry["pool"] if pool_plan == "replicated" else V_sh
-    fn = make_selection_scan(
-        mesh, axes, kind=kind, k=k, top_b=top_b, n_total=n, block_m=bm,
-        distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
-        counter_key=counter_key, backend=backend, rbf_gamma=rbf_gamma,
-        pool_plan=pool_plan)
-    return fn(V_sh, pool, d_e0_sh, cand_rounds, w0)
+    scan = make_selection_scan(
+        mesh, axes, fn=f.spec, kind=kind, k=k, top_b=top_b, n_total=n,
+        block_m=bm, distance=f.cfg.distance,
+        policy_name=f.cfg.resolved_policy().name, counter_key=counter_key,
+        backend=backend, rbf_gamma=rbf_gamma, pool_plan=pool_plan)
+    return scan(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0)
 
 
 # ---------------------------------------------------------------------------
@@ -491,6 +544,7 @@ def make_greedi_scan(
     mesh: Mesh,
     data_axes: Sequence[str],
     *,
+    fn: FnSpec = FnSpec(),
     k: int,
     n_total: int,
     block_m: int,
@@ -502,62 +556,110 @@ def make_greedi_scan(
 ):
     """Build (and cache) the jitted two-phase GreeDi scan.
 
-    Returns ``fn(V_sh, d_e0_sh, w0) -> (sel, traj, n_scored)``. Both phases
-    run inside ONE ``shard_map`` dispatch: phase 1 is the *existing*
-    single-device scan construction (:func:`engine._make_fold_and_score` on
-    the local partition — on Pallas backends the winner fold rides in the
-    fused kernel exactly like plan ``device``), driven with ``taken0``
-    masking the shard's zero-padding rows; phase 2 reuses
-    ``drive_selection_scan`` with the sharded-cache psum callbacks and the
-    gathered (p·k, d) pool replicated (it is k·p·d ≪ n·d, the same budget
-    class as the multiset payload). The merge trajectory is the *global*
-    f(S_t) (cache sharded, psum'd mean), so the returned trajectory is
-    directly comparable with every other plan; ``n_scored`` sums the
-    partition rounds' actually-scored candidates (psum) plus the merge
-    round's. Selections carry the GreeDi partition bound rather than
-    matching centralized greedy.
+    Returns ``run(V_sh, seed_sh, aux_sh, w0) -> (sel, traj, n_scored)``.
+    Both phases run inside ONE ``shard_map`` dispatch: phase 1 is the
+    single-device scan construction on the local partition (on Pallas
+    backends a fused-eligible function's winner fold rides in the fused
+    kernel exactly like plan ``device``; gains normalize by the *local* n so
+    the partition function is self-consistent — for graph cut the penalty
+    normalizer must match the gain normalizer for the argmax to be
+    meaningful), driven with ``taken0`` masking the shard's zero-padding
+    rows; phase 2 follows Mirzasoleiman et al.'s Alg. 2 in full: the
+    gathered p·k partial solutions replicate (k·p·d ≪ n·d, the same budget
+    class as the multiset payload), each partition's OWN solution is
+    evaluated *globally* (p·k extra sharded folds), and a merge greedy over
+    the pool runs under the sharded-cache psum callbacks — the answer is
+    whichever of {merged greedy, best single-partition solution} scores
+    higher (the "best-of-both" max the proven bound is stated for). The
+    merge trajectory is the *global* f(S_t) (cache sharded, psum'd stat), so
+    the returned trajectory is directly comparable with every other plan;
+    ``n_scored`` sums the partition rounds' actually-scored candidates
+    (psum) plus the merge round's plus the p·k global evaluation folds.
+    Selections carry the GreeDi partition bound rather than matching
+    centralized greedy.
     """
     axes = tuple(data_axes)
-    key = (mesh, axes, k, n_total, block_m, distance, policy_name,
+    key = (mesh, axes, fn, k, n_total, block_m, distance, policy_name,
            counter_key, backend, rbf_gamma)
     if key in _GREEDI_SCAN_CACHE:
         return _GREEDI_SCAN_CACHE[key]
     policy = resolve_policy(policy_name)
     pair = dist_mod.resolve_pairwise(distance)
-    use_kernel = backend in ("pallas", "pallas_interpret")
+    tmpl = fx.kernel_template(fn)
+    use_kernel = backend in ("pallas", "pallas_interpret") and tmpl is not None
     if use_kernel:
         from repro.kernels import ops as kops
     p_total = _mesh_extent(mesh, axes)
 
-    def local_scan(V_loc, d_e0_loc, w0):
+    def local_scan(V_loc, seed_loc, aux_loc, w0):
         n_loc, d = V_loc.shape
         lin = jax.lax.axis_index(axes)
         off = lin * n_loc
-        cache0 = d_e0_loc.astype(jnp.float32)
-        w0 = w0.astype(V_loc.dtype)
+        seedf = seed_loc.astype(jnp.float32)
+        cache0 = (seedf, jnp.float32(0.0))
+        w0c = (w0.astype(V_loc.dtype), jnp.asarray(-1, jnp.int32))
+        psum_ = lambda x: jax.lax.psum(x, axes)  # noqa: E731
 
         # ---- phase 1: independent dense greedy over the local partition
-        # (the single-device scan construction verbatim; gains normalized by
-        # the global n — a positive constant, so the argmax is unchanged)
-        fold_and_score = _make_fold_and_score(
-            V_loc, pair, policy, backend, rbf_gamma, block_m)
+        # (no collectives at all — local indices, local normalizers; the
+        # phase-1 trajectory is partition-local and discarded)
+        v0_loc = jnp.mean(fx.stat_rows(fn, seedf, aux_loc))
+
+        def value_local(cache):
+            vec, aux = cache
+            return fx.value_from_stat(
+                fn, v0_loc, jnp.mean(fx.stat_rows(fn, vec, aux_loc)), aux,
+                n_loc)
 
         def fold_local(cache, w):
-            dw = pair(V_loc, w[None, :], policy)[:, 0]
-            return jnp.minimum(cache, dw.astype(jnp.float32))
+            vec, aux = cache
+            row, idx = w
+            dw = pair(V_loc, row[None, :], policy)[:, 0]
+            folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+            new_aux = fx.fold_aux(fn, vec, aux, idx, 0, n_loc)
+            ok = idx >= 0
+            return (jnp.where(ok, folded, vec), jnp.where(ok, new_aux, aux))
 
-        def fold_score_local(cache, w_prev, cand_t):
-            gains, cache = fold_and_score(cache, w_prev, V_loc[cand_t])
-            return gains, cache, jnp.mean(cache)
+        def score_local(vec, C, n_norm):
+            sc = fx.score_cache_rows(fn, vec, aux_loc)
+            if use_kernel:
+                return kops.marginal_gain(
+                    V_loc, C, sc, policy=policy, rbf_gamma=rbf_gamma,
+                    fold=tmpl[0], score_affine=tmpl[1],
+                    interpret=(backend != "pallas"), n_total=n_norm)
+            return _score_blocked(V_loc, C, sc, pair, policy, block_m,
+                                  n_total=n_norm, fn=fn, row_aux=aux_loc)
+
+        if use_kernel and fx.kernel_fused_ok(fn):
+
+            def fold_score_local(cache, w_prev, cand_t):
+                vec, aux = cache
+                row, idx = w_prev
+                g, vec2 = kops.fused_gain_update(
+                    V_loc, V_loc[cand_t], vec, row, policy=policy,
+                    rbf_gamma=rbf_gamma, fold=tmpl[0], score_affine=tmpl[1],
+                    interpret=(backend != "pallas"),
+                    w_valid=(idx >= 0).astype(jnp.float32))
+                cache2 = (vec2, aux)
+                return g, cache2, value_local(cache2)
+        else:
+
+            def fold_score_local(cache, w_prev, cand_t):
+                cache2 = fold_local(cache, w_prev)
+                vec2, _aux2 = cache2
+                g = score_local(vec2, V_loc[cand_t], None)
+                extra = fx.gains_index_extra(fn, vec2, cand_t, 0, n_loc,
+                                             n_loc)
+                g = g if extra is None else g + extra
+                return g, cache2, value_local(cache2)
 
         pad_taken = (jnp.arange(n_loc, dtype=jnp.int32) + off) >= n_total
         sel1, _, nsc1 = drive_selection_scan(
             kind="dense", k=k, top_b=0, n_global=n_total, pool=V_loc,
             taken0=pad_taken,
             cand_rounds=jnp.arange(n_loc, dtype=jnp.int32)[None, :],
-            cache0=cache0, w0=w0, L0=jnp.float32(0.0), fold=fold_local,
-            score_mean=None, fold_score_mean=fold_score_local,
-            mean_of=jnp.mean)
+            cache0=cache0, w0=w0c, fold=fold_local,
+            fold_score_val=fold_score_local, value_of=value_local)
 
         # ---- all-gather the p·k partial solutions: each shard owns one
         # slot of the (p, k, ·) buffers, one psum fills them all
@@ -571,64 +673,119 @@ def make_greedi_scan(
             axes).reshape(p_total * k)
         nsc1_total = jax.lax.psum(nsc1, axes)
 
-        # ---- phase 2: merge greedy over the gathered pool, cache sharded
-        L0g = jax.lax.psum(jnp.sum(cache0), axes) / n_total
+        # ---- global cache machinery shared by the local-solution
+        # evaluation and the merge greedy
+        v0g = jax.lax.psum(
+            jnp.sum(fx.stat_rows(fn, seedf, aux_loc)), axes) / n_total
 
-        def psum_gains_mean(g_part, cache):
+        def value_global(cache):
+            vec, aux = cache
+            mean_stat = jax.lax.psum(
+                jnp.sum(fx.stat_rows(fn, vec, aux_loc)) / n_total, axes)
+            return fx.value_from_stat(fn, v0g, mean_stat, aux, n_total)
+
+        def fold_global(cache, w):
+            vec, aux = cache
+            row, gidx = w
+            dw = pair(V_loc, row[None, :], policy)[:, 0]
+            folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+            new_aux = fx.fold_aux(fn, vec, aux, gidx, off, n_loc,
+                                  psum=psum_)
+            ok = gidx >= 0
+            return (jnp.where(ok, folded, vec), jnp.where(ok, new_aux, aux))
+
+        def psum_gains_val(g_part, cache):
+            vec, aux = cache
             payload = jnp.concatenate(
                 [g_part.astype(jnp.float32),
-                 (jnp.sum(cache) / n_total)[None]])
+                 (jnp.sum(fx.stat_rows(fn, vec, aux_loc)) / n_total)[None]])
             out = jax.lax.psum(payload, axes)
-            return out[:-1], out[-1]
+            return out[:-1], fx.value_from_stat(fn, v0g, out[-1], aux,
+                                                n_total)
 
-        if use_kernel:
+        # ---- evaluate each partition's solution GLOBALLY (best-of-both):
+        # p·k extra folds against fresh sharded caches; every shard runs the
+        # identical p·k fold/value collectives, so the psums stay uniform
+        rows_pk = merged_vec.reshape(p_total, k, d)
+        idx_pk = merged_idx.reshape(p_total, k)
+
+        def eval_solution(args):
+            rows_q, idx_q = args
+
+            def body(cache, wt):
+                row_t, idx_t = wt
+                cache = fold_global(cache, (row_t, idx_t))
+                return cache, value_global(cache)
+
+            _, vals = jax.lax.scan(body, cache0, (rows_q, idx_q))
+            return vals
+
+        local_trajs = jax.lax.map(eval_solution, (rows_pk, idx_pk))  # (p, k)
+        best_q = jnp.argmax(local_trajs[:, -1])
+        best_local_val = local_trajs[best_q, -1]
+
+        # ---- merge greedy over the gathered pool, cache sharded
+        if use_kernel and fx.kernel_fused_ok(fn):
 
             def fold_score_merge(cache, w_prev, cand_t):
-                g_part, cache = kops.fused_gain_update(
-                    V_loc, merged_vec[cand_t], cache, w_prev, policy=policy,
-                    rbf_gamma=rbf_gamma, interpret=(backend != "pallas"),
-                    n_total=n_total)
-                gains, mean_c = psum_gains_mean(g_part, cache)
-                return gains, cache, mean_c
+                vec, aux = cache
+                row, gidx = w_prev
+                g_part, vec2 = kops.fused_gain_update(
+                    V_loc, merged_vec[cand_t], vec, row, policy=policy,
+                    rbf_gamma=rbf_gamma, fold=tmpl[0], score_affine=tmpl[1],
+                    interpret=(backend != "pallas"), n_total=n_total,
+                    w_valid=(gidx >= 0).astype(jnp.float32))
+                cache2 = (vec2, aux)
+                gains, val = psum_gains_val(g_part, cache2)
+                return gains, cache2, val
         else:
 
             def fold_score_merge(cache, w_prev, cand_t):
-                cache = fold_local(cache, w_prev)
-                g_part = _score_blocked(
-                    V_loc, merged_vec[cand_t], cache, pair, policy, block_m,
-                    n_total=n_total)
-                gains, mean_c = psum_gains_mean(g_part, cache)
-                return gains, cache, mean_c
-
-        def mean_of(cache):
-            return jax.lax.psum(jnp.sum(cache) / n_total, axes)
+                cache2 = fold_global(cache, w_prev)
+                vec2, _aux2 = cache2
+                g = score_local(vec2, merged_vec[cand_t], n_total)
+                extra = fx.gains_index_extra(
+                    fn, vec2, merged_idx[cand_t], off, n_loc, n_total)
+                g = g if extra is None else g + extra
+                gains, val = psum_gains_val(g, cache2)
+                return gains, cache2, val
 
         sel2, traj2, nsc2 = drive_selection_scan(
-            kind="dense", k=k, top_b=0, n_global=n_total, pool=merged_vec,
+            kind="dense", k=k, top_b=0, n_global=n_total,
+            take=lambda j: (merged_vec[j], merged_idx[j]),
+            n_pool=p_total * k,
             cand_rounds=jnp.arange(p_total * k, dtype=jnp.int32)[None, :],
-            cache0=cache0, w0=w0, L0=L0g, fold=fold_local, score_mean=None,
-            fold_score_mean=fold_score_merge, mean_of=mean_of)
-        return merged_idx[sel2], traj2, nsc1_total + nsc2
+            cache0=cache0, w0=w0c, fold=fold_global,
+            fold_score_val=fold_score_merge, value_of=value_global)
+
+        # ---- best-of-both: return whichever of (merged greedy, best
+        # single-partition solution) scores higher globally; ties keep the
+        # merged answer (strict >)
+        use_local = best_local_val > traj2[-1]
+        sel_out = jnp.where(use_local, idx_pk[best_q], merged_idx[sel2])
+        traj_out = jnp.where(use_local, local_trajs[best_q], traj2)
+        n_scored = nsc1_total + nsc2 + jnp.asarray(p_total * k, jnp.int32)
+        return sel_out, traj_out, n_scored
 
     smapped = shard_map(
         local_scan,
         mesh=mesh,
-        in_specs=(P(axes, None), P(axes), P(None)),
+        in_specs=(P(axes, None), P(axes), P(axes), P(None)),
         out_specs=(P(None), P(None), P(None)),
         check_rep=False,
     )
 
     @jax.jit
-    def run(V_sh, d_e0_sh, w0):
+    def run(V_sh, seed_sh, aux_sh, w0):
         DEVICE_TRACE_COUNTS[counter_key] += 1
-        return smapped(V_sh, d_e0_sh, w0)
+        return smapped(V_sh, seed_sh, aux_sh, w0)
 
     _GREEDI_SCAN_CACHE[key] = run
     return run
 
 
 def run_greedi_selection(
-    f,                       # ExemplarClustering (untyped: avoids circularity)
+    f,                       # SubmodularFunction (untyped: avoids circularity)
     w0: jax.Array,
     *,
     k: int,
@@ -660,11 +817,11 @@ def run_greedi_selection(
     bm = block_m if block_m is not None \
         else _device_block_m(n_loc, n_loc, mesh_tiles_per_memory(mesh))
     entry = _placed_sharded(f, mesh, axes, replicated_pool=False)
-    fn = make_greedi_scan(
-        mesh, axes, k=k, n_total=n, block_m=bm, distance=f.cfg.distance,
-        policy_name=f.cfg.resolved_policy().name, counter_key=counter_key,
-        backend=backend, rbf_gamma=rbf_gamma)
-    return fn(entry["V_sh"], entry["d_e0_sh"], w0)
+    scan = make_greedi_scan(
+        mesh, axes, fn=f.spec, k=k, n_total=n, block_m=bm,
+        distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
+        counter_key=counter_key, backend=backend, rbf_gamma=rbf_gamma)
+    return scan(entry["V_sh"], entry["seed_sh"], entry["aux_sh"], w0)
 
 
 def distributed_greedy(

@@ -55,8 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import distances as dist_mod
+from repro.core import functions as fx
 from repro.core.evaluator import free_memory_bytes
-from repro.core.functions import ExemplarClustering, gains_formula
+from repro.core.functions import FnSpec, SubmodularFunction
 from repro.core.precision import resolve as resolve_policy
 
 
@@ -170,13 +171,18 @@ def mesh_tiles_per_memory(mesh) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _score_blocked(V, C, cache, pair, policy, block_m: int,
-                   n_total: Optional[int] = None) -> jax.Array:
-    """Gains of candidates C against ``cache`` in (n, block_m) tiles.
+def _score_blocked(V, C, sc, pair, policy, block_m: int,
+                   n_total: Optional[int] = None, fn: FnSpec = FnSpec(),
+                   row_aux=None) -> jax.Array:
+    """Gains of candidate payload C against score-cache rows ``sc`` in
+    (n, block_m) tiles.
 
     Streams candidates in blocks so the distance tile stays memory-bounded;
-    ``gains_formula`` is shared with the host path, which keeps the
-    per-column reduction (and hence the argmax) identical.
+    ``functions.gains_formula_spec`` is shared with the host path, which
+    keeps the per-column reduction (and hence the argmax) identical. The
+    index-addressed extra term (graph cut's penalty) is NOT included —
+    callers that know the candidates' global indices add
+    ``functions.gains_index_extra`` outside the payload blocking.
     """
     mc, d = C.shape
     bm = min(block_m, mc)
@@ -184,37 +190,74 @@ def _score_blocked(V, C, cache, pair, policy, block_m: int,
     Cp = jnp.pad(C, ((0, m_pad - mc), (0, 0)))
     blocks = Cp.reshape(-1, bm, d)
     gains = jax.lax.map(
-        lambda Cb: gains_formula(V, Cb, cache, pair, policy, n_total=n_total),
+        lambda Cb: fx.gains_formula_spec(fn, V, Cb, sc, row_aux, pair,
+                                         policy, n_total=n_total),
         blocks,
     ).reshape(-1)
     return gains[:mc]
 
 
-def _make_fold_and_score(V, pair, policy, backend, rbf_gamma, block_m):
-    """Build fold-winner-then-score for the single-device scan step.
+def _make_score_payload(V, pair, policy, backend, rbf_gamma, block_m,
+                        fn: FnSpec, row_aux, n_total=None):
+    """Build ``score(sc, C) -> gains`` over candidate payload rows.
 
-    Returns ``fn(cache, w_prev, C) -> (gains, new_cache)``. On Pallas
-    backends the fold rides inside the fused gain kernel; on jnp the fold is
-    an explicit O(n) minimum followed by blocked scoring.
+    Routes through the shared min/max Pallas kernel template when the
+    function has one and the backend asks for kernels; otherwise the blocked
+    jnp reduction. Gains exclude the index-addressed extra term.
     """
-    use_kernel = backend in ("pallas", "pallas_interpret")
-    if use_kernel:
+    tmpl = fx.kernel_template(fn)
+    if backend != "jnp" and tmpl is not None:
         from repro.kernels import ops as kops
 
-        def fold_and_score(cache, w_prev, C):
+        def score(sc, C):
+            return kops.marginal_gain(
+                V, C, sc, policy=policy, rbf_gamma=rbf_gamma,
+                fold=tmpl[0], score_affine=tmpl[1], n_total=n_total,
+                interpret=(backend != "pallas"))
+    else:
+
+        def score(sc, C):
+            return _score_blocked(V, C, sc, pair, policy, block_m,
+                                  n_total=n_total, fn=fn, row_aux=row_aux)
+
+    return score
+
+
+def _make_fold_and_score(V, pair, policy, backend, rbf_gamma, block_m,
+                         fn: FnSpec = FnSpec(), row_aux=None, n_total=None):
+    """Build fold-winner-then-score for a dense/stochastic scan step.
+
+    Returns ``step(vec, w_row, w_ok, C) -> (gains, new_vec)`` over the cache
+    *vector*: fold the previous winner's row in (gated by the float ``w_ok``
+    — round 0 has no winner, and the max/additive folds are not idempotent),
+    then score candidate payload ``C`` against the updated cache. On Pallas
+    backends with a fused-eligible function the fold rides inside the fused
+    gain kernel; otherwise an explicit O(n) fold precedes (kernel or
+    blocked-jnp) scoring. Scalar aux state and index-addressed gain extras
+    are the caller's business (they need global winner/candidate indices).
+    """
+    tmpl = fx.kernel_template(fn)
+    if backend != "jnp" and tmpl is not None and fx.kernel_fused_ok(fn):
+        from repro.kernels import ops as kops
+
+        def fold_and_score(vec, w_row, w_ok, C):
             # block_m only sizes the jnp streaming block (HBM working set);
             # the kernel tiles its own VMEM blocks and never materializes
             # the (n, m) matrix, so it keeps its default tile size
             return kops.fused_gain_update(
-                V, C, cache, w_prev, policy=policy, rbf_gamma=rbf_gamma,
-                interpret=(backend != "pallas"))
+                V, C, vec, w_row, policy=policy, rbf_gamma=rbf_gamma,
+                fold=tmpl[0], score_affine=tmpl[1], n_total=n_total,
+                w_valid=w_ok, interpret=(backend != "pallas"))
     else:
+        score = _make_score_payload(V, pair, policy, backend, rbf_gamma,
+                                    block_m, fn, row_aux, n_total=n_total)
 
-        def fold_and_score(cache, w_prev, C):
-            dw = pair(V, w_prev[None, :], policy)[:, 0]
-            cache = jnp.minimum(cache, dw.astype(jnp.float32))
-            gains = _score_blocked(V, C, cache, pair, policy, block_m)
-            return gains, cache
+        def fold_and_score(vec, w_row, w_ok, C):
+            dw = pair(V, w_row[None, :], policy)[:, 0]
+            folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+            vec = jnp.where(w_ok > 0, folded, vec)
+            gains = score(fx.score_cache_rows(fn, vec, row_aux), C)
+            return gains, vec
 
     return fold_and_score
 
@@ -226,22 +269,24 @@ def _make_fold_and_score(V, pair, policy, backend, rbf_gamma, block_m):
 # ---------------------------------------------------------------------------
 
 
-def make_rounds_step(take, fold_score_mean, L0):
+def make_rounds_step(take, fold_score_val):
     """Dense/stochastic scan step over per-round candidate index rows.
 
-    ``fold_score_mean(cache, w_prev, cand_t) -> (gains, new_cache,
-    mean_cache)`` folds the previous winner and scores the round's candidate
-    indices; how the candidate *payload* materializes is the plan's business
+    ``fold_score_val(cache, w_prev, cand_t) -> (gains, new_cache, value)``
+    folds the previous winner and scores the round's candidate indices; how
+    the candidate *payload* materializes is the plan's business
     (single-device: one gather from the resident pool; sharded pool: index
     blocks psum-materialized from their owning shards, never all at once).
-    ``take(idx)`` resolves indices to payload rows — for the round winner it
-    is the per-round "winner column all-gather" that replaces carrying a
-    materialized candidate block.
+    ``take(idx)`` resolves a winner index to its ``(payload row, global
+    index)`` carry — the row is the per-round "winner column all-gather"
+    that replaces carrying a materialized candidate block; the global index
+    feeds the next round's gated fold (and index-addressed aux state). The
+    ``cache`` is the function's ``(vec, aux)`` pytree.
     """
 
     def step(carry, cand_t):
         cache, taken, w_prev = carry
-        gains, cache, mean_c = fold_score_mean(cache, w_prev, cand_t)
+        gains, cache, val = fold_score_val(cache, w_prev, cand_t)
         live = ~taken[cand_t]
         gains = jnp.where(live, gains, -jnp.inf)
         p = jnp.argmax(gains)
@@ -250,8 +295,7 @@ def make_rounds_step(take, fold_score_mean, L0):
         # emit the -1 sentinel (the engine boundary raises on it) instead of
         # silently re-selecting whatever index argmax fell through to
         j_out = jnp.where(gains[p] > -jnp.inf, j, -1)
-        # cache includes winners 0..t-1 here → this is trajectory[t-1]
-        val = L0 - mean_c
+        # cache includes winners 0..t-1 here → val is trajectory[t-1]
         return ((cache, taken.at[j].set(True), take(j)),
                 (j_out, val, jnp.sum(live).astype(jnp.int32)))
 
@@ -266,23 +310,24 @@ def celf_max_iters(n: int, top_b: int) -> int:
     return -(-n // top_b) + 1
 
 
-def make_lazy_step(take, n_pool, fold, score_idx_mean, L0, top_b: int,
+def make_lazy_step(take, n_pool, fold, score_idx_val, top_b: int,
                    max_iters: int):
     """CELF scan step: while-loop of top-B re-scoring over stale bounds.
 
-    ``fold(cache, w) -> cache`` folds the previous winner once per round;
-    ``score_idx_mean(cache, idx) -> (gains, mean_cache)`` scores candidate
+    ``fold(cache, w) -> cache`` folds the previous ``(row, index)`` winner
+    once per round (gated internally on index ≥ 0);
+    ``score_idx_val(cache, idx) -> (gains, value)`` scores candidate
     *indices* (replicated plans gather-and-score in one batch; the sharded
     pool streams blocked takes so the transient block never exceeds the
     resident shard even when top_b > n/p) with one psum carrying both on
-    mesh plans; ``take(idx)`` resolves the winner's index to its payload
-    row (sharded pool: one psum materializing only that column — the bound
-    state itself stays a replicated (n,) scalar array, never an (n, d)
-    payload). The loop body always runs ≥ once per round (nothing starts
-    fresh), so ``mean_c`` is always the round's true mean cache; it stops
-    when the fresh-top invariant — best re-scored gain ≥ every remaining
-    stale bound — certifies the winner, degenerating to a full re-score
-    after ⌈n/B⌉ iterations.
+    mesh plans; ``take(idx)`` resolves the winner's index to its
+    ``(payload row, global index)`` carry (sharded pool: one psum
+    materializing only that column — the bound state itself stays a
+    replicated (n,) scalar array, never an (n, d) payload). The loop body
+    always runs ≥ once per round (nothing starts fresh), so ``val`` is
+    always the round's true f(S_t); it stops when the fresh-top invariant —
+    best re-scored gain ≥ every remaining stale bound — certifies the
+    winner, degenerating to a full re-score after ⌈n/B⌉ iterations.
     """
 
     def step(carry, _):
@@ -300,20 +345,19 @@ def make_lazy_step(take, n_pool, fold, score_idx_mean, L0, top_b: int,
             stale = jnp.where(fresh | taken, -jnp.inf, ub_c)
             top_ub, top_idx = jax.lax.top_k(stale, top_b)
             live = top_ub > -jnp.inf
-            gains_b, mean_c = score_idx_mean(cache, top_idx)
+            gains_b, val = score_idx_val(cache, top_idx)
             gains_b = jnp.where(live, gains_b, -jnp.inf)
             ub_c = ub_c.at[top_idx].set(
                 jnp.where(live, gains_b, ub_c[top_idx]))
             fresh = fresh.at[top_idx].set(fresh[top_idx] | live)
-            return ub_c, fresh, scored + jnp.sum(live), mean_c, it + 1
+            return ub_c, fresh, scored + jnp.sum(live), val, it + 1
 
-        ub, fresh, scored, mean_c, _ = jax.lax.while_loop(
+        ub, fresh, scored, val, _ = jax.lax.while_loop(
             invariant_fails, rescore_top_b,
             (ub, jnp.zeros((n_pool,), bool), jnp.asarray(0, jnp.int32),
              jnp.asarray(0.0, jnp.float32), jnp.asarray(0, jnp.int32)))
         j = jnp.argmax(jnp.where(fresh & ~taken, ub, -jnp.inf))
-        # cache includes winners 0..t-1 here → this is trajectory[t-1]
-        val = L0 - mean_c
+        # cache includes winners 0..t-1 here → val is trajectory[t-1]
         return ((cache, taken.at[j].set(True), take(j), ub),
                 (j, val, scored))
 
@@ -328,67 +372,68 @@ def make_lazy_step(take, n_pool, fold, score_idx_mean, L0, top_b: int,
 
 
 def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
-                         n_pool=None, taken0=None, seed_mean=None,
-                         score_idx_mean=None, cand_rounds, cache0, w0, L0,
-                         fold, score_mean, fold_score_mean, mean_of):
+                         n_pool=None, taken0=None, seed_val=None,
+                         score_idx_val=None, cand_rounds, cache0, w0,
+                         fold, fold_score_val=None, value_of=None):
     """Run k selection rounds for any execution plan, given its callbacks.
 
     The plan supplies only how a candidate batch is scored and how the
     winner folds into the (possibly sharded) cache; everything else — CELF's
     ub0 bound seeding, the dense one-row closure vs the stochastic per-round
     scan xs, ``n_scored`` accounting, the final fold, and the trajectory
-    concat — is plan-independent and lives here, once.
+    concat — is plan-independent and lives here, once. The cache is the
+    function's ``(vec, aux)`` pytree; the winner carry is a ``(payload row,
+    global index)`` pair whose index is −1 before round 0 (folds gate on it
+    — the max/additive folds of the function zoo are not idempotent).
 
-    The candidate payload is addressed through ``take(idx) -> rows``: pass a
-    resident ``pool`` (single-device / replicated plans; ``take`` defaults
-    to ``pool[idx]``) or an explicit ``take`` + ``n_pool`` when no plan-wide
-    payload exists (sharded pool: ``take`` psum-materializes the requested
-    columns from their owning shards). ``taken0`` optionally pre-marks pool
-    rows as taken (GreeDi partitions mask their zero-padding rows this way);
-    ``seed_mean`` overrides CELF's ub0 seeding pass and ``score_idx_mean``
-    its per-round top-B re-score (sharded pool: blocked take-and-score for
-    both, so no transient ever exceeds the resident shard).
+    The candidate payload is addressed through ``take(idx) -> (row,
+    gidx)``: pass a resident ``pool`` (single-device / replicated plans;
+    ``take`` defaults to ``(pool[idx], idx)``) or an explicit ``take`` +
+    ``n_pool`` when no plan-wide payload exists (sharded pool: ``take``
+    psum-materializes the requested columns from their owning shards) or
+    when pool-local and global indices differ (GreeDi's merge round).
+    ``taken0`` optionally pre-marks pool rows as taken (GreeDi partitions
+    mask their zero-padding rows this way); ``seed_val`` overrides CELF's
+    ub0 seeding pass (sharded pool: blocked take-and-score, so no transient
+    ever exceeds the resident shard).
 
     Callbacks (single-device: plain jnp/kernel ops; sharded: the same ops on
     the local shard with ONE psum per scored batch riding the gains):
 
-    * ``fold(cache, w) -> cache`` — fold a winner's distances into the cache
-      (used per lazy round and for the final trajectory point).
-    * ``score_mean(cache, C) -> (gains, mean_cache)`` — score a candidate
-      batch against the already-folded cache (lazy rescore + ub0 seeding).
-    * ``fold_score_mean(cache, w_prev, cand_t) -> (gains, cache,
-      mean_cache)`` — the fused dense/stochastic round step over the round's
-      candidate *indices* (on Pallas backends the fold rides inside the gain
-      kernel; sharded pool: blocked take-and-score).
-    * ``mean_of(cache) -> scalar`` — global mean of the cache.
+    * ``fold(cache, w) -> cache`` — fold a winner ``(row, gidx)`` into the
+      cache (used per lazy round and for the final trajectory point),
+      gated internally on gidx ≥ 0.
+    * ``score_idx_val(cache, idx) -> (gains, value)`` — score candidate
+      indices against the already-folded cache (lazy rescore + ub0 seeding).
+    * ``fold_score_val(cache, w_prev, cand_t) -> (gains, cache, value)`` —
+      the fused dense/stochastic round step over the round's candidate
+      *indices* (on Pallas backends the fold rides inside the gain kernel;
+      sharded pool: blocked take-and-score).
+    * ``value_of(cache) -> scalar`` — the global f(S) of the cache.
 
     Returns ``(sel, traj, n_scored)`` per-round stacked outputs.
     """
     if take is None:
-        take = lambda idx: pool[idx]  # noqa: E731 — the replicated default
+        take = lambda idx: (pool[idx], idx)  # noqa: E731 — replicated default
         n_pool = pool.shape[0]
     taken_init = taken0 if taken0 is not None \
         else jnp.zeros((n_pool,), bool)
     if kind == "lazy":
-        if score_idx_mean is None:
-            score_idx_mean = lambda cache, idx: \
-                score_mean(cache, take(idx))  # noqa: E731
-        step = make_lazy_step(take, n_pool, fold, score_idx_mean, L0, top_b,
+        step = make_lazy_step(take, n_pool, fold, score_idx_val, top_b,
                               celf_max_iters(n_global, top_b))
         # round -1: fresh singleton gains seed the bounds (counts one eval
         # per pool row, exactly like host CELF's initial full scoring)
-        if seed_mean is not None:
-            ub0, _ = seed_mean(cache0)
+        if seed_val is not None:
+            ub0, _ = seed_val(cache0)
         else:
-            ub0, _ = score_mean(
-                cache0, pool if pool is not None
-                else take(jnp.arange(n_pool, dtype=jnp.int32)))
+            ub0, _ = score_idx_val(
+                cache0, jnp.arange(n_pool, dtype=jnp.int32))
         init = (cache0, taken_init, w0, ub0)
         (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
             step, init, None, length=k)
         n_scored = jnp.asarray(n_pool, jnp.int32) + jnp.sum(scored)
     else:
-        step = make_rounds_step(take, fold_score_mean, L0)
+        step = make_rounds_step(take, fold_score_val)
         init = (cache0, taken_init, w0)
         if kind == "dense":
             # one candidate row closed over by all k rounds
@@ -401,7 +446,7 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
         n_scored = jnp.sum(scored)
 
     # one final fold for the last trajectory point
-    final_val = L0 - mean_of(fold(cache, w_last))
+    final_val = value_of(fold(cache, w_last))
     traj = jnp.concatenate([vals[1:], final_val[None]])
     return sel.astype(jnp.int32), traj, n_scored
 
@@ -411,23 +456,31 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("kind", "k", "top_b", "distance",
+@partial(jax.jit, static_argnames=("fn", "kind", "k", "top_b", "distance",
                                    "policy_name", "block_m", "backend",
                                    "rbf_gamma", "counter_key"))
-def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
-                 policy_name, block_m, backend, rbf_gamma, counter_key):
-    """All k selection rounds in one dispatch.
+def _select_scan(V, seed, row_aux, cand_rounds, w0, *, fn, kind, k, top_b,
+                 distance, policy_name, block_m, backend, rbf_gamma,
+                 counter_key):
+    """All k selection rounds in one dispatch, for any vec-cache function.
+
+    ``fn`` is the function's static :class:`~repro.core.functions.FnSpec`;
+    ``seed``/``row_aux`` its cache seed and per-row auxiliary. The identical
+    cache-semantics helpers the host protocol methods use are re-traced here
+    around the scan, which is what makes host and device selections agree.
 
     ``cand_rounds`` holds the candidate indices: (1, m) for dense (ONE row,
     closed over by every round — never materialized k times), (k, m) for
     stochastic (pre-sampled per round), (1, 0) for lazy, which derives its
-    candidates from the carried stale bounds. The carry
-    is ``(mincache, taken-mask, previous winner[, stale bounds])``; the
-    winner is folded into the cache at the *start* of the next round — for
-    dense/stochastic on the Pallas backend the fold rides inside the fused
-    gain kernel so the winner's distance column never re-materializes in
-    HBM; lazy folds once explicitly because its while-loop re-scores
-    variable candidate batches against the already-folded cache.
+    candidates from the carried stale bounds. The carry is ``((vec, aux)
+    cache, taken-mask, previous (row, idx) winner[, stale bounds])``; the
+    winner is folded into the cache at the *start* of the next round (gated
+    on idx ≥ 0 — round 0 has no winner and the max/additive folds are not
+    idempotent) — for dense/stochastic on the Pallas backend with a
+    fused-eligible function the fold rides inside the fused gain kernel so
+    the winner's distance column never re-materializes in HBM; lazy folds
+    once explicitly because its while-loop re-scores variable candidate
+    batches against the already-folded cache.
 
     Per-round ys are ``(selected index, trajectory value, #actually-scored
     candidates)`` — the last is the engine's honest ``evaluations`` unit.
@@ -435,47 +488,66 @@ def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
     DEVICE_TRACE_COUNTS[counter_key] += 1
     policy = resolve_policy(policy_name)
     pair = dist_mod.resolve_pairwise(distance)
-    d_e0f = d_e0.astype(jnp.float32)
-    L0 = jnp.mean(d_e0f)
+    n = V.shape[0]
+    seedf = seed.astype(jnp.float32)
+    v0 = jnp.mean(fx.stat_rows(fn, seedf, row_aux))
+
+    def value_of(cache):
+        vec, aux = cache
+        return fx.value_from_stat(
+            fn, v0, jnp.mean(fx.stat_rows(fn, vec, row_aux)), aux, n)
 
     def fold(cache, w):
-        dw = pair(V, w[None, :], policy)[:, 0]
-        return jnp.minimum(cache, dw.astype(jnp.float32))
+        vec, aux = cache
+        row, idx = w
+        dw = pair(V, row[None, :], policy)[:, 0]
+        folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+        new_aux = fx.fold_aux(fn, vec, aux, idx, 0, n)
+        ok = idx >= 0
+        return (jnp.where(ok, folded, vec), jnp.where(ok, new_aux, aux))
 
-    score_mean = fold_score_mean = None
-    if kind == "lazy":
-        use_kernel = backend in ("pallas", "pallas_interpret")
-        if use_kernel:
-            from repro.kernels import ops as kops
+    score = _make_score_payload(V, pair, policy, backend, rbf_gamma,
+                                block_m, fn, row_aux)
 
-            def score(cache, C):
-                return kops.marginal_gain(
-                    V, C, cache, policy=policy, rbf_gamma=rbf_gamma,
-                    interpret=(backend != "pallas"))
-        else:
+    def score_idx(cache, idx):
+        vec, _aux = cache
+        gains = score(fx.score_cache_rows(fn, vec, row_aux), V[idx])
+        extra = fx.gains_index_extra(fn, vec, idx, 0, n, n)
+        return gains if extra is None else gains + extra
 
-            def score(cache, C):
-                return _score_blocked(V, C, cache, pair, policy, block_m)
+    def score_idx_val(cache, idx):
+        return score_idx(cache, idx), value_of(cache)
 
-        def score_mean(cache, C):
-            return score(cache, C), jnp.mean(cache)
-
-    else:
+    fold_score_val = None
+    if kind != "lazy":
         # no outer candidate padding: _score_blocked (jnp) and the fused
         # kernel (pallas) both pad internally, so the step construction is
         # identical to the device_sharded plan's
-        fold_and_score = _make_fold_and_score(
-            V, pair, policy, backend, rbf_gamma, block_m)
+        if backend != "jnp" and fx.kernel_fused_ok(fn) \
+                and fx.kernel_template(fn) is not None:
+            fold_and_score = _make_fold_and_score(
+                V, pair, policy, backend, rbf_gamma, block_m, fn=fn,
+                row_aux=row_aux)
 
-        def fold_score_mean(cache, w_prev, cand_t):
-            gains, cache = fold_and_score(cache, w_prev, V[cand_t])
-            return gains, cache, jnp.mean(cache)
+            def fold_score_val(cache, w_prev, cand_t):
+                vec, aux = cache
+                row, idx = w_prev
+                gains, vec2 = fold_and_score(
+                    vec, row, (idx >= 0).astype(jnp.float32), V[cand_t])
+                cache2 = (vec2, aux)  # fused-eligible functions carry no aux
+                return gains, cache2, value_of(cache2)
+        else:
 
+            def fold_score_val(cache, w_prev, cand_t):
+                cache2 = fold(cache, w_prev)
+                return score_idx(cache2, cand_t), cache2, value_of(cache2)
+
+    w0c = (w0.astype(V.dtype), jnp.asarray(-1, jnp.int32))
     return drive_selection_scan(
-        kind=kind, k=k, top_b=top_b, n_global=V.shape[0], pool=V,
-        cand_rounds=cand_rounds, cache0=d_e0f, w0=w0.astype(V.dtype), L0=L0,
-        fold=fold, score_mean=score_mean, fold_score_mean=fold_score_mean,
-        mean_of=jnp.mean)
+        kind=kind, k=k, top_b=top_b, n_global=n, pool=V,
+        cand_rounds=cand_rounds, cache0=(seedf, jnp.float32(0.0)), w0=w0c,
+        fold=fold, score_idx_val=score_idx_val,
+        fold_score_val=fold_score_val, value_of=value_of)
 
 
 # ---------------------------------------------------------------------------
@@ -484,7 +556,7 @@ def _select_scan(V, d_e0, cand_rounds, w0, *, kind, k, top_b, distance,
 
 
 def run_selection(
-    f: ExemplarClustering,
+    f: SubmodularFunction,
     *,
     kind: str,                        # "dense" | "stochastic" | "lazy"
     k: int,
@@ -519,6 +591,11 @@ def run_selection(
     """
     if k == 0:
         return OptResult([], 0.0, [], 0)
+    fn = f.spec
+    if fn.name not in fx.DEVICE_PLAN_ELIGIBLE:
+        raise ValueError(
+            f"function {fn.name!r} has no n-aligned vec cache to shard or "
+            f"scan over — it runs on the host execution plans only")
     n_cand = f.n if kind == "lazy" or cand_rounds is None \
         else len(np.unique(cand_rounds[0] if kind == "dense" else cand_rounds))
     if k > n_cand:
@@ -529,6 +606,9 @@ def run_selection(
     policy = f.cfg.resolved_policy()
     backend = f.cfg.backend if f.cfg.backend in ("pallas", "pallas_interpret") \
         else "jnp"
+    if fx.kernel_template(fn) is None:
+        # no kernel form (saturated coverage): jnp scoring on any backend
+        backend = "jnp"
     if backend != "jnp" and f.cfg.distance not in dist_mod.MXU_ELIGIBLE:
         raise ValueError(
             f"device plans with a pallas backend support "
@@ -552,8 +632,9 @@ def run_selection(
         bm = block_m if block_m is not None \
             else _device_block_m(f.n, m_widest)
         sel, traj, n_scored = _select_scan(
-            f.V, f.d_e0, jnp.asarray(cand_rounds, jnp.int32), w0,
-            kind=kind, k=k, top_b=top_b, distance=f.cfg.distance,
+            f.V, f.cache_seed, f.row_aux,
+            jnp.asarray(cand_rounds, jnp.int32), w0,
+            fn=fn, kind=kind, k=k, top_b=top_b, distance=f.cfg.distance,
             policy_name=policy.name, block_m=bm, backend=backend,
             rbf_gamma=rbf_gamma, counter_key=counter_key)
     elif plan in ("device_sharded", "device_sharded_pool"):

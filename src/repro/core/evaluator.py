@@ -56,6 +56,32 @@ class EvalConfig:
     memory_budget_bytes: Optional[int | str] = None
     n_block: Optional[int] = None  # stream over V in blocks of this many rows
 
+    def __post_init__(self):
+        # Fail at construction, not deep inside the first dispatch: an
+        # unknown distance used to surface as resolve_pairwise's KeyError
+        # mid-trace, long after the config was built.
+        if self.distance not in dist_mod.PAIRWISE:
+            raise ValueError(
+                f"unknown distance {self.distance!r}; registered: "
+                f"{sorted(dist_mod.PAIRWISE)}")
+        if self.mode not in ("fused", "two_pass"):
+            raise ValueError(
+                f"mode must be 'fused' or 'two_pass', got {self.mode!r}")
+        if self.backend not in ("jnp", "naive", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of "
+                f"'jnp', 'naive', 'pallas', 'pallas_interpret'")
+        if self.kernel_variant not in ("flat", "loop"):
+            raise ValueError(
+                f"kernel_variant must be 'flat' or 'loop', "
+                f"got {self.kernel_variant!r}")
+        resolve_policy(self.policy)  # raises on unknown policy names
+        if isinstance(self.memory_budget_bytes, str) \
+                and self.memory_budget_bytes != "auto":
+            raise ValueError(
+                f"memory_budget_bytes must be an int, None, or 'auto'; "
+                f"got {self.memory_budget_bytes!r}")
+
     def resolved_policy(self) -> PrecisionPolicy:
         return resolve_policy(self.policy)
 

@@ -85,7 +85,19 @@ import numpy as np
 
 from repro.core.engine import (DEVICE_TRACE_COUNTS, OptResult,
                                run_selection, validate_candidates)
-from repro.core.functions import ExemplarClustering
+from repro.core.functions import ExemplarClustering, SubmodularFunction
+
+
+def _require_exemplar(f: SubmodularFunction, what: str) -> ExemplarClustering:
+    """Paths that consume exemplar-only structure (the packed multiset
+    engine, the L0/d_e0 streaming shortcuts) guard here; everything else in
+    this module speaks the generic cache-semantics protocol."""
+    if f.spec.name != "exemplar":
+        raise ValueError(
+            f"{what} is exemplar-only (it evaluates through the packed "
+            f"multiset / L0 interface); function {f.spec.name!r} runs on "
+            f"the cache-protocol paths instead")
+    return f
 
 
 # ---------------------------------------------------------------------------
@@ -94,7 +106,7 @@ from repro.core.functions import ExemplarClustering
 
 
 def greedy(
-    f: ExemplarClustering,
+    f: SubmodularFunction,
     k: int,
     mode: str = "mincache",
     candidates: Optional[np.ndarray] = None,
@@ -145,17 +157,18 @@ def greedy(
     traj: list[float] = []
     evals = 0
     if mode == "mincache":
-        cache = f.init_mincache()
+        cache = f.init_cache()
         for _ in range(k):
-            gains = np.array(f.marginal_gains(f.V[cand_idx], cache))
+            gains = np.array(f.gains_from_cache(cache, cand_idx))
             masked = np.isin(cand_idx, selected)
             evals += len(cand_idx) - int(masked.sum())
             gains[masked] = -np.inf
             j = int(cand_idx[int(np.argmax(gains))])
             selected.append(j)
-            cache = f.update_mincache(cache, f.V[j])
-            traj.append(f.value_from_mincache(cache))
+            cache = f.fold_winner(cache, j)
+            traj.append(f.value_from_cache(cache))
     elif mode == "multiset":
+        _require_exemplar(f, "greedy mode='multiset'")
         for _ in range(k):
             base = f.V[np.asarray(selected, dtype=np.int64)] if selected else \
                 jnp.zeros((0, f.dim), f.V.dtype)
@@ -172,7 +185,7 @@ def greedy(
 
 
 def lazy_greedy(
-    f: ExemplarClustering,
+    f: SubmodularFunction,
     k: int,
     batch: int = 256,
     mode: str = "host",
@@ -217,8 +230,9 @@ def lazy_greedy(
         raise ValueError(f"unknown lazy_greedy mode {mode!r}")
     n = f.n
     B = max(1, min(batch, n))
-    cache = f.init_mincache()
-    ub = np.asarray(f.marginal_gains(f.V, cache), np.float32).copy()
+    cache = f.init_cache()
+    all_idx = np.arange(n)
+    ub = np.asarray(f.gains_from_cache(cache, all_idx), np.float32).copy()
     evals = n
     taken = np.zeros(n, bool)
     selected: list[int] = []
@@ -232,19 +246,19 @@ def lazy_greedy(
                 break  # fresh-top invariant: the fresh best is the argmax
             top_idx = np.argsort(-stale_vals, kind="stable")[:B]
             top_idx = top_idx[stale_vals[top_idx] > -np.inf]
-            ub[top_idx] = np.asarray(f.marginal_gains(f.V[top_idx], cache))
+            ub[top_idx] = np.asarray(f.gains_from_cache(cache, top_idx))
             fresh[top_idx] = True
             evals += len(top_idx)
         j = int(np.argmax(np.where(fresh & ~taken, ub, -np.inf)))
         selected.append(j)
         taken[j] = True
-        cache = f.update_mincache(cache, f.V[j])
-        traj.append(f.value_from_mincache(cache))
+        cache = f.fold_winner(cache, j)
+        traj.append(f.value_from_cache(cache))
     return OptResult(selected, traj[-1] if traj else 0.0, traj, evals)
 
 
 def stochastic_greedy(
-    f: ExemplarClustering, k: int, eps: float = 0.05, seed: int = 0,
+    f: SubmodularFunction, k: int, eps: float = 0.05, seed: int = 0,
     mode: str = "host", block_m: Optional[int] = None,
     mesh=None, data_axes: Sequence[str] = ("data",),
 ) -> OptResult:
@@ -280,20 +294,20 @@ def stochastic_greedy(
             data_axes=data_axes)
     if mode != "host":
         raise ValueError(f"unknown stochastic_greedy mode {mode!r}")
-    cache = f.init_mincache()
+    cache = f.init_cache()
     selected: list[int] = []
     traj: list[float] = []
     evals = 0
     for t in range(k):
         cand = samples[t]
-        gains = np.array(f.marginal_gains(f.V[cand], cache))
+        gains = np.array(f.gains_from_cache(cache, cand))
         masked = np.isin(cand, selected)
         evals += len(cand) - int(masked.sum())
         gains[masked] = -np.inf
         j = int(cand[int(np.argmax(gains))])
         selected.append(j)
-        cache = f.update_mincache(cache, f.V[j])
-        traj.append(f.value_from_mincache(cache))
+        cache = f.fold_winner(cache, j)
+        traj.append(f.value_from_cache(cache))
     return OptResult(selected, traj[-1], traj, evals)
 
 
@@ -316,7 +330,7 @@ def _stream_eval_count(n_elements: int, n_sieves: int) -> int:
     return n_elements * max(n_sieves, 1)
 
 
-def _stream(f: ExemplarClustering, order: Optional[Sequence[int]], seed: int) -> Iterable[int]:
+def _stream(f: SubmodularFunction, order: Optional[Sequence[int]], seed: int) -> Iterable[int]:
     idx = np.arange(f.n)
     if order is None:
         np.random.default_rng(seed).shuffle(idx)
@@ -324,13 +338,14 @@ def _stream(f: ExemplarClustering, order: Optional[Sequence[int]], seed: int) ->
     return np.asarray(order)
 
 
-def _stream_blocks(f: ExemplarClustering, order: Optional[Sequence[int]],
+def _stream_blocks(f: SubmodularFunction, order: Optional[Sequence[int]],
                    seed: int, block: int):
     """Yield (indices, distance rows, singleton gains) per stream block.
 
     One engine dispatch per block computes the (B, n) distances of the next B
     stream elements against the ground set — the batched replacement for the
-    per-element ``point_distances`` round-trip.
+    per-element ``point_distances`` round-trip. Exemplar-only: the singleton
+    gains read d_e0 directly (callers guard via ``_require_exemplar``).
     """
     idx = np.asarray(_stream(f, order, seed))
     d_e0 = np.asarray(f.d_e0, np.float32)
@@ -341,7 +356,7 @@ def _stream_blocks(f: ExemplarClustering, order: Optional[Sequence[int]],
         yield ib, dmat, singles
 
 
-def _run_sieve(f: ExemplarClustering, k: int, eps: float, variant: str,
+def _run_sieve(f: SubmodularFunction, k: int, eps: float, variant: str,
                order, seed: int, block_size: int, mode: str,
                s_max: Optional[int], mesh=None,
                data_axes: Sequence[str] = ("data",)) -> OptResult:
@@ -361,7 +376,7 @@ def _run_sieve(f: ExemplarClustering, k: int, eps: float, variant: str,
 
 
 def sieve_streaming(
-    f: ExemplarClustering, k: int, eps: float = 0.1,
+    f: SubmodularFunction, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64, mode: str = "host",
     s_max: Optional[int] = None, mesh=None,
@@ -381,7 +396,7 @@ def sieve_streaming(
 
 
 def sieve_streaming_pp(
-    f: ExemplarClustering, k: int, eps: float = 0.1,
+    f: SubmodularFunction, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64, mode: str = "host",
     s_max: Optional[int] = None, mesh=None,
@@ -397,11 +412,12 @@ def sieve_streaming_pp(
 
 
 def three_sieves(
-    f: ExemplarClustering, k: int, eps: float = 0.1, T: int = 50,
+    f: SubmodularFunction, k: int, eps: float = 0.1, T: int = 50,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64,
 ) -> OptResult:
     """ThreeSieves [18]: one sieve, threshold lowered after T rejections."""
+    f = _require_exemplar(f, "three_sieves")
     cache = np.asarray(f.init_mincache(), np.float32)
     members: list[int] = []
     evals = 0
@@ -446,7 +462,7 @@ def three_sieves(
 
 
 def salsa(
-    f: ExemplarClustering, k: int, eps: float = 0.1,
+    f: SubmodularFunction, k: int, eps: float = 0.1,
     order: Optional[Sequence[int]] = None, seed: int = 0,
     block_size: int = 64, mode: str = "host",
     s_max: Optional[int] = None, mesh=None,

@@ -8,7 +8,7 @@ one Python/numpy accept decision per element per block. This module replaces
 that loop with a device-resident engine: the per-sieve state lives on the
 accelerator and each stream block of B elements is consumed by ONE jitted
 ``jax.lax.scan`` over elements — singleton gain, grid rebuild, per-sieve
-accept rule, cache min-update, and member bookkeeping all in the scan body.
+accept rule, cache fold, and member bookkeeping all in the scan body.
 
 Design: the **fixed-capacity sieve table**. Grid growth (a new max singleton
 widens the threshold window) is shape-dynamic on host but must be shape-static
@@ -24,7 +24,7 @@ bounds — the dynamic sieve collection becomes a table of ``S_max`` slots:
   ≤ log(2k)/log(1+ε) + 1 independent of the stream, so with
   ``S_max ≥ width + 2`` every live exponent owns a distinct slot.
 * A grid "rebuild" is a **masked activation**: slots whose assigned exponent
-  changed are reset (cache ← d_e0, size ← 0, members ← −1) in-place inside
+  changed are reset (cache ← seed, size ← 0, members ← −1) in-place inside
   the scan body; slots whose exponent survives keep their state — exactly the
   host semantics of dropping below-window sieves and adding new ones.
 * Salsa's grid is grow-only (old sieves are never dropped), so its exponent
@@ -33,18 +33,30 @@ bounds — the dynamic sieve collection becomes a table of ``S_max`` slots:
   exponent — a well-defined capacity rule the host mirror shares, so parity
   holds by construction even under eviction.
 
+Function generality: the table rows carry whatever (n,)-vec cache the
+objective's :mod:`repro.core.functions` protocol defines — the element step
+reads gains through :func:`~repro.core.functions.sieve_gain_rows`, folds
+accepts through :func:`~repro.core.functions.sieve_fold_rows`, and values
+sieves through ``stat_rows``/``value_from_stat``, so one table definition
+serves every :data:`~repro.core.functions.SIEVE_ELIGIBLE` objective
+(exemplar's min-cache, facility location's max-cache dual, saturated
+coverage's capped-sum cache). The sieve math itself (grid exponents,
+thresholds, accept rules) only assumes monotone gains, which eligibility
+guarantees. Graph cut is excluded: its gain needs the winner-indexed
+redundancy penalty, which a stream element's cache rows alone cannot carry.
+
 Parity: :func:`_element_step` is the ONE definition of the per-element
 transition, written in pure ``jax.numpy``. The host mirror jits it per
 element (the honest per-element dispatch round-trip the device engine
 replaces); the device engine runs the identical function inside the per-block
-scan. On kernel backends (``SieveSpec.backend``) the step's relu-mean gains
-route through the fused table × element Pallas kernel
-(:func:`repro.kernels.ops.sieve_gains`) — in BOTH plans, so the parity
-argument is unchanged. Both consume distance rows from the same
-``ExemplarClustering.point_distances_block`` executable, so host and device
-see bitwise-identical inputs and — all float reductions being the same HLO —
-make identical accept decisions, select identical members, and report
-identical evaluation counts.
+scan. On kernel backends (``SieveSpec.backend``) the step's gains route
+through the fused table × element Pallas kernel
+(:func:`repro.kernels.ops.sieve_gains`) under the function's min/max
+template — in BOTH plans, so the parity argument is unchanged. Both consume
+distance rows from the same ``point_distances_block`` executable, so host
+and device see bitwise-identical inputs and — all float reductions being the
+same HLO — make identical accept decisions, select identical members, and
+report identical evaluation counts.
 """
 from __future__ import annotations
 
@@ -56,7 +68,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import functions as fx
 from repro.core.engine import DEVICE_TRACE_COUNTS
+from repro.core.functions import FnSpec
 
 VARIANTS = ("sieve", "pp", "salsa")
 
@@ -73,12 +87,16 @@ class SieveSpec(NamedTuple):
     s_max: int
     variant: str        # "sieve" | "pp" | "salsa"
     log1p_eps: float    # np.float32(log1p(eps)) — the ONE grid-log constant
-    #: scoring backend for the element step's relu-mean gains: "jnp" runs the
-    #: plain (S_max, n) reduction; "pallas"/"pallas_interpret" run the fused
-    #: table × element kernel (:func:`repro.kernels.ops.sieve_gains`). Part
-    #: of the spec (not the engine) so the host mirror and the device scan
-    #: share ONE definition per backend — parity by construction either way.
+    #: scoring backend for the element step's gains: "jnp" runs the plain
+    #: (S_max, n) protocol reduction; "pallas"/"pallas_interpret" run the
+    #: fused table × element kernel (:func:`repro.kernels.ops.sieve_gains`)
+    #: under the function's min/max template. Part of the spec (not the
+    #: engine) so the host mirror and the device scan share ONE definition
+    #: per backend — parity by construction either way.
     backend: str = "jnp"
+    #: the submodular objective the table rows cache — must be
+    #: :data:`~repro.core.functions.SIEVE_ELIGIBLE`.
+    fn: FnSpec = FnSpec()
 
 
 class SieveState(NamedTuple):
@@ -88,7 +106,7 @@ class SieveState(NamedTuple):
     ``members`` rows are stream ids in arrival order, -1 beyond ``sizes``.
     """
 
-    caches: jax.Array    # (S_max, n) f32 per-sieve min-distance cache
+    caches: jax.Array    # (S_max, n) f32 per-sieve cache rows (fn semantics)
     slot_exp: jax.Array  # (S_max,) i32 threshold exponent i (τ = (1+ε)^i)
     active: jax.Array    # (S_max,) bool
     sizes: jax.Array     # (S_max,) i32 member counts
@@ -100,7 +118,8 @@ class SieveState(NamedTuple):
 
 def make_spec(k: int, eps: float, variant: str,
               s_max: Optional[int] = None,
-              backend: str = "jnp") -> SieveSpec:
+              backend: str = "jnp",
+              fn: FnSpec = FnSpec()) -> SieveSpec:
     if variant not in VARIANTS:
         raise ValueError(f"unknown sieve variant {variant!r}; one of {VARIANTS}")
     if k < 1:
@@ -111,6 +130,16 @@ def make_spec(k: int, eps: float, variant: str,
         raise ValueError(
             f"unknown sieve backend {backend!r}; "
             f"'jnp', 'pallas' or 'pallas_interpret'")
+    if fn.name not in fx.SIEVE_ELIGIBLE:
+        raise ValueError(
+            f"function {fn.name!r} is not sieve-streamable — threshold "
+            f"sieves need monotone gains from the cache rows alone; "
+            f"eligible: {sorted(fx.SIEVE_ELIGIBLE)}")
+    if backend != "jnp" and fx.kernel_template(fn) is None:
+        # no kernel form (saturated coverage's capped gain): the engine is
+        # still valid, the step just scores through the jnp protocol path —
+        # the same silent normalization the selection engine applies
+        backend = "jnp"
     cap = s_max if s_max is not None else default_capacity(k, eps, variant)
     width = grid_width_bound(k, eps)
     if cap < width + 2:
@@ -118,7 +147,8 @@ def make_spec(k: int, eps: float, variant: str,
             f"s_max={cap} cannot hold the live threshold window "
             f"(width ≤ {width}, +2 slack required)")
     return SieveSpec(k, float(eps), int(cap), variant,
-                     float(np.float32(np.log1p(np.float32(eps)))), backend)
+                     float(np.float32(np.log1p(np.float32(eps)))), backend,
+                     fn)
 
 
 def grid_width_bound(k: int, eps: float) -> int:
@@ -137,6 +167,9 @@ def default_capacity(k: int, eps: float, variant: str) -> int:
 
 
 def init_state(n: int, spec: SieveSpec) -> SieveState:
+    """Zeroed table. Cache rows are dead until a slot's first claim resets
+    them to the function's seed, so the init value never reaches a live
+    gain or accept — zeros keep the born-sharded layout trivial."""
     S, k = spec.s_max, spec.k
     return SieveState(
         caches=jnp.zeros((S, n), jnp.float32),
@@ -150,13 +183,15 @@ def init_state(n: int, spec: SieveSpec) -> SieveState:
     )
 
 
-def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
-                  valid, *, mean_rows=None, table_gains=None):
+def _element_step(spec: SieveSpec, seed, v0, state: SieveState, idx, dvec,
+                  valid, *, row_aux, mean_rows=None, table_gains=None):
     """The per-element sieve-table transition — ONE definition, pure jnp.
 
     The host mirror jits this per element; the device engine scans it per
     block. ``valid=False`` (block padding) makes the whole step a no-op.
-    Returns ``(new_state, accepted_anywhere)``.
+    ``seed``/``v0``/``row_aux`` are the function's empty-set cache row, its
+    empty-set baseline value, and its static per-row auxiliary (saturation
+    caps). Returns ``(new_state, accepted_anywhere)``.
 
     The two optional callbacks are the step's only reductions over the
     ground-set axis, injectable so the mesh-sharded engine can run the
@@ -164,23 +199,28 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
     is the trailing-axis mean (sharded: per-shard row sums psum'd and
     normalized by the global n — exactly how selection gains shard) and
     ``table_gains(table, dvec)`` the kernel-backend fused table × element
-    relu-mean (sharded: :func:`repro.kernels.ops.sieve_gains` with the
-    global ``n_total`` normalizer, partials psum'd). Defaults are the
-    single-device reductions. Everything else in the step — thresholds,
-    slot bookkeeping, member tables — is O(S_max)/O(k) state that stays
-    replicated.
+    gain under the function's min/max template (sharded:
+    :func:`repro.kernels.ops.sieve_gains` with the global ``n_total``
+    normalizer, partials psum'd). Defaults are the single-device
+    reductions. Everything else in the step — thresholds, slot bookkeeping,
+    member tables — is O(S_max)/O(k) state that stays replicated.
     """
     k, S = spec.k, spec.s_max
+    fn = spec.fn
     L = spec.log1p_eps
     caches, slot_exp, active, sizes, members, m_seen, lb, evals = state
     if mean_rows is None:
         mean_rows = lambda M: jnp.mean(M, axis=-1)  # noqa: E731
 
+    def values_of(table):
+        return fx.value_from_stat(
+            fn, v0, mean_rows(fx.stat_rows(fn, table, row_aux)))
+
     # singleton gain Δ(e | ∅) — the grid anchor m = max singleton seen.
     # Kernel backends score the whole table in ONE fused pass up front:
-    # row 0 is d_e0 (the empty-set cache, whose gain IS the singleton),
+    # row 0 is the seed (the empty-set cache, whose gain IS the singleton),
     # rows 1: are the pre-rebuild sieve caches. A slot the rebuild below
-    # claims is reset to exactly d_e0, so its post-rebuild gain is the
+    # claims is reset to exactly the seed, so its post-rebuild gain is the
     # singleton — ``where(claim, single, ...)`` recovers the post-rebuild
     # gains without a second kernel pass.
     use_kernel = spec.backend != "jnp"
@@ -188,14 +228,17 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
         if table_gains is None:
             from repro.kernels import ops as kops
 
+            tmpl = fx.kernel_template(fn)
             table_gains = partial(
-                kops.sieve_gains, interpret=(spec.backend != "pallas"))
+                kops.sieve_gains, fold=tmpl[0], score_affine=tmpl[1],
+                interpret=(spec.backend != "pallas"))
 
         g_all = table_gains(
-            jnp.concatenate([d_e0[None, :], caches], axis=0), dvec)
+            jnp.concatenate([seed[None, :], caches], axis=0), dvec)
         single, gains_pre = g_all[0], g_all[1:]
     else:
-        single = mean_rows(jnp.maximum(d_e0 - dvec, 0.0))
+        single = mean_rows(
+            fx.sieve_gain_rows(fn, seed[None, :], dvec, row_aux))[0]
     new_max = valid & (single > m_seen)
     m_seen = jnp.where(new_max, single, m_seen)
 
@@ -227,7 +270,7 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
         active = jnp.where(rebuild, active & (slot_exp >= i_lo - 1), active)
         active = active | claim
     slot_exp = jnp.where(claim, wanted_exp, slot_exp)
-    caches = jnp.where(claim[:, None], d_e0[None, :], caches)
+    caches = jnp.where(claim[:, None], seed[None, :], caches)
     sizes = jnp.where(claim, 0, sizes)
     members = jnp.where(claim[:, None], -1, members)
 
@@ -236,7 +279,7 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
     if use_kernel:
         gains = jnp.where(claim, single, gains_pre)
     else:
-        gains = mean_rows(jnp.maximum(caches - dvec[None, :], 0.0))
+        gains = mean_rows(fx.sieve_gain_rows(fn, caches, dvec, row_aux))
     taus = jnp.exp(slot_exp.astype(jnp.float32) * L)
     if spec.variant == "salsa":
         # dense-threshold schedule: rate 1/2 for the first ⌈k/2⌉ members,
@@ -244,17 +287,16 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
         rate = jnp.where(sizes < (k + 1) // 2, 0.5, 1.0 / (2.0 * math.e))
         need = rate * taus / k
     else:
-        values = L0 - mean_rows(caches)
+        values = values_of(caches)
         need = (taus / 2.0 - values) / jnp.maximum(k - sizes, 1)
     accept = valid & active & (sizes < k) & (gains >= need)
-    caches = jnp.where(accept[:, None], jnp.minimum(caches, dvec[None, :]),
-                       caches)
+    caches = fx.sieve_fold_rows(fn, caches, dvec, accept)
     members = jnp.where(
         accept[:, None] & (jnp.arange(k)[None, :] == sizes[:, None]),
         idx, members)
     sizes = sizes + accept.astype(jnp.int32)
     if spec.variant == "pp":
-        vals_new = L0 - mean_rows(caches)
+        vals_new = values_of(caches)
         lb = jnp.maximum(lb, jnp.max(jnp.where(active, vals_new, -jnp.inf)))
 
     # engine-boundary accounting: one engine call scores the element against
@@ -267,54 +309,68 @@ def _element_step(spec: SieveSpec, d_e0, L0, state: SieveState, idx, dvec,
 
 
 @partial(jax.jit, static_argnames=("spec",))
-def _element_step_jit(state, d_e0, idx, dvec, valid, *, spec):
-    d_e0f = d_e0.astype(jnp.float32)
-    return _element_step(spec, d_e0f, jnp.mean(d_e0f), state, idx, dvec,
-                         valid)
+def _element_step_jit(state, seed, idx, dvec, valid, *, spec, row_aux=None):
+    seedf = seed.astype(jnp.float32)
+    aux = jnp.zeros_like(seedf) if row_aux is None \
+        else row_aux.astype(jnp.float32)
+    v0 = jnp.mean(fx.stat_rows(spec.fn, seedf, aux))
+    return _element_step(spec, seedf, v0, state, idx, dvec, valid,
+                         row_aux=aux)
 
 
 @partial(jax.jit, static_argnames=("spec", "counter_key"))
-def _offer_block_scan(state, d_e0, idxb, dmatb, validb, *, spec, counter_key):
+def _offer_block_scan(state, seed, row_aux, idxb, dmatb, validb, *, spec,
+                      counter_key):
     """Consume a stream block: ONE jitted ``lax.scan`` over its elements."""
     DEVICE_TRACE_COUNTS[counter_key] += 1
-    d_e0f = d_e0.astype(jnp.float32)
-    L0 = jnp.mean(d_e0f)
+    seedf = seed.astype(jnp.float32)
+    auxf = row_aux.astype(jnp.float32)
+    v0 = jnp.mean(fx.stat_rows(spec.fn, seedf, auxf))
 
     def step(st, xs):
         idx, dvec, valid = xs
-        return _element_step(spec, d_e0f, L0, st, idx, dvec, valid)
+        return _element_step(spec, seedf, v0, st, idx, dvec, valid,
+                             row_aux=auxf)
 
     return jax.lax.scan(step, state, (idxb, dmatb, validb))
 
 
-@jax.jit
-def _table_values(caches, d_e0):
+@partial(jax.jit, static_argnames=("fn",))
+def _table_values(caches, seed, row_aux, *, fn: FnSpec):
     """Per-sieve f-values — shared by both engines' ``best`` so equal caches
     yield bit-equal values."""
-    d_e0f = d_e0.astype(jnp.float32)
-    return jnp.mean(d_e0f) - jnp.mean(caches, axis=1)
+    seedf = seed.astype(jnp.float32)
+    auxf = row_aux.astype(jnp.float32)
+    v0 = jnp.mean(fx.stat_rows(fn, seedf, auxf))
+    return fx.value_from_stat(
+        fn, v0, jnp.mean(fx.stat_rows(fn, caches, auxf), axis=-1))
 
 
-@partial(jax.jit, static_argnames=("n_total",))
-def _table_values_padded(caches, d_e0, n_total: int):
-    """f-values of a zero-padded (mesh-sharded) table: padding rows carry
-    0 in both ``d_e0`` and every cache, so the sums are exact and only the
-    normalizer must be the real n. Runs on the global sharded arrays — the
-    partitioner turns the row sums into one small cross-device reduce, so
-    ``best`` never gathers the (S_max, n) table to one device."""
-    d_e0f = d_e0.astype(jnp.float32)
-    return jnp.sum(d_e0f) / n_total - jnp.sum(caches, axis=1) / n_total
+@partial(jax.jit, static_argnames=("fn", "n_total"))
+def _table_values_padded(caches, seed, row_aux, *, fn: FnSpec, n_total: int):
+    """f-values of a padded (mesh-sharded) table: the function's pad
+    sentinels make padding rows contribute exactly 0 to every stat sum
+    (exemplar: seed/cache 0; facility location: seed/aux +inf mask;
+    saturated coverage: cap 0 self-masks), so the sums are exact and only
+    the normalizer must be the real n. Runs on the global sharded arrays —
+    the partitioner turns the row sums into one small cross-device reduce,
+    so ``best`` never gathers the (S_max, n) table to one device."""
+    seedf = seed.astype(jnp.float32)
+    auxf = row_aux.astype(jnp.float32)
+    v0 = jnp.sum(fx.stat_rows(fn, seedf, auxf)) / n_total
+    mean_stat = jnp.sum(fx.stat_rows(fn, caches, auxf), axis=-1) / n_total
+    return fx.value_from_stat(fn, v0, mean_stat)
 
 
 # ---------------------------------------------------------------------------
 # Mesh-sharded block consumption: the (S_max, n) sieve cache table (and the
-# d_e0 seed + per-element distance rows) column-shard over the mesh's data
-# axes, taking per-device streaming state from O(S_max·n) to O(S_max·n/p).
-# The scan body is the IDENTICAL _element_step with its two ground-set
-# reductions swapped for psum'd per-shard partials — the same collective
-# shape as the selection engine's sharded gains (2–3 psums of O(S_max)
-# bytes per element, distances computed shard-locally so the (B, n) block
-# never exists anywhere).
+# cache seed, the row auxiliary, and per-element distance rows) column-shard
+# over the mesh's data axes, taking per-device streaming state from
+# O(S_max·n) to O(S_max·n/p). The scan body is the IDENTICAL _element_step
+# with its two ground-set reductions swapped for psum'd per-shard partials —
+# the same collective shape as the selection engine's sharded gains (2–3
+# psums of O(S_max) bytes per element, distances computed shard-locally so
+# the (B, n) block never exists anywhere).
 # ---------------------------------------------------------------------------
 
 _SHARDED_OFFER_CACHE: dict = {}
@@ -333,12 +389,12 @@ def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
                             counter_key: str):
     """Build (and cache) the jitted mesh-sharded per-block sieve scan.
 
-    Returns ``fn(state, V_sh, d_e0_sh, Xb, idxb, validb) -> (state,
-    accepted)`` where the state's ``caches`` (and ``V_sh``/``d_e0_sh``)
-    shard over ``data_axes`` and every other state leaf is replicated.
-    Distance rows are computed *inside* the shard_map against the local V
-    tile (each entry depends only on its own ground row, so per-entry
-    arithmetic matches ``point_distances_block`` exactly).
+    Returns ``fn(state, V_sh, seed_sh, aux_sh, Xb, idxb, validb) -> (state,
+    accepted)`` where the state's ``caches`` (and ``V_sh``/``seed_sh``/
+    ``aux_sh``) shard over ``data_axes`` and every other state leaf is
+    replicated. Distance rows are computed *inside* the shard_map against
+    the local V tile (each entry depends only on its own ground row, so
+    per-entry arithmetic matches ``point_distances_block`` exactly).
     """
     from repro.core import distances as dist_mod
     from repro.core.precision import resolve as resolve_policy
@@ -355,9 +411,13 @@ def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
     if use_kernel:
         from repro.kernels import ops as kops
 
-    def local_consume(state, V_loc, d_e0_loc, Xb, idxb, validb):
-        d_e0f = d_e0_loc.astype(jnp.float32)
-        L0 = jax.lax.psum(jnp.sum(d_e0f), axes) / n_total
+        tmpl = fx.kernel_template(spec.fn)
+
+    def local_consume(state, V_loc, seed_loc, aux_loc, Xb, idxb, validb):
+        seedf = seed_loc.astype(jnp.float32)
+        auxf = aux_loc.astype(jnp.float32)
+        v0 = jax.lax.psum(
+            jnp.sum(fx.stat_rows(spec.fn, seedf, auxf)), axes) / n_total
         dmat_loc = pair(V_loc, Xb, policy).T.astype(jnp.float32)
 
         def mean_rows(M):
@@ -369,13 +429,14 @@ def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
             def table_gains(table, dvec):
                 part = kops.sieve_gains(
                     table, dvec, n_total=n_total,
+                    fold=tmpl[0], score_affine=tmpl[1],
                     interpret=(spec.backend != "pallas"))
                 return jax.lax.psum(part, axes)
 
         def step(st, xs):
             idx, dvec, valid = xs
-            return _element_step(spec, d_e0f, L0, st, idx, dvec, valid,
-                                 mean_rows=mean_rows,
+            return _element_step(spec, seedf, v0, st, idx, dvec, valid,
+                                 row_aux=auxf, mean_rows=mean_rows,
                                  table_gains=table_gains)
 
         return jax.lax.scan(step, state, (idxb, dmat_loc, validb))
@@ -384,16 +445,16 @@ def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
     smapped = shard_map(
         local_consume,
         mesh=mesh,
-        in_specs=(specs, P(axes, None), P(axes), P(None, None), P(None),
-                  P(None)),
+        in_specs=(specs, P(axes, None), P(axes), P(axes), P(None, None),
+                  P(None), P(None)),
         out_specs=(specs, P(None)),
         check_rep=False,
     )
 
     @jax.jit
-    def run(state, V_sh, d_e0_sh, Xb, idxb, validb):
+    def run(state, V_sh, seed_sh, aux_sh, Xb, idxb, validb):
         DEVICE_TRACE_COUNTS[counter_key] += 1
-        return smapped(state, V_sh, d_e0_sh, Xb, idxb, validb)
+        return smapped(state, V_sh, seed_sh, aux_sh, Xb, idxb, validb)
 
     _SHARDED_OFFER_CACHE[key] = run
     return run
@@ -415,6 +476,10 @@ class _SieveEngineBase:
         self.f = f
         self.spec = spec
         self.block_size = block_size
+        # the function's protocol arrays the element step consumes: the
+        # empty-set cache row and the static per-row auxiliary
+        self._seed = jnp.asarray(f.cache_seed, jnp.float32)
+        self._aux = jnp.asarray(f.row_aux, jnp.float32)
         self.state = self._initial_state()
         # device state counts in int32; folding into a Python int per offer
         # keeps unbounded streams (the service's live-sensor case) exact
@@ -461,7 +526,8 @@ class _SieveEngineBase:
             float(vals[b])
 
     def _values(self) -> jax.Array:
-        return _table_values(self.state.caches, self.f.d_e0)
+        return _table_values(self.state.caches, self._seed, self._aux,
+                             fn=self.spec.fn)
 
     def evaluations(self) -> int:
         return self._evals + int(np.asarray(self.state.evals))
@@ -502,8 +568,8 @@ class HostSieveMirror(_SieveEngineBase):
             if not valid[b]:  # padded no-op step: state provably unchanged
                 continue
             self.state, acc = _element_step_jit(
-                self.state, self.f.d_e0, jnp.int32(idxp[b]), dmat[b], True,
-                spec=self.spec)
+                self.state, self._seed, jnp.int32(idxp[b]), dmat[b], True,
+                spec=self.spec, row_aux=self._aux)
             accepted[b] = bool(acc)
         return accepted
 
@@ -514,10 +580,10 @@ class DeviceSieveEngine(_SieveEngineBase):
     State never leaves the device between blocks (beyond the accept mask
     and the evaluation-counter fold the block boundary reads anyway).
 
-    ``mesh`` column-shards the (S_max, n) cache table — and the d_e0 seed
-    and each element's distance row — over the mesh's ``data_axes``,
-    cutting per-device streaming state to O(S_max·n/p): the pod-scale
-    ground-set regime. The scan body is the identical
+    ``mesh`` column-shards the (S_max, n) cache table — and the cache seed,
+    the row auxiliary, and each element's distance row — over the mesh's
+    ``data_axes``, cutting per-device streaming state to O(S_max·n/p): the
+    pod-scale ground-set regime. The scan body is the identical
     :func:`_element_step`; only its two ground-set reductions become
     psum'd per-shard partials (the sieve-gain kernel already normalizes by
     an explicit global n, so per-shard table tiles psum exactly like
@@ -547,16 +613,19 @@ class DeviceSieveEngine(_SieveEngineBase):
         if mesh is None:
             return
         self._counter_key = f"sieve_{spec.variant}_sharded"
-        # zero padding rows: d_e0 = 0 and cache = 0 ⇒ relu(0 − d) = 0 gain
-        # contribution and 0 in every sum — exact under the real-n
-        # normalizer. The padded placement itself is the selection engine's
-        # (cached on f), so a sieve engine and a sharded selection run on
-        # the same mesh share ONE resident copy of V's shards.
+        # padding rows carry the function's pad sentinels (exemplar: seed 0
+        # so relu(0 − d) = 0; facility location: seed/aux +inf so pad gains
+        # and stats vanish; saturated coverage: cap 0 self-masks) — exact
+        # under the real-n normalizer. The padded placement itself is the
+        # selection engine's (cached on f), so a sieve engine and a sharded
+        # selection run on the same mesh share ONE resident copy of V's
+        # shards.
         from repro.core.distributed import _placed_sharded
 
         entry = _placed_sharded(f, mesh, self._axes, replicated_pool=False)
         self._V_sh = entry["V_sh"]
-        self._d_e0_sh = entry["d_e0_sh"]
+        self._seed_sh = entry["seed_sh"]
+        self._aux_sh = entry["aux_sh"]
         self._offer_fn = make_sharded_offer_scan(
             mesh, self._axes, spec=spec, n_total=f.n,
             distance=f.cfg.distance, policy_name=f.cfg.resolved_policy().name,
@@ -580,20 +649,22 @@ class DeviceSieveEngine(_SieveEngineBase):
 
     def _values(self) -> jax.Array:
         if self.mesh is None:
-            return _table_values(self.state.caches, self.f.d_e0)
-        return _table_values_padded(self.state.caches, self._d_e0_sh,
-                                    self._n_total)
+            return _table_values(self.state.caches, self._seed, self._aux,
+                                 fn=self.spec.fn)
+        return _table_values_padded(self.state.caches, self._seed_sh,
+                                    self._aux_sh, fn=self.spec.fn,
+                                    n_total=self._n_total)
 
     def _consume(self, idxp, payload, valid) -> np.ndarray:
         if self.mesh is None:
             self.state, acc = _offer_block_scan(
-                self.state, self.f.d_e0, jnp.asarray(idxp), payload,
-                jnp.asarray(valid), spec=self.spec,
+                self.state, self._seed, self._aux, jnp.asarray(idxp),
+                payload, jnp.asarray(valid), spec=self.spec,
                 counter_key=self._counter_key)
         else:
             self.state, acc = self._offer_fn(
-                self.state, self._V_sh, self._d_e0_sh, payload,
-                jnp.asarray(idxp), jnp.asarray(valid))
+                self.state, self._V_sh, self._seed_sh, self._aux_sh,
+                payload, jnp.asarray(idxp), jnp.asarray(valid))
         return np.asarray(acc)
 
 
@@ -606,14 +677,19 @@ def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
                       ) -> _SieveEngineBase:
     """Build a sieve engine under an execution plan (``host`` | ``device`` |
     ``device_sharded``), mirroring the selection engine's strategy×plan
-    composition. Both plans take ``block_size`` — it shapes the (padded)
-    distance dispatch, so host and device engines built with the same value
-    run the same executables.
+    composition. The engine streams whatever SIEVE_ELIGIBLE objective ``f``
+    carries (``f.spec``); ineligible functions raise at construction. Both
+    plans take ``block_size`` — it shapes the (padded) distance dispatch, so
+    host and device engines built with the same value run the same
+    executables.
 
     ``backend`` picks the element step's scoring path (``None`` inherits
-    ``f.cfg.backend``): kernel backends run the fused table × element
-    relu-mean (:func:`repro.kernels.ops.sieve_gains`) instead of the plain
-    jnp reduction — in BOTH plans, so parity stays structural.
+    ``f.cfg.backend``): kernel backends run the fused table × element gain
+    under the function's min/max template
+    (:func:`repro.kernels.ops.sieve_gains`) instead of the plain jnp
+    reduction — in BOTH plans, so parity stays structural. A function with
+    no kernel template silently scores through jnp (the same normalization
+    the selection engine applies).
 
     ``mesh`` (or ``mode="device_sharded"``, which defaults to a 1-D mesh
     over all local devices) column-shards the sieve cache table over
@@ -623,7 +699,7 @@ def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
     if backend is None:
         backend = f.cfg.backend \
             if f.cfg.backend in ("pallas", "pallas_interpret") else "jnp"
-    spec = make_spec(k, eps, variant, s_max, backend=backend)
+    spec = make_spec(k, eps, variant, s_max, backend=backend, fn=f.spec)
     if mode == "device_sharded":
         from repro.core.distributed import _resolve_mesh
 

@@ -1,34 +1,55 @@
 """Pallas TPU kernels for optimizer-aware greedy marginal gains (beyond paper).
 
-For Greedy, every candidate set shares the base S, so with the min-distance
-cache ``m_i = min_{s∈S∪{e0}} d(v_i, s)`` the marginal gain collapses to
+For Greedy, every candidate set shares the base S, so with a per-element
+cache the marginal gain collapses to one (n × m) distance matrix (a single
+Gram matmul) + a ReLU/sum epilogue, fused here so the distance matrix never
+reaches HBM. Grid ``(m_tiles, n_tiles)`` with n innermost, accumulating into
+the (Bm, 1) output block.
 
-    Δ(c_j | S) = |V|⁻¹ Σ_i max(m_i − d(v_i, c_j), 0)
+ONE kernel template serves the whole function zoo (see
+:func:`repro.core.functions.kernel_template`), parameterized by the fold
+direction and an in-tile affine of the distance:
 
-— one (n × m) distance matrix (a single Gram matmul) + a ReLU/sum epilogue,
-fused here so the distance matrix never reaches HBM. Grid ``(m_tiles,
-n_tiles)`` with n innermost, accumulating into the (Bm, 1) output block.
+* ``fold="min"`` — the exemplar min-distance cache
+  ``m_i = min_{s∈S∪{e0}} d(v_i, s)``:
 
-Two kernels:
+      Δ(c_j | S) = |V|⁻¹ Σ_i relu(m_i − d(v_i, c_j))
+
+* ``fold="max"`` + ``affine=(α, β)`` — the max-similarity dual (facility
+  location's cache; graph cut scores through it against a static baseline):
+
+      Δ(c_j | S) = |V|⁻¹ Σ_i relu((α + β·d(v_i, c_j)) − c_i)
+
+  The similarity s = relu(α + β·d) needs no inner relu in-tile: the cache is
+  ≥ 0, so relu(relu(x) − c) ≡ relu(x − c). Padding rows carry +inf cache
+  sentinels (relu(s − inf) = 0) — see ``_pad_gain_operands`` in
+  :mod:`repro.kernels.ops`.
+
+Two gain kernels:
 
 * :func:`gain_eval` — gains against a given cache (one greedy round's scoring).
 * :func:`gain_update_eval` — the fused *gain + cache-update* step used by the
   device-resident greedy engine. The previous round's winner ``w`` rides along
   as an extra (1, d) operand; the epilogue recomputes ``d(v_i, w)`` in-tile,
-  folds it into the cache (``m_i ← min(m_i, d(v_i, w))``) and scores the
-  current round's gains against the *updated* cache — so the winner's distance
-  column never re-materializes in HBM (only the (n,) cache itself, which is
-  required state, is written back).
+  folds it into the cache (min: ``m_i ← min(m_i, d_iw)``; max:
+  ``c_i ← max(c_i, relu(α + β·d_iw))``) and scores the current round's gains
+  against the *updated* cache — so the winner's distance column never
+  re-materializes in HBM (only the (n,) cache itself, which is required
+  state, is written back). A (1, 1) ``w_valid`` operand gates the fold:
+  round 0 has no previous winner, and unlike the idempotent min fold the max
+  fold must NOT re-apply a seed row.
 
 A third kernel serves the streaming sieve engine:
 
-* :func:`sieve_gain_eval` — the fused relu-mean of a whole sieve cache
-  *table* against one stream element's distance row: for every table row r,
-  ``|V|⁻¹ Σ_i relu(T[r, i] − dvec[i])``. The (S, n) relu intermediate the
-  jnp scan body materializes per element never exists; table tiles stream
-  past the resident (Bs, 1) accumulator exactly like :func:`gain_eval`
-  streams V tiles past the gain block. No matmul (the distances are already
-  computed) — this is a VPU reduction kernel, fused for HBM traffic.
+* :func:`sieve_gain_eval` — the fused gain of a whole sieve cache *table*
+  against one stream element's distance row: for every table row r,
+  ``|V|⁻¹ Σ_i relu(T[r, i] − dvec[i])`` (min) or
+  ``|V|⁻¹ Σ_i relu((α + β·dvec[i]) − T[r, i])`` (max). The (S, n)
+  intermediate the jnp scan body materializes per element never exists;
+  table tiles stream past the resident (Bs, 1) accumulator exactly like
+  :func:`gain_eval` streams V tiles past the gain block. No matmul (the
+  distances are already computed) — this is a VPU reduction kernel, fused
+  for HBM traffic.
 
 All kernels normalize by an explicit ``n_total`` rather than ``V.shape[0]``:
 passed the *global* ground-set size, they are callable on one row-shard of a
@@ -50,18 +71,35 @@ from repro.core.precision import PrecisionPolicy
 from repro.kernels.exemplar_eval import _dist_tile
 
 
-def _relu_sum_tile(cache, d2, n_total: int):
-    """Scoring epilogue shared by both kernels: |V|⁻¹ Σ relu(m_i − d_ij).
+def _score_tile(cache, d2, n_total: int, fold: str, affine):
+    """Scoring epilogue shared by the gain kernels.
 
-    The relu runs in the distance dtype (matches ref.marginal_gain_ref), the
-    accumulation always in float32.
+    min: |V|⁻¹ Σ relu(m_i − d_ij) — the relu runs in the distance dtype
+    (matches ref.marginal_gain_ref). max: |V|⁻¹ Σ relu((α + β·d_ij) − c_i)
+    — the affine runs in the distance dtype, the subtraction against the
+    float32 cache in float32 (matches the jnp promotion in
+    ``functions.gains_rows``). Accumulation is always float32.
     """
-    g = jnp.maximum(cache.astype(d2.dtype) - d2, 0.0)
+    if fold == "min":
+        g = jnp.maximum(cache.astype(d2.dtype) - d2, 0.0)
+    else:
+        a, b = affine
+        g = jnp.maximum((a + b * d2) - cache.astype(jnp.float32), 0.0)
     return jnp.sum(g.astype(jnp.float32), axis=0) / n_total
 
 
+def _fold_tile(cache, dw, fold: str, affine):
+    """Winner fold of a float32 cache tile against the winner's distance
+    column ``dw`` (computed in-tile at policy precision)."""
+    if fold == "min":
+        return jnp.minimum(cache, dw.astype(jnp.float32))
+    a, b = affine
+    return jnp.maximum(cache, jnp.maximum(a + b * dw.astype(jnp.float32), 0.0))
+
+
 def _gain_kernel(v_ref, c_ref, cache_ref, out_ref, *,
-                 n_total: int, policy: PrecisionPolicy, rbf_gamma):
+                 n_total: int, policy: PrecisionPolicy, rbf_gamma,
+                 fold: str, affine):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -71,7 +109,7 @@ def _gain_kernel(v_ref, c_ref, cache_ref, out_ref, *,
     v = v_ref[...].astype(policy.compute_dtype)      # (Bn, d)
     c = c_ref[...].astype(policy.compute_dtype)      # (Bm, d)
     d2 = _dist_tile(v, c, policy, rbf_gamma)         # (Bn, Bm)
-    partial = _relu_sum_tile(cache_ref[...], d2, n_total)
+    partial = _score_tile(cache_ref[...], d2, n_total, fold, affine)
     out_ref[...] += partial[:, None]
 
 
@@ -85,6 +123,8 @@ def gain_eval(
     block_n: int,
     block_m: int,
     rbf_gamma: Optional[float] = None,
+    fold: str = "min",
+    affine: Optional[tuple] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Returns (m_pad, 1) float32 marginal gains."""
@@ -92,7 +132,8 @@ def gain_eval(
     m_pad = C.shape[0]
     grid = (m_pad // block_m, n_pad // block_n)
     kern = functools.partial(
-        _gain_kernel, n_total=n_total, policy=policy, rbf_gamma=rbf_gamma)
+        _gain_kernel, n_total=n_total, policy=policy, rbf_gamma=rbf_gamma,
+        fold=fold, affine=affine)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -107,8 +148,10 @@ def gain_eval(
     )(V, C, cache)
 
 
-def _gain_update_kernel(v_ref, c_ref, cache_ref, w_ref, gain_ref, cache_out_ref,
-                        *, n_total: int, policy: PrecisionPolicy, rbf_gamma):
+def _gain_update_kernel(v_ref, c_ref, cache_ref, w_ref, wv_ref,
+                        gain_ref, cache_out_ref,
+                        *, n_total: int, policy: PrecisionPolicy, rbf_gamma,
+                        fold: str, affine):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -119,12 +162,15 @@ def _gain_update_kernel(v_ref, c_ref, cache_ref, w_ref, gain_ref, cache_out_ref,
     w = w_ref[...].astype(policy.compute_dtype)      # (1, d) previous winner
     cache = cache_ref[...].astype(jnp.float32)       # (Bn, 1)
     dw = _dist_tile(v, w, policy, rbf_gamma)         # (Bn, 1)
-    new_cache = jnp.minimum(cache, dw.astype(jnp.float32))
+    # w_valid gates the fold (round 0 has no winner; the max fold is not
+    # idempotent, so an ungated seed row would corrupt the cache)
+    new_cache = jnp.where(wv_ref[0, 0] > 0,
+                          _fold_tile(cache, dw, fold, affine), cache)
     cache_out_ref[...] = new_cache                   # idempotent across m tiles
 
     c = c_ref[...].astype(policy.compute_dtype)      # (Bm, d)
     d2 = _dist_tile(v, c, policy, rbf_gamma)         # (Bn, Bm)
-    partial = _relu_sum_tile(new_cache, d2, n_total)
+    partial = _score_tile(new_cache, d2, n_total, fold, affine)
     gain_ref[...] += partial[:, None]
 
 
@@ -133,12 +179,15 @@ def gain_update_eval(
     C: jax.Array,          # (m_pad, d_pad)
     cache: jax.Array,      # (n_pad, 1) float32 — cache *before* the winner
     winner: jax.Array,     # (1, d_pad) — previous round's winning candidate
+    w_valid: jax.Array,    # (1, 1) float32 — 0 disables the fold (round 0)
     *,
     n_total: int,
     policy: PrecisionPolicy,
     block_n: int,
     block_m: int,
     rbf_gamma: Optional[float] = None,
+    fold: str = "min",
+    affine: Optional[tuple] = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused greedy step: fold ``winner`` into the cache, score all candidates.
@@ -149,7 +198,8 @@ def gain_update_eval(
     m_pad = C.shape[0]
     grid = (m_pad // block_m, n_pad // block_n)
     kern = functools.partial(
-        _gain_update_kernel, n_total=n_total, policy=policy, rbf_gamma=rbf_gamma)
+        _gain_update_kernel, n_total=n_total, policy=policy,
+        rbf_gamma=rbf_gamma, fold=fold, affine=affine)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -158,6 +208,7 @@ def gain_update_eval(
             pl.BlockSpec((block_m, d_pad), lambda i, j: (i, 0)),
             pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)),
             pl.BlockSpec((1, d_pad), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
         ],
         out_specs=(
             pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
@@ -168,10 +219,11 @@ def gain_update_eval(
             jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
         ),
         interpret=interpret,
-    )(V, C, cache, winner)
+    )(V, C, cache, winner, w_valid)
 
 
-def _sieve_gain_kernel(t_ref, dvec_ref, out_ref, *, n_total: int):
+def _sieve_gain_kernel(t_ref, dvec_ref, out_ref, *, n_total: int,
+                       fold: str, affine):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -180,7 +232,11 @@ def _sieve_gain_kernel(t_ref, dvec_ref, out_ref, *, n_total: int):
 
     t = t_ref[...].astype(jnp.float32)               # (Bs, Bn) cache rows
     dv = dvec_ref[...].astype(jnp.float32)           # (1, Bn) element row
-    g = jnp.maximum(t - dv, 0.0)
+    if fold == "min":
+        g = jnp.maximum(t - dv, 0.0)
+    else:
+        a, b = affine
+        g = jnp.maximum((a + b * dv) - t, 0.0)
     out_ref[...] += (jnp.sum(g, axis=1) / n_total)[:, None]
 
 
@@ -191,18 +247,24 @@ def sieve_gain_eval(
     n_total: int,
     block_s: int,
     block_n: int,
+    fold: str = "min",
+    affine: Optional[tuple] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns (s_pad, 1) float32 per-row relu-mean gains.
+    """Returns (s_pad, 1) float32 per-row gains.
 
-    Rows are arbitrary min-distance caches (live sieves, stale slots, or the
-    ``d_e0`` empty-set cache whose gain is the singleton Δ(e | ∅)); callers
-    mask rows downstream. Zero-padded rows/columns contribute exactly 0
-    (``relu(0 − d) = 0`` for d ≥ 0), so padding never changes a gain.
+    Rows are arbitrary per-element caches (live sieves, stale slots, or the
+    seed empty-set cache whose gain is the singleton Δ(e | ∅)); callers mask
+    rows downstream. Padding contributes exactly 0 in both directions: the
+    min template zero-pads rows/columns (``relu(0 − d) = 0`` for d ≥ 0), the
+    max template pads them +inf (``relu(s − inf) = 0``, and a +inf dvec
+    column drives the affine to −inf before the relu) — :func:`ops.sieve_gains`
+    applies the matching sentinel.
     """
     s_pad, n_pad = T.shape
     grid = (s_pad // block_s, n_pad // block_n)
-    kern = functools.partial(_sieve_gain_kernel, n_total=n_total)
+    kern = functools.partial(_sieve_gain_kernel, n_total=n_total,
+                             fold=fold, affine=affine)
     return pl.pallas_call(
         kern,
         grid=grid,

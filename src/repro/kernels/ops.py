@@ -98,13 +98,14 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def _pad_axis(x: jax.Array, target: int, axis: int) -> jax.Array:
+def _pad_axis(x: jax.Array, target: int, axis: int,
+              value: float = 0.0) -> jax.Array:
     pad = target - x.shape[axis]
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 def _is_cpu() -> bool:
@@ -191,30 +192,40 @@ def exemplar_eval(
 # ---------------------------------------------------------------------------
 
 
-def _pad_gain_operands(V, C, cache, block_n, block_m):
-    """Pad V/C/cache to lane- and block-aligned shapes for the gain kernels."""
+def _pad_gain_operands(V, C, cache, block_n, block_m, cache_pad: float = 0.0):
+    """Pad V/C/cache to lane- and block-aligned shapes for the gain kernels.
+
+    ``cache_pad`` is the dead-row sentinel for the padded cache entries: 0
+    under the min template (relu(0 − d) = 0 for d ≥ 0) and +inf under the
+    max template (relu(s − inf) = 0 — a zero-padded V row has *positive*
+    similarity to candidates, so only an infinite cache entry keeps pad rows
+    inert).
+    """
     d_pad = _round_up(V.shape[1], LANE)
     n_pad = _round_up(V.shape[0], block_n)
     m_pad = _round_up(C.shape[0], block_m)
     Vp = _pad_axis(_pad_axis(V, n_pad, 0), d_pad, 1)
     Cp = _pad_axis(_pad_axis(C, m_pad, 0), d_pad, 1)
-    cache_p = _pad_axis(cache.astype(jnp.float32), n_pad, 0)[:, None]
+    cache_p = _pad_axis(cache.astype(jnp.float32), n_pad, 0,
+                        value=cache_pad)[:, None]
     return Vp, Cp, cache_p, d_pad
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
-                     "block_n", "block_m"),
+                     "block_n", "block_m", "fold", "score_affine"),
 )
 def _marginal_gain_padded(V, C, cache, *, policy, interpret, rbf_gamma,
-                          n_total, block_n, block_m):
+                          n_total, block_n, block_m, fold, score_affine):
     m = C.shape[0]
-    Vp, Cp, cache_p, _ = _pad_gain_operands(V, C, cache, block_n, block_m)
+    Vp, Cp, cache_p, _ = _pad_gain_operands(
+        V, C, cache, block_n, block_m,
+        cache_pad=float("inf") if fold == "max" else 0.0)
     out = _mg.gain_eval(
         Vp, Cp, cache_p, n_total=n_total, policy=policy,
         block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
-        interpret=interpret)
+        fold=fold, affine=score_affine, interpret=interpret)
     return out[:m, 0]
 
 
@@ -229,12 +240,19 @@ def marginal_gain(
     block_n: int = 256,
     block_m: int = 256,
     n_total: Optional[int] = None,
+    fold: str = "min",
+    score_affine: Optional[tuple] = None,
 ) -> jax.Array:
     """Δ(c_j | S) for all candidates — (m,) float32.
 
     ``n_total`` overrides the |V| normalizer: pass the *global* ground-set
     size when V is one row-shard of a mesh-sharded ground set, so per-shard
     partial gains ``psum`` to the exact global gains.
+
+    ``fold``/``score_affine`` select the kernel template (see
+    :mod:`repro.kernels.marginal_gain`): the default ``"min"`` scores the
+    exemplar min-distance cache; ``("max", (α, β))`` scores
+    relu((α + β·d) − cache) against a max-similarity cache.
     """
     if interpret is None:
         interpret = _is_cpu()
@@ -244,23 +262,28 @@ def marginal_gain(
     return _marginal_gain_padded(
         V, C, mincache, policy=policy, interpret=interpret,
         rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
-        block_n=bn, block_m=bm)
+        block_n=bn, block_m=bm, fold=fold,
+        score_affine=None if score_affine is None else tuple(score_affine))
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
-                     "block_n", "block_m"),
+                     "block_n", "block_m", "fold", "score_affine"),
 )
-def _fused_gain_update_padded(V, C, cache, winner, *, policy, interpret,
-                              rbf_gamma, n_total, block_n, block_m):
+def _fused_gain_update_padded(V, C, cache, winner, w_valid, *, policy,
+                              interpret, rbf_gamma, n_total, block_n,
+                              block_m, fold, score_affine):
     n, m = V.shape[0], C.shape[0]
-    Vp, Cp, cache_p, d_pad = _pad_gain_operands(V, C, cache, block_n, block_m)
+    Vp, Cp, cache_p, d_pad = _pad_gain_operands(
+        V, C, cache, block_n, block_m,
+        cache_pad=float("inf") if fold == "max" else 0.0)
     w_p = _pad_axis(winner[None, :], d_pad, 1)
+    wv = jnp.reshape(w_valid.astype(jnp.float32), (1, 1))
     gains, new_cache = _mg.gain_update_eval(
-        Vp, Cp, cache_p, w_p, n_total=n_total, policy=policy,
+        Vp, Cp, cache_p, w_p, wv, n_total=n_total, policy=policy,
         block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
-        interpret=interpret)
+        fold=fold, affine=score_affine, interpret=interpret)
     return gains[:m, 0], new_cache[:n, 0]
 
 
@@ -276,23 +299,35 @@ def fused_gain_update(
     block_n: int = 256,
     block_m: int = 256,
     n_total: Optional[int] = None,
+    fold: str = "min",
+    score_affine: Optional[tuple] = None,
+    w_valid: Optional[jax.Array] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused greedy step (device engine): cache ← min(cache, d(·, winner)),
+    """Fused greedy step (device engine): fold ``winner`` into the cache
+    (min: cache ← min(cache, d(·, w)); max: cache ← max(cache, s(·, w))),
     then Δ(c_j | S) against the updated cache. Returns ``(gains, new_cache)``.
 
     ``n_total`` is the sharding-aware normalizer (see :func:`marginal_gain`):
     with V a row-shard, gains come back divided by the *global* n and the
     updated cache shard stays local — exactly the engine's psum contract.
+
+    ``w_valid`` (traced scalar, default 1) gates the fold: pass 0 on the
+    round-0 step where no previous winner exists. The min fold is idempotent
+    against its own seed so exemplar callers may omit it, but the max fold
+    is not — generic callers must gate.
     """
     if interpret is None:
         interpret = _is_cpu()
     n = V.shape[0]
     bn = min(block_n, _round_up(n, SUBLANE))
     bm = min(block_m, _round_up(C.shape[0], SUBLANE))
+    if w_valid is None:
+        w_valid = jnp.float32(1.0)
     return _fused_gain_update_padded(
-        V, C, mincache, winner, policy=policy, interpret=interpret,
+        V, C, mincache, winner, w_valid, policy=policy, interpret=interpret,
         rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
-        block_n=bn, block_m=bm)
+        block_n=bn, block_m=bm, fold=fold,
+        score_affine=None if score_affine is None else tuple(score_affine))
 
 
 # ---------------------------------------------------------------------------
@@ -301,32 +336,47 @@ def fused_gain_update(
 
 
 def sieve_gains(
-    table: jax.Array,      # (r, n) float32 min-distance cache rows
+    table: jax.Array,      # (r, n) float32 per-element cache rows
     dvec: jax.Array,       # (n,) float32 one element's distances to V
     *,
     n_total: Optional[int] = None,
     interpret: Optional[bool] = None,
     block_s: int = 64,
     block_n: int = 512,
+    fold: str = "min",
+    score_affine: Optional[tuple] = None,
 ) -> jax.Array:
-    """Per-row relu-mean gains of a cache table vs one stream element — (r,).
+    """Per-row gains of a cache table vs one stream element — (r,).
 
-    Row r gets ``n_total⁻¹ Σ_i relu(table[r, i] − dvec[i])``: row = a sieve's
-    min-distance cache → its marginal gain Δ(e | S_r); row = ``d_e0`` → the
-    singleton gain Δ(e | ∅). Unlike the jnp scan body, the (r, n) relu
-    intermediate never reaches HBM. NOT jit-wrapped: the streaming engine
-    traces it inside its per-block scan (and the host mirror inside the
-    per-element step), so a wrapper jit would only add dispatch layers.
+    min template (default): row r gets
+    ``n_total⁻¹ Σ_i relu(table[r, i] − dvec[i])``; max template
+    (``fold="max"``, ``score_affine=(α, β)``):
+    ``n_total⁻¹ Σ_i relu((α + β·dvec[i]) − table[r, i])``. Row = a sieve's
+    cache → its marginal gain Δ(e | S_r); row = the seed → the singleton
+    gain Δ(e | ∅). Unlike the jnp scan body, the (r, n) intermediate never
+    reaches HBM. NOT jit-wrapped: the streaming engine traces it inside its
+    per-block scan (and the host mirror inside the per-element step), so a
+    wrapper jit would only add dispatch layers.
+
+    Column padding matches the template: zeros under min (relu(0 − d) = 0),
+    +inf under max for BOTH operands — a zero-padded dvec column would score
+    relu(α − t) > 0 against finite rows, while a +inf column drives the
+    affine to −inf before the relu.
     """
     if interpret is None:
         interpret = _is_cpu()
     r, n = table.shape
     bs = min(block_s, _round_up(r, SUBLANE))
     bn = min(block_n, _round_up(n, LANE))
-    Tp = _pad_axis(_pad_axis(table.astype(jnp.float32), _round_up(r, bs), 0),
-                   _round_up(n, bn), 1)
-    dp = _pad_axis(dvec.astype(jnp.float32), _round_up(n, bn), 0)[None, :]
+    pad = float("inf") if fold == "max" else 0.0
+    Tp = _pad_axis(
+        _pad_axis(table.astype(jnp.float32), _round_up(r, bs), 0, value=pad),
+        _round_up(n, bn), 1, value=pad)
+    dp = _pad_axis(dvec.astype(jnp.float32), _round_up(n, bn), 0,
+                   value=pad)[None, :]
     out = _mg.sieve_gain_eval(
         Tp, dp, n_total=n_total if n_total is not None else n,
-        block_s=bs, block_n=bn, interpret=interpret)
+        block_s=bs, block_n=bn, fold=fold,
+        affine=None if score_affine is None else tuple(score_affine),
+        interpret=interpret)
     return out[:r, 0]

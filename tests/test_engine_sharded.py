@@ -152,7 +152,7 @@ def test_greedi_partition_merge_8_devices():
             res.value, base.value)
         n_loc = 512 // 8
         expect = 8 * sum(n_loc - t for t in range(k)) \\
-            + sum(8 * k - t for t in range(k))
+            + sum(8 * k - t for t in range(k)) + 8 * k
         assert res.evaluations == expect, (res.evaluations, expect)
         # k larger than a partition must refuse, not underflow the argmax
         try:

@@ -198,3 +198,42 @@ def test_distances_match_naive(problem, distance):
     np.testing.assert_allclose(
         _vals(V, pk, distance=distance),
         _vals(V, pk, distance=distance, backend="naive"), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation: a bad config or function parameter must fail
+# when it is built, not deep inside the first traced dispatch.
+# ---------------------------------------------------------------------------
+
+
+def test_evalconfig_validates_at_construction():
+    with pytest.raises(ValueError, match="unknown distance"):
+        EvalConfig(distance="hamming")
+    with pytest.raises(ValueError, match="mode"):
+        EvalConfig(mode="three_pass")
+    with pytest.raises(ValueError, match="unknown backend"):
+        EvalConfig(backend="tpu")
+    with pytest.raises(ValueError, match="kernel_variant"):
+        EvalConfig(kernel_variant="nested")
+    with pytest.raises(ValueError, match="policy"):
+        EvalConfig(policy="fp8")
+    with pytest.raises(ValueError, match="memory_budget_bytes"):
+        EvalConfig(memory_budget_bytes="lots")
+
+
+def test_function_parameters_validate_at_construction():
+    """Graph cut's λ and saturated coverage's cap fraction gate the zoo's
+    monotonicity/submodularity guarantees — out-of-range values must refuse
+    before any cache exists."""
+    from repro.core import GraphCut, SaturatedCoverage
+
+    rng = np.random.default_rng(0)
+    V = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    for lam in (0.0, -0.1, 0.6, 2.0):
+        with pytest.raises(ValueError, match="lam"):
+            GraphCut(V, lam=lam)
+    for sat in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="sat"):
+            SaturatedCoverage(V, sat=sat)
+    assert GraphCut(V, lam=0.5).spec.lam == 0.5
+    assert SaturatedCoverage(V, sat=1.0).spec.sat == 1.0

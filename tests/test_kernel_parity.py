@@ -104,6 +104,79 @@ def test_gain_kernels_precision_sweep(policy):
 
 
 @pytest.mark.parametrize("policy", sorted(POLICY_TOLS))
+def test_max_template_gain_kernels_precision_sweep(policy):
+    """The max-cache template (facility location / graph cut scoring):
+    ``relu((α + β·d) − cache)`` with the max fold ``cache ← max(cache, s)``,
+    at each PrecisionPolicy. Same dtype bands as the min template — the
+    kernel shares one tile loop parameterized by fold direction, so a
+    regression in the flipped reduction shows up here and not in the
+    exemplar sweep."""
+    from repro.core import distances as dist_mod
+    from repro.core.functions import SIM_ALPHA, SIM_BETA
+    from repro.core.precision import resolve as resolve_policy
+    from repro.kernels import ops
+
+    tol = POLICY_TOLS[policy]
+    rng = np.random.default_rng(17)
+    n, m, d = 133, 41, 21
+    # rbf distances keep similarity s = relu(1 − d/2) dense (raw blobs-scale
+    # sqeuclidean saturates it to 0 and the max template has nothing to do)
+    V = jnp.asarray((rng.normal(size=(n, d)) * 0.3).astype(np.float32))
+    C = V[:m]
+    cache = jnp.asarray(rng.uniform(0.0, 0.8, size=n).astype(np.float32))
+    w = V[n // 2]
+    pol = resolve_policy(policy)
+    pair = dist_mod.resolve_pairwise("rbf")
+    affine = (SIM_ALPHA, SIM_BETA)
+
+    def jnp_gains(cv, at):
+        D = pair(V, C, at)
+        return np.asarray(jnp.sum(
+            jnp.maximum((SIM_ALPHA + SIM_BETA * D) - cv[:, None], 0.0),
+            axis=0) / n)
+
+    got = np.asarray(ops.marginal_gain(
+        V, C, cache, policy=pol, rbf_gamma=dist_mod.RBF_GAMMA,
+        fold="max", score_affine=affine, interpret=True))
+    np.testing.assert_allclose(got, jnp_gains(cache, pol),
+                               atol=tol["kernel_atol"])
+    np.testing.assert_allclose(got, jnp_gains(cache, resolve_policy("fp32")),
+                               atol=tol["vs_fp32_atol"])
+
+    # fused max fold-and-score vs explicit jnp fold + score at the policy
+    dw = pair(V, w[None, :], pol)[:, 0].astype(jnp.float32)
+    cache_f = jnp.maximum(cache, jnp.maximum(SIM_ALPHA + SIM_BETA * dw, 0.0))
+    g, nc = ops.fused_gain_update(
+        V, C, cache, w, policy=pol, rbf_gamma=dist_mod.RBF_GAMMA,
+        fold="max", score_affine=affine, interpret=True)
+    np.testing.assert_allclose(np.asarray(nc), np.asarray(cache_f),
+                               atol=tol["kernel_atol"])
+    np.testing.assert_allclose(np.asarray(g), jnp_gains(cache_f, pol),
+                               atol=tol["kernel_atol"])
+
+
+def test_sieve_gains_max_template_matches_jnp():
+    """The sieve table × element kernel under the max template (facility
+    location streaming): per-row gains vs the protocol's jnp form, on a
+    ragged (r, n) shape that forces the +inf column/row padding — a zero
+    pad would score relu(α − t) > 0 against finite rows."""
+    from repro.core.functions import FnSpec, sieve_gain_rows
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(23)
+    r, n = 13, 205
+    table = jnp.asarray(rng.uniform(0.0, 1.0, size=(r, n)).astype(np.float32))
+    dvec = jnp.asarray(rng.uniform(0.0, 4.0, size=n).astype(np.float32))
+    fl = FnSpec(name="facility_location")
+    ref = np.asarray(jnp.mean(
+        sieve_gain_rows(fl, table, dvec, jnp.zeros(n, jnp.float32)), axis=-1))
+    got = np.asarray(ops.sieve_gains(table, dvec, fold="max",
+                                     score_affine=(1.0, -0.5),
+                                     interpret=True))
+    np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+@pytest.mark.parametrize("policy", sorted(POLICY_TOLS))
 def test_engine_selection_precision_sweep(policy):
     """End-to-end half-precision engine runs: host and device plans must
     still pick identical exemplars at each policy (same kernel scoring, same

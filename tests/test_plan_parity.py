@@ -3,10 +3,11 @@
 ONE parametrized suite asserts identical selections, trajectories, values,
 and evaluation counts across the full product
 
-    plans {host, device, device_sharded, device_sharded_pool}
+    functions {exemplar, facility_location, graph_cut, saturated_coverage}
+  × plans {host, device, device_sharded, device_sharded_pool}
   × candidate strategies {dense, stochastic, lazy}
   × evaluation backends {jnp, pallas_interpret}
-  × n ∈ {1024, 8192}
+  × n ∈ {1024, 8192} (exemplar; the zoo axis runs at n = 1024)
 
 replacing the ad-hoc per-plan parity tests previously scattered across
 test_device_optimizers.py / test_engine_sharded.py. Every cell runs all
@@ -31,6 +32,7 @@ import numpy as np
 import pytest
 
 from repro.core import EvalConfig, ExemplarClustering
+from repro.core.functions import FUNCTIONS, kernel_template
 from repro.core.optimizers import greedy, lazy_greedy, stochastic_greedy
 from repro.data.synthetic import blobs
 
@@ -87,6 +89,70 @@ def test_plan_parity_matrix(n, strategy, backend):
             res.value, ref.value, atol=TRAJ_ATOL[backend])
 
 
+# ---------------------------------------------------------------------------
+# Function axis: the zoo runs the SAME matrix. Raw sqeuclidean blobs saturate
+# the similarity s = relu(1 − d/2) to 0 for the coverage-style objectives
+# (every selection degenerates to index tie-breaking), so the zoo cells use
+# the rbf distance on down-scaled blobs — a dense, non-degenerate similarity
+# where selections actually discriminate. facility_location and graph_cut
+# score through the shared max-template Pallas kernel in the kernel cells;
+# saturated_coverage has no kernel form and certifies the silent jnp route.
+# ---------------------------------------------------------------------------
+
+ZOO = ("facility_location", "graph_cut", "saturated_coverage")
+N_ZOO = 1024
+
+
+def _zoo_func(name: str, backend: str):
+    key = (name, backend)
+    if key not in _FUNCS:
+        X, _ = blobs(N_ZOO, 24, centers=12, seed=13)
+        _FUNCS[key] = FUNCTIONS[name](
+            jnp.asarray(X) / 10.0, EvalConfig(distance="rbf", backend=backend))
+    return _FUNCS[key]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+@pytest.mark.parametrize("fname", ZOO)
+def test_plan_parity_matrix_function_axis(fname, strategy, backend):
+    f = _zoo_func(fname, backend)
+    # the template routing under test: FL/GC hit the shared min/max kernel,
+    # saturated coverage must certify the no-kernel-form jnp path
+    assert (kernel_template(f.spec) is not None) == (
+        fname in ("facility_location", "graph_cut"))
+    run = STRATEGIES[strategy]
+    results = {plan: run(f, plan) for plan in PLANS}
+    ref = results["host"]
+    assert len(ref.indices) == K and len(set(ref.indices)) == K
+    assert ref.evaluations > 0
+    assert ref.value > 0
+    for plan, res in results.items():
+        assert res.indices == ref.indices, (
+            f"{plan} selections diverge from host under "
+            f"{fname}/{strategy}/{backend}: {res.indices} != {ref.indices}")
+        assert res.evaluations == ref.evaluations, (
+            f"{plan} evaluation count diverges under "
+            f"{fname}/{strategy}/{backend}")
+        np.testing.assert_allclose(
+            res.trajectory, ref.trajectory, atol=TRAJ_ATOL[backend],
+            err_msg=f"{plan} trajectory under {fname}/{strategy}/{backend}")
+        np.testing.assert_allclose(
+            res.value, ref.value, atol=TRAJ_ATOL[backend])
+
+
+def test_feature_based_runs_host_plans_only():
+    """feature_based keeps a (d,)-shaped accumulator cache — no n-aligned
+    vec to shard or scan over, so the host plans work and every device plan
+    refuses with a pointed message."""
+    X, _ = blobs(256, 16, centers=6, seed=5)
+    f = FUNCTIONS["feature_based"](jnp.asarray(X) / 10.0)
+    res = greedy(f, K, mode="host")
+    assert len(res.indices) == K and res.value > 0
+    with pytest.raises(ValueError, match="host execution plans"):
+        greedy(f, K, mode="device")
+
+
 def test_backends_agree_on_selections():
     """The two backends are different arithmetic, not different algorithms:
     on well-separated data every (plan, strategy) cell picks the same
@@ -125,12 +191,35 @@ def test_greedi_partition_bound_and_accounting(n, backend):
     np.testing.assert_allclose(res.trajectory[-1], res.value, atol=1e-6)
     # exact accounting: p partitions of n/p candidates run k dense rounds
     # (round t scores n/p − t live candidates), then the merge round scores
-    # the p·k gathered candidates (round t scores p·k − t)
+    # the p·k gathered candidates (round t scores p·k − t), then best-of-both
+    # re-evaluates each of the p local solutions globally (p·k folds)
     p = jax.device_count()
     assert n % p == 0, "blobs sizes divide the forced device counts"
     n_loc = n // p
     expect = p * sum(n_loc - t for t in range(K)) \
-        + sum(p * K - t for t in range(K))
+        + sum(p * K - t for t in range(K)) + p * K
+    assert res.evaluations == expect
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("fname", ZOO)
+def test_greedi_function_axis(fname, backend):
+    """GreeDi over the zoo: same partition floor and exact accounting.
+    Phase 1 runs each partition under LOCAL normalizers (graph cut's penalty
+    normalizer must match its gain normalizer inside the local argmax);
+    phase 2 re-normalizes globally and takes the better of the merged
+    solution and the best locally-greedy solution evaluated globally."""
+    f = _zoo_func(fname, backend)
+    base = greedy(f, K, mode="host")
+    res = greedy(f, K, mode="greedi")
+    assert len(res.indices) == K and len(set(res.indices)) == K
+    assert res.value >= (1.0 - 1.0 / math.e) ** 2 * base.value
+    assert res.trajectory == sorted(res.trajectory)
+    np.testing.assert_allclose(res.trajectory[-1], res.value, atol=1e-6)
+    p = jax.device_count()
+    n_loc = N_ZOO // p
+    expect = p * sum(n_loc - t for t in range(K)) \
+        + sum(p * K - t for t in range(K)) + p * K
     assert res.evaluations == expect
 
 
