@@ -1,5 +1,5 @@
 """Shared benchmark utilities. CSV rows:
-name,us_per_call,derived,backend,peak_device_bytes,function."""
+name,us_per_call,derived,backend,peak_device_bytes,function,n_batch."""
 from __future__ import annotations
 
 import time
@@ -41,16 +41,19 @@ def peak_device_bytes(device=None) -> Optional[int]:
 
 
 def emit(rows: list[tuple]):
-    """Print CSV rows. Rows are ``(name, us, derived)`` plus up to three
+    """Print CSV rows. Rows are ``(name, us, derived)`` plus up to four
     optional columns: ``backend`` (for entries scoring through a
     non-default evaluation backend), ``peak_device_bytes`` (an int from
-    :func:`peak_device_bytes`, or None), and ``function`` (the submodular
-    objective the row scored, default "exemplar") — all feed ``run.py
-    --json`` attribution."""
+    :func:`peak_device_bytes`, or None), ``function`` (the submodular
+    objective the row scored, default "exemplar"), and ``n_batch`` (how
+    many independent requests the row's dispatch carried, default 1 — the
+    serving-throughput axis) — all feed ``run.py --json`` attribution."""
     for row in rows:
         name, us, derived = row[0], row[1], row[2]
         backend = row[3] if len(row) > 3 else "jnp"
         peak = row[4] if len(row) > 4 else None
         func = row[5] if len(row) > 5 else "exemplar"
+        n_batch = row[6] if len(row) > 6 else 1
         peak_s = "" if peak is None else str(int(peak))
-        print(f"{name},{us:.1f},{derived},{backend},{peak_s},{func}")
+        print(f"{name},{us:.1f},{derived},{backend},{peak_s},{func},"
+              f"{int(n_batch)}")

@@ -34,7 +34,8 @@ import importlib
 import json
 
 MODULES = ["sweeps", "precision", "chunking", "greedy_modes",
-           "kernel_roofline", "optimizers", "streaming", "functions"]
+           "kernel_roofline", "optimizers", "streaming", "functions",
+           "serving"]
 
 
 def main() -> None:
@@ -46,7 +47,8 @@ def main() -> None:
                     help="also write rows to PATH as JSON (CI artifact)")
     args = ap.parse_args()
     mods = args.only.split(",") if args.only else MODULES
-    print("name,us_per_call,derived,backend,peak_device_bytes,function")
+    print("name,us_per_call,derived,backend,peak_device_bytes,function,"
+          "n_batch")
     collected: dict[str, list[dict]] = {}
     for m in mods:
         mod = importlib.import_module(f"benchmarks.{m}")
@@ -56,10 +58,12 @@ def main() -> None:
              # 4th column = the evaluation backend the entry scored
              # through; 5th = device-0 peak allocator bytes (None on
              # backends without memory stats); 6th = the submodular
-             # objective the row scored (the function-zoo axis)
+             # objective the row scored (the function-zoo axis); 7th =
+             # requests per dispatch (the serving-throughput axis)
              "backend": row[3] if len(row) > 3 else "jnp",
              "peak_device_bytes": row[4] if len(row) > 4 else None,
-             "function": row[5] if len(row) > 5 else "exemplar"}
+             "function": row[5] if len(row) > 5 else "exemplar",
+             "n_batch": row[6] if len(row) > 6 else 1}
             for row in (rows or [])
         ]
     if args.json:

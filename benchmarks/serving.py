@@ -1,0 +1,100 @@
+"""Selection serving: batched multi-tenant dispatch vs sequential requests.
+
+The Industry 4.0 deployment shape (arXiv:2105.12026) is many concurrent
+per-tenant summarization requests, not one big problem. This benchmark
+measures requests/sec and per-request latency when B same-signature tenants
+(each its own (n, d) ground set and budget k) are solved by
+
+* **sequential** — B warm-jit ``run_selection`` dispatches, one per tenant
+  (the pre-batching engine shape: per-dispatch overhead paid B times), vs
+* **batched** — ONE ``run_selection_batch`` dispatch over the stacked
+  (B, n, d) payload (overhead paid once, compute vectorized), vs
+* **served** — the full async :class:`~repro.core.service.SelectionService`
+  path (queue → bucket → batched dispatch → demux) at B concurrent
+  submitters, which adds the front-end overhead on top of the batched win.
+
+Every batched/served row asserts per-request selections bit-identical to
+the sequential baseline — batching changes throughput, not output. Rows
+carry the ``n_batch`` column so BENCH_*.json charts a serving-throughput
+trend line over PRs.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import SelectionService, run_selection, run_selection_batch
+from repro.core.functions import ExemplarClustering
+from repro.data.synthetic import blobs
+
+
+def _tenants(b: int, n: int, d: int):
+    """B independent per-tenant ground sets (distinct data, one signature)."""
+    Xs = [blobs(n, d, centers=8, seed=100 + t)[0] for t in range(b)]
+    return Xs, [ExemplarClustering(jnp.asarray(X)) for X in Xs]
+
+
+def _sequential(fs, k, cand):
+    return [run_selection(f, kind="dense", k=k, cand_rounds=cand,
+                          counter_key="bench_serve_seq") for f in fs]
+
+
+def _served(Xs, k, max_batch):
+    async def go():
+        async with SelectionService(max_batch=max_batch) as svc:
+            t0 = time.perf_counter()
+            res = await asyncio.gather(*[svc.submit(X, k=k) for X in Xs])
+            dt = time.perf_counter() - t0
+            return res, dt, dict(svc.stats)
+    return asyncio.run(go())
+
+
+def run(quick: bool = False):
+    # the multi-tenant serving regime is many SMALL per-tenant problems —
+    # per-dispatch overhead dominates, which is exactly what batching
+    # amortizes (at large n the dispatch is compute-bound and the batch
+    # axis only wins the overhead margin)
+    n, d, k = 64, 8, 4
+    levels = [1, 64] if quick else [1, 64, 1024]
+    cand = np.arange(n, dtype=np.int32)[None, :]
+    rows = []
+    for b in levels:
+        Xs, fs = _tenants(b, n, d)
+        t_seq = time_call(_sequential, fs, k, cand,
+                         warmup=1, iters=2 if b >= 1024 else 3)
+        t_bat = time_call(run_selection_batch, fs, kind="dense", k=k,
+                          counter_key="bench_serve_batched",
+                          warmup=1, iters=2 if b >= 1024 else 3)
+        r_seq = _sequential(fs, k, cand)
+        r_bat = run_selection_batch(fs, kind="dense", k=k,
+                                    counter_key="bench_serve_batched")
+        identical = all(a.indices == c.indices and
+                        a.evaluations == c.evaluations
+                        for a, c in zip(r_seq, r_bat))
+        rps_seq = b / (t_seq / 1e6)
+        rps_bat = b / (t_bat / 1e6)
+        rows.append((f"serve_sequential_b{b}", t_seq / b,
+                     f"requests_per_sec={rps_seq:.0f}",
+                     "jnp", None, "exemplar", b))
+        rows.append((f"serve_batched_b{b}", t_bat / b,
+                     f"requests_per_sec={rps_bat:.0f};"
+                     f"speedup={rps_bat / rps_seq:.2f}x;"
+                     f"identical={identical}",
+                     "jnp", None, "exemplar", b))
+        if b == 64:
+            # full async front end at 64 concurrent submitters (warm jit:
+            # the batched rows above traced this signature already)
+            r_svc, dt_svc, stats = _served(Xs, k, max_batch=64)
+            svc_identical = all(a.indices == c.indices
+                                for a, c in zip(r_seq, r_svc))
+            rows.append((f"serve_service_b{b}", dt_svc * 1e6 / b,
+                         f"requests_per_sec={b / dt_svc:.0f};"
+                         f"dispatches={stats['dispatches']};"
+                         f"identical={svc_identical}",
+                         "jnp", None, "exemplar", b))
+    emit(rows)
+    return rows

@@ -10,6 +10,7 @@ from repro.core.evaluator import (
 from repro.core.engine import (
     DEVICE_TRACE_COUNTS,
     run_selection,
+    run_selection_batch,
     validate_candidates,
 )
 from repro.core.functions import (
@@ -41,14 +42,19 @@ from repro.core.streaming import (
     SieveState,
     make_sieve_engine,
 )
-from repro.core.service import SieveSnapshot, StreamIngestionService
+from repro.core.service import (
+    SelectionService,
+    SieveSnapshot,
+    StreamIngestionService,
+)
 from repro.core.clustering import ExemplarModel, fit_exemplar_clustering
 from repro.core.precision import BF16, FP16, FP16_STRICT, FP32, PrecisionPolicy
 
 __all__ = [
     "BF16", "FP16", "FP16_STRICT", "FP32", "PrecisionPolicy",
     "ChunkingError", "DEVICE_TRACE_COUNTS", "EvalConfig", "bytes_per_set",
-    "evaluate_multiset", "run_selection", "validate_candidates",
+    "evaluate_multiset", "run_selection", "run_selection_batch",
+    "validate_candidates",
     "plan_chunks", "work_matrix", "ExemplarClustering", "FacilityLocation",
     "FeatureBased", "FnSpec", "FUNCTIONS", "GraphCut", "SaturatedCoverage",
     "SubmodularFunction", "PackedMultiset",
@@ -56,6 +62,6 @@ __all__ = [
     "greedy", "lazy_greedy", "salsa", "sieve_streaming", "sieve_streaming_pp",
     "stochastic_greedy", "three_sieves", "ExemplarModel",
     "fit_exemplar_clustering", "DeviceSieveEngine", "HostSieveMirror",
-    "SieveSpec", "SieveState", "make_sieve_engine", "SieveSnapshot",
-    "StreamIngestionService",
+    "SieveSpec", "SieveState", "make_sieve_engine", "SelectionService",
+    "SieveSnapshot", "StreamIngestionService",
 ]

@@ -128,7 +128,8 @@ def _gain_tile_cap_elems(itemsize: int = 4) -> int:
     return _GAIN_TILE_CAP_ELEMS
 
 
-def _device_block_m(n: int, m: int, tiles_per_memory: int = 1) -> int:
+def _device_block_m(n: int, m: int, tiles_per_memory: int = 1,
+                    n_batch: int = 1) -> int:
     """Candidate block size bounding the (n, Bm) gain tile.
 
     Autotuned from the same free-memory probe ``plan_chunks`` uses
@@ -145,11 +146,16 @@ def _device_block_m(n: int, m: int, tiles_per_memory: int = 1) -> int:
     host allocator: p live tiles would over-commit the probe's free-bytes
     answer p×); real multi-chip meshes keep the default of 1 because each
     shard's tile lives in its own device memory.
+    ``n_batch`` scales the effective tile height: the batched engine scores
+    B requests' (n, Bm) tiles in ONE dispatch, so the live footprint is
+    (B·n, Bm) — sizing a B=1024 bucket as if B=1 would over-commit memory
+    B× (the same failure mode as sizing a shard tile from global n).
     """
     cap_elems = _gain_tile_cap_elems() // max(tiles_per_memory, 1)
-    if n * m <= cap_elems:
+    rows = n * max(n_batch, 1)
+    if rows * m <= cap_elems:
         return m
-    return max(8, min(m, cap_elems // max(n, 1)))
+    return max(8, min(m, cap_elems // max(rows, 1)))
 
 
 def mesh_tiles_per_memory(mesh) -> int:
@@ -374,7 +380,8 @@ def make_lazy_step(take, n_pool, fold, score_idx_val, top_b: int,
 def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
                          n_pool=None, taken0=None, seed_val=None,
                          score_idx_val=None, cand_rounds, cache0, w0,
-                         fold, fold_score_val=None, value_of=None):
+                         fold, fold_score_val=None, value_of=None,
+                         with_final_cache=False):
     """Run k selection rounds for any execution plan, given its callbacks.
 
     The plan supplies only how a candidate batch is scored and how the
@@ -411,7 +418,9 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
       sharded pool: blocked take-and-score).
     * ``value_of(cache) -> scalar`` — the global f(S) of the cache.
 
-    Returns ``(sel, traj, n_scored)`` per-round stacked outputs.
+    Returns ``(sel, traj, n_scored)`` per-round stacked outputs;
+    ``with_final_cache=True`` appends the fully-folded final cache pytree
+    (jitted callers return its vec so a donated seed buffer aliases it).
     """
     if take is None:
         take = lambda idx: (pool[idx], idx)  # noqa: E731 — replicated default
@@ -446,9 +455,197 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
         n_scored = jnp.sum(scored)
 
     # one final fold for the last trajectory point
-    final_val = value_of(fold(cache, w_last))
+    cache_f = fold(cache, w_last)
+    final_val = value_of(cache_f)
     traj = jnp.concatenate([vals[1:], final_val[None]])
+    if with_final_cache:
+        return sel.astype(jnp.int32), traj, n_scored, cache_f
     return sel.astype(jnp.int32), traj, n_scored
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-tenant stepping — B independent requests, ONE dispatch.
+#
+# Every carry leaf grows a leading B axis ((B, n) caches, (B, n) taken
+# masks, (B, d) winner rows, (B, n) CELF bounds); gains/argmax/fold/top_k
+# run batched per step. Ragged k rides as a per-request ``k_eff`` vector:
+# rounds t ≥ k_eff[b] freeze request b's carry (its transient fold still
+# produces the correct trajectory value f(S_{k_eff})), emit the −1 sentinel,
+# and count zero evaluations — so bucket-padding slots (k_eff = 0) are
+# completely inert. Per-request selections, trajectories, and evaluation
+# counts are identical to running the unbatched engine B times.
+# ---------------------------------------------------------------------------
+
+
+def _freeze_where(act, new, old):
+    """Per-request carry gate: take ``new`` leaves where the request is
+    active, keep ``old`` where it is frozen (``act`` is (B,) bool; every
+    leaf carries a leading B axis)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(
+            act.reshape(act.shape + (1,) * (a.ndim - 1)), a, b),
+        new, old)
+
+
+def make_batched_rounds_step(take, fold_score_val, k_eff):
+    """Batched :func:`make_rounds_step` — dense/stochastic rounds over a
+    leading request axis.
+
+    ``fold_score_val(cache, w_prev, cand_t) -> (gains (B, m), cache,
+    value (B,))`` folds each request's previous winner and scores its own
+    candidate row; ``take(idx (B,)) -> ((B, d) rows, idx)`` resolves the
+    per-request winners. ``k_eff`` (B,) int32 is the ragged-k mask: the xs
+    carry the round index t, and requests with t ≥ k_eff freeze.
+    """
+    B = k_eff.shape[0]
+    rows = jnp.arange(B)
+
+    def step(carry, xs):
+        cand_t, t = xs
+        cache, taken, w_prev = carry
+        gains, cache2, val = fold_score_val(cache, w_prev, cand_t)
+        live = ~jnp.take_along_axis(taken, cand_t, axis=1)
+        gains = jnp.where(live, gains, -jnp.inf)
+        p = jnp.argmax(gains, axis=1)
+        j = jnp.take_along_axis(cand_t, p[:, None], axis=1)[:, 0]
+        best = jnp.take_along_axis(gains, p[:, None], axis=1)[:, 0]
+        act = t < k_eff
+        # exhausted sample row → −1 sentinel, exactly like the unbatched
+        # step; frozen rounds also emit −1 (demux truncates them away)
+        j_out = jnp.where(act & (best > -jnp.inf), j, -1)
+        new_carry = (cache2, taken.at[rows, j].set(True), take(j))
+        carry = _freeze_where(act, new_carry, carry)
+        scored = jnp.where(act, jnp.sum(live, axis=1).astype(jnp.int32), 0)
+        return carry, (j_out, val, scored)
+
+    return step
+
+
+def make_batched_lazy_step(take, fold, score_idx, value_of, top_b: int,
+                           max_iters: int, k_eff):
+    """Batched :func:`make_lazy_step` — per-request CELF bound state.
+
+    Each request carries its own (n,) stale bounds, freshness is tracked
+    per request, and the while-loop condition is "ANY request still fails
+    the fresh-top invariant" — a certified (or frozen) request stops
+    scoring immediately (its ``live`` lanes mask out), so per-request
+    evaluation counts match the unbatched engine exactly: within a round a
+    request is active for consecutive iterations 0..c_b−1 and its c_b is
+    the same count the unbatched while-loop would run (the global
+    ``max_iters`` backstop cuts every request at the same iteration the
+    unbatched loop would, because certification is monotone within a
+    round).
+
+    Unlike the unbatched step, the trajectory value is computed directly as
+    ``value_of(cache2)`` rather than riding the re-score callback — the
+    single-device batched plan has no psum to share, and frozen requests
+    (which skip the loop entirely) still need their f(S_{k_eff}) emitted.
+    """
+    B = k_eff.shape[0]
+    rows = jnp.arange(B)[:, None]
+
+    def step(carry, t):
+        cache, taken, w_prev, ub = carry
+        cache2 = fold(cache, w_prev)
+        act = t < k_eff
+        val = value_of(cache2)
+
+        def request_active(ub_c, fresh):
+            stale_max = jnp.max(
+                jnp.where(fresh | taken, -jnp.inf, ub_c), axis=1)
+            fresh_best = jnp.max(
+                jnp.where(fresh & ~taken, ub_c, -jnp.inf), axis=1)
+            return (fresh_best < stale_max) & act
+
+        def invariant_fails(st):
+            ub_c, fresh, _, it = st
+            return jnp.any(request_active(ub_c, fresh)) & (it < max_iters)
+
+        def rescore_top_b(st):
+            ub_c, fresh, scored, it = st
+            active = request_active(ub_c, fresh)
+            stale = jnp.where(fresh | taken, -jnp.inf, ub_c)
+            top_ub, top_idx = jax.lax.top_k(stale, top_b)
+            live = (top_ub > -jnp.inf) & active[:, None]
+            gains_b = score_idx(cache2, top_idx)
+            gains_b = jnp.where(live, gains_b, -jnp.inf)
+            prev = jnp.take_along_axis(ub_c, top_idx, axis=1)
+            ub_c = ub_c.at[rows, top_idx].set(
+                jnp.where(live, gains_b, prev))
+            fresh = fresh.at[rows, top_idx].set(
+                jnp.take_along_axis(fresh, top_idx, axis=1) | live)
+            scored = scored + jnp.sum(live, axis=1).astype(jnp.int32)
+            return ub_c, fresh, scored, it + 1
+
+        ub2, fresh, scored, _ = jax.lax.while_loop(
+            invariant_fails, rescore_top_b,
+            (ub, jnp.zeros(taken.shape, bool),
+             jnp.zeros((B,), jnp.int32), jnp.asarray(0, jnp.int32)))
+        j = jnp.argmax(jnp.where(fresh & ~taken, ub2, -jnp.inf), axis=1)
+        new_carry = (cache2, taken.at[rows[:, 0], j].set(True), take(j), ub2)
+        carry = _freeze_where(act, new_carry, carry)
+        return carry, (jnp.where(act, j, -1), val,
+                       jnp.where(act, scored, 0))
+
+    return step
+
+
+def drive_selection_scan_batched(*, kind, k, top_b, n_global, pool, k_eff,
+                                 cand_rounds, cache0, w0, fold,
+                                 score_idx=None, fold_score_val=None,
+                                 value_of=None):
+    """Batched :func:`drive_selection_scan` — one scan, B requests.
+
+    ``pool`` is the (B, n, d) stacked payload; ``cand_rounds`` is
+    (B, k, m) (dense callers broadcast one row; lazy passes (B, 1, 0));
+    ``k_eff`` (B,) int32 the per-request effective k (ragged-k masking —
+    bucket-padding slots pass 0). The callbacks are the batched analogues
+    of the unbatched driver's: ``fold(cache, (rows, idx)) -> cache``,
+    ``score_idx(cache, idx (B, m)) -> (B, m) gains``,
+    ``fold_score_val(cache, w_prev, cand_t) -> (gains, cache, (B,) value)``,
+    ``value_of(cache) -> (B,)``.
+
+    Returns ``(sel (k, B), traj (k, B), n_scored (B,), final cache)`` —
+    the final cache rides out so the jitted dispatch can alias its vec
+    onto the donated seed buffer.
+    """
+    B, n_pool = pool.shape[0], pool.shape[1]
+    rows = jnp.arange(B)
+    take = lambda idx: (pool[rows, idx], idx)  # noqa: E731
+    taken_init = jnp.zeros((B, n_pool), bool)
+    ts = jnp.arange(k, dtype=jnp.int32)
+    if kind == "lazy":
+        step = make_batched_lazy_step(
+            take, fold, score_idx, value_of, top_b,
+            celf_max_iters(n_global, top_b), k_eff)
+        # round -1: per-request singleton gains seed the bounds (counts one
+        # eval per pool row for every request that runs ≥ 1 round)
+        ub0 = score_idx(cache0, jnp.broadcast_to(
+            jnp.arange(n_pool, dtype=jnp.int32), (B, n_pool)))
+        init = (cache0, taken_init, w0, ub0)
+        (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
+            step, init, ts)
+        n_scored = jnp.where(
+            k_eff > 0,
+            jnp.asarray(n_pool, jnp.int32) + jnp.sum(scored, axis=0), 0)
+    else:
+        step = make_batched_rounds_step(take, fold_score_val, k_eff)
+        init = (cache0, taken_init, w0)
+        if kind == "dense":
+            cand_row = cand_rounds[:, 0, :]
+            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                lambda carry, t: step(carry, (cand_row, t)), init, ts)
+        else:
+            (cache, _, w_last), (sel, vals, scored) = jax.lax.scan(
+                step, init, (jnp.swapaxes(cand_rounds, 0, 1), ts))
+        n_scored = jnp.sum(scored, axis=0)
+
+    # one final fold for the last trajectory point (frozen requests fold
+    # their held winner transiently — still exactly f(S_{k_eff}))
+    cache_f = fold(cache, w_last)
+    final_val = value_of(cache_f)
+    traj = jnp.concatenate([vals[1:], final_val[None, :]], axis=0)
+    return sel.astype(jnp.int32), traj, n_scored.astype(jnp.int32), cache_f
 
 
 # ---------------------------------------------------------------------------
@@ -458,11 +655,20 @@ def drive_selection_scan(*, kind, k, top_b, n_global, pool=None, take=None,
 
 @partial(jax.jit, static_argnames=("fn", "kind", "k", "top_b", "distance",
                                    "policy_name", "block_m", "backend",
-                                   "rbf_gamma", "counter_key"))
+                                   "rbf_gamma", "counter_key"),
+         donate_argnums=(1,))
 def _select_scan(V, seed, row_aux, cand_rounds, w0, *, fn, kind, k, top_b,
                  distance, policy_name, block_m, backend, rbf_gamma,
                  counter_key):
     """All k selection rounds in one dispatch, for any vec-cache function.
+
+    ``seed`` is DONATED and the final folded cache vector — same (n,)
+    float32 shape — rides out as the 4th output, so XLA aliases the carry's
+    final buffer onto the seed's allocation: repeated same-signature calls
+    (warm-bucket serving) reuse the cache buffer instead of allocating a
+    fresh one per dispatch. Callers therefore pass a freshly-built seed
+    (:func:`run_selection` copies ``f.cache_seed``, which may alias the
+    function's resident ``d_e0``).
 
     ``fn`` is the function's static :class:`~repro.core.functions.FnSpec`;
     ``seed``/``row_aux`` its cache seed and per-row auxiliary. The identical
@@ -543,11 +749,122 @@ def _select_scan(V, seed, row_aux, cand_rounds, w0, *, fn, kind, k, top_b,
                 return score_idx(cache2, cand_t), cache2, value_of(cache2)
 
     w0c = (w0.astype(V.dtype), jnp.asarray(-1, jnp.int32))
-    return drive_selection_scan(
+    sel, traj, n_scored, cache_f = drive_selection_scan(
         kind=kind, k=k, top_b=top_b, n_global=n, pool=V,
         cand_rounds=cand_rounds, cache0=(seedf, jnp.float32(0.0)), w0=w0c,
         fold=fold, score_idx_val=score_idx_val,
-        fold_score_val=fold_score_val, value_of=value_of)
+        fold_score_val=fold_score_val, value_of=value_of,
+        with_final_cache=True)
+    return sel, traj, n_scored, cache_f[0]
+
+
+@partial(jax.jit, static_argnames=("fn", "kind", "k", "top_b", "distance",
+                                   "policy_name", "block_m", "backend",
+                                   "rbf_gamma", "counter_key"),
+         donate_argnums=(1,))
+def _select_scan_batched(V, seed, row_aux, cand_rounds, w0, k_eff, *, fn,
+                         kind, k, top_b, distance, policy_name, block_m,
+                         backend, rbf_gamma, counter_key):
+    """All k rounds of B independent requests in ONE dispatch.
+
+    The batched mirror of :func:`_select_scan`: ``V (B, n, d)``, ``seed /
+    row_aux (B, n)``, ``cand_rounds (B, k, m)``, ``w0 (B, d)``, ``k_eff
+    (B,)``. The cache-protocol helpers broadcast over the leading axis
+    unchanged; the two index-addressed helpers (graph cut's
+    ``gains_index_extra`` / ``fold_aux`` gathers) vmap per request. Scoring
+    routes through the grid-over-B kernels (:mod:`repro.kernels.ops`
+    batched dispatch) on Pallas backends, a vmapped :func:`_score_blocked`
+    otherwise. ``seed`` is donated exactly like the unbatched dispatch
+    (the final (B, n) cache output aliases it) — callers pass freshly
+    stacked buffers.
+    """
+    DEVICE_TRACE_COUNTS[counter_key] += 1
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+    n = V.shape[1]
+    seedf = seed.astype(jnp.float32)
+    v0 = jnp.mean(fx.stat_rows(fn, seedf, row_aux), axis=1)
+
+    def value_of(cache):
+        vec, aux = cache
+        return fx.value_from_stat(
+            fn, v0, jnp.mean(fx.stat_rows(fn, vec, row_aux), axis=1),
+            aux, n)
+
+    def pair_rows(w_rows):
+        # per-request distance of each request's V to its own winner row
+        return jax.vmap(lambda Vb, r: pair(Vb, r[None, :], policy)[:, 0])(
+            V, w_rows)
+
+    def fold(cache, w):
+        vec, aux = cache
+        row, idx = w
+        dw = pair_rows(row)
+        folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+        new_aux = jax.vmap(
+            lambda v, a, g: fx.fold_aux(fn, v, a, g, 0, n))(vec, aux, idx)
+        ok = idx >= 0
+        return (jnp.where(ok[:, None], folded, vec),
+                jnp.where(ok, new_aux, aux))
+
+    tmpl = fx.kernel_template(fn)
+    if backend != "jnp" and tmpl is not None:
+        from repro.kernels import ops as kops
+
+        def score(sc, C):
+            return kops.marginal_gain(
+                V, C, sc, policy=policy, rbf_gamma=rbf_gamma,
+                fold=tmpl[0], score_affine=tmpl[1],
+                interpret=(backend != "pallas"))
+    else:
+
+        def score(sc, C):
+            return jax.vmap(
+                lambda Vb, Cb, scb, rb: _score_blocked(
+                    Vb, Cb, scb, pair, policy, block_m, fn=fn, row_aux=rb)
+            )(V, C, sc, row_aux)
+
+    def score_idx(cache, idx):
+        vec, _aux = cache
+        C = jnp.take_along_axis(V, idx[..., None], axis=1)
+        gains = score(fx.score_cache_rows(fn, vec, row_aux), C)
+        if fx.gains_index_extra(fn, vec[0], idx[0], 0, n, n) is None:
+            return gains
+        extra = jax.vmap(
+            lambda v, ix: fx.gains_index_extra(fn, v, ix, 0, n, n))(vec, idx)
+        return gains + extra
+
+    fold_score_val = None
+    if kind != "lazy":
+        if backend != "jnp" and fx.kernel_fused_ok(fn) and tmpl is not None:
+            from repro.kernels import ops as kops
+
+            def fold_score_val(cache, w_prev, cand_t):
+                vec, aux = cache
+                row, idx = w_prev
+                C = jnp.take_along_axis(V, cand_t[..., None], axis=1)
+                gains, vec2 = kops.fused_gain_update(
+                    V, C, vec, row, policy=policy, rbf_gamma=rbf_gamma,
+                    fold=tmpl[0], score_affine=tmpl[1],
+                    w_valid=(idx >= 0).astype(jnp.float32),
+                    interpret=(backend != "pallas"))
+                cache2 = (vec2, aux)  # fused-eligible functions carry no aux
+                return gains, cache2, value_of(cache2)
+        else:
+
+            def fold_score_val(cache, w_prev, cand_t):
+                cache2 = fold(cache, w_prev)
+                return score_idx(cache2, cand_t), cache2, value_of(cache2)
+
+    B = V.shape[0]
+    w0c = (w0.astype(V.dtype), jnp.full((B,), -1, jnp.int32))
+    cache0 = (seedf, jnp.zeros((B,), jnp.float32))
+    sel, traj, n_scored, cache_f = drive_selection_scan_batched(
+        kind=kind, k=k, top_b=top_b, n_global=n, pool=V, k_eff=k_eff,
+        cand_rounds=cand_rounds, cache0=cache0, w0=w0c, fold=fold,
+        score_idx=score_idx, fold_score_val=fold_score_val,
+        value_of=value_of)
+    return sel, traj, n_scored, cache_f[0]
 
 
 # ---------------------------------------------------------------------------
@@ -631,8 +948,10 @@ def run_selection(
     if plan == "device":
         bm = block_m if block_m is not None \
             else _device_block_m(f.n, m_widest)
-        sel, traj, n_scored = _select_scan(
-            f.V, f.cache_seed, f.row_aux,
+        # _select_scan donates the seed: copy it (f.cache_seed may alias
+        # the function's resident d_e0, which must survive this call)
+        sel, traj, n_scored, _ = _select_scan(
+            f.V, jnp.array(f.cache_seed), f.row_aux,
             jnp.asarray(cand_rounds, jnp.int32), w0,
             fn=fn, kind=kind, k=k, top_b=top_b, distance=f.cfg.distance,
             policy_name=policy.name, block_m=bm, backend=backend,
@@ -675,3 +994,143 @@ def run_selection(
             f"re-select a taken index")
     traj = [float(x) for x in np.asarray(traj)]
     return OptResult(sel, traj[-1] if traj else 0.0, traj, int(n_scored))
+
+
+def run_selection_batch(
+    fs: Sequence[SubmodularFunction],
+    *,
+    kind: str,                        # "dense" | "stochastic" | "lazy"
+    k: int,
+    ks: Optional[Sequence[int]] = None,
+    cand_rounds: Optional[np.ndarray] = None,
+    top_b: int = 0,
+    counter_key: str,
+    block_m: Optional[int] = None,
+) -> list[OptResult]:
+    """Solve B independent selection requests in ONE jitted dispatch.
+
+    The batched ``plan="device"`` entry point: every request in ``fs`` must
+    share the jit signature — same function spec, same (n, d), same
+    ``EvalConfig`` — which is exactly what the serving layer's bucketing
+    guarantees. ``k`` is the shared scan length; ``ks`` optionally gives
+    each request its own effective k ≤ k (ragged k via masking: request b
+    freezes after ``ks[b]`` rounds and its results are truncated to
+    ``ks[b]`` at demux; ``ks[b] = 0`` marks an inert bucket-padding slot).
+
+    ``cand_rounds`` is (B, k, m) per-request candidate indices for the
+    dense/stochastic strategies; dense may pass None for the
+    full-ground-set default. Per-request selections, trajectories, and
+    evaluation counts are identical to B :func:`run_selection` calls —
+    only the dispatch is amortized.
+    """
+    if not fs:
+        return []
+    f0 = fs[0]
+    B = len(fs)
+    fn = f0.spec
+    for f in fs[1:]:
+        if f.spec != fn:
+            raise ValueError(
+                f"batched requests must share one function spec, got "
+                f"{fn} and {f.spec}")
+        if f.V.shape != f0.V.shape or f.V.dtype != f0.V.dtype:
+            raise ValueError(
+                f"batched requests must share one (n, d) payload shape, "
+                f"got {f0.V.shape} and {f.V.shape} — bucket by signature "
+                f"before dispatching")
+        if f.cfg != f0.cfg:
+            raise ValueError(
+                "batched requests must share one EvalConfig (distance / "
+                "policy / backend enter the jit signature)")
+    ks = [int(k)] * B if ks is None else [int(x) for x in ks]
+    if len(ks) != B:
+        raise ValueError(f"ks has {len(ks)} entries for {B} requests")
+    if any(kb < 0 or kb > k for kb in ks):
+        raise ValueError(f"per-request k must lie in [0, {k}], got {ks}")
+    if k == 0 or all(kb == 0 for kb in ks):
+        return [OptResult([], 0.0, [], 0) for _ in fs]
+    if fn.name not in fx.DEVICE_PLAN_ELIGIBLE:
+        raise ValueError(
+            f"function {fn.name!r} has no n-aligned vec cache to batch-scan "
+            f"over — it runs on the host execution plans only")
+    policy = f0.cfg.resolved_policy()
+    backend = f0.cfg.backend \
+        if f0.cfg.backend in ("pallas", "pallas_interpret") else "jnp"
+    if fx.kernel_template(fn) is None:
+        backend = "jnp"
+    if backend != "jnp" and f0.cfg.distance not in dist_mod.MXU_ELIGIBLE:
+        raise ValueError(
+            f"device plans with a pallas backend support "
+            f"{sorted(dist_mod.MXU_ELIGIBLE)}, got {f0.cfg.distance!r}")
+    rbf_gamma = dist_mod.RBF_GAMMA \
+        if (backend != "jnp" and f0.cfg.distance == "rbf") else None
+    n = f0.n
+
+    if kind == "lazy":
+        top_b = max(1, min(top_b or 256, n))
+        cand_rounds = np.zeros((B, 1, 0), np.int32)
+        m_widest = n
+    else:
+        if cand_rounds is None:
+            if kind != "dense":
+                raise ValueError(f"strategy {kind!r} needs cand_rounds")
+            cand_rounds = np.broadcast_to(
+                np.arange(n, dtype=np.int32)[None, None, :], (B, 1, n))
+        cand_rounds = np.asarray(cand_rounds)
+        if cand_rounds.ndim != 3 or cand_rounds.shape[0] != B:
+            raise ValueError(
+                f"batched cand_rounds must be (B, k, m), got "
+                f"{cand_rounds.shape} for B={B}")
+        if kind == "dense" and cand_rounds.shape[1] != 1:
+            cand_rounds = cand_rounds[:, :1]
+        for b, kb in enumerate(ks):
+            if kb == 0:
+                continue
+            n_cand = len(np.unique(
+                cand_rounds[b, 0] if kind == "dense" else cand_rounds[b]))
+            if kb > n_cand:
+                raise ValueError(
+                    f"request {b}: cannot select k={kb} exemplars from "
+                    f"{n_cand} distinct candidates")
+        m_widest = cand_rounds.shape[2]
+
+    bm = block_m if block_m is not None \
+        else _device_block_m(n, m_widest, n_batch=B)
+    # Stack the per-request payloads through NumPy, not jnp.stack: an XLA
+    # concat over B small device arrays costs a dispatch per operand, which
+    # at serving batch sizes dwarfs the scan itself (~20ms vs ~2ms at
+    # B=64 on CPU). np.asarray of a committed array is a cheap transfer,
+    # np.stack is one memcpy, and the single jnp.asarray builds one fresh
+    # device buffer — which also keeps the seed donation-safe
+    # (cache_seed may alias each f's resident d_e0).
+    V_b = jnp.asarray(np.stack([np.asarray(f.V) for f in fs]))
+    seed_b = jnp.asarray(
+        np.stack([np.asarray(f.cache_seed, np.float32) for f in fs]))
+    aux_b = jnp.asarray(np.stack([np.asarray(f.row_aux) for f in fs]))
+    if all(f.e0 is None for f in fs):
+        w0_b = jnp.zeros((B, f0.dim), f0.V.dtype)
+    else:
+        w0_b = jnp.asarray(np.stack([
+            np.asarray(f.e0 if f.e0 is not None
+                       else jnp.zeros((f.dim,), f.V.dtype))
+            for f in fs]), f0.V.dtype)
+    sel, traj, n_scored, _ = _select_scan_batched(
+        V_b, seed_b, aux_b, jnp.asarray(cand_rounds, jnp.int32), w0_b,
+        jnp.asarray(ks, jnp.int32), fn=fn, kind=kind, k=k, top_b=top_b,
+        distance=f0.cfg.distance, policy_name=policy.name, block_m=bm,
+        backend=backend, rbf_gamma=rbf_gamma, counter_key=counter_key)
+    sel = np.asarray(sel)            # (k, B)
+    traj = np.asarray(traj)          # (k, B)
+    n_scored = np.asarray(n_scored)  # (B,)
+    out = []
+    for b, kb in enumerate(ks):
+        sb = [int(x) for x in sel[:kb, b]]
+        if any(s < 0 for s in sb):
+            bad = sb.index(-1)
+            raise ValueError(
+                f"request {b}, round {bad} had no untaken candidate (its "
+                f"sample row is exhausted by earlier selections)")
+        tb = [float(x) for x in traj[:kb, b]]
+        out.append(OptResult(sb, tb[-1] if tb else 0.0, tb,
+                             int(n_scored[b])))
+    return out

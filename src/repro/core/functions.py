@@ -438,13 +438,20 @@ class SubmodularFunction:
         self.cfg = cfg
         self.e0 = e0
         self._row_aux: Optional[jax.Array] = None
+        self._cache_seed: Optional[jax.Array] = None
 
     # -- per-function state -------------------------------------------------
 
     @property
     def cache_seed(self) -> jax.Array:
-        """(n,) float32 empty-set cache vector (0 for coverage caches)."""
-        return jnp.zeros((self.n,), jnp.float32)
+        """(n,) float32 empty-set cache vector (0 for coverage caches).
+
+        Memoized: repeated access (the serving layer stacks B seeds per
+        dispatch) must not pay a device op each time. Callers that donate
+        must copy — the returned buffer is shared."""
+        if self._cache_seed is None:
+            self._cache_seed = jnp.zeros((self.n,), jnp.float32)
+        return self._cache_seed
 
     @property
     def row_aux(self) -> jax.Array:
@@ -583,7 +590,9 @@ class ExemplarClustering(SubmodularFunction):
 
     @property
     def cache_seed(self) -> jax.Array:
-        return self.d_e0.astype(jnp.float32)
+        if self._cache_seed is None:
+            self._cache_seed = self.d_e0.astype(jnp.float32)
+        return self._cache_seed
 
     @property
     def v0(self) -> float:

@@ -39,6 +39,14 @@ Two gain kernels:
   round 0 has no previous winner, and unlike the idempotent min fold the max
   fold must NOT re-apply a seed row.
 
+Both gain kernels also come in a *batched* variant (:func:`gain_eval_batched`,
+:func:`gain_update_eval_batched`) whose grid grows a leading axis over B
+independent requests — ``(B, m_tiles, n_tiles)`` — so a multi-tenant bucket
+amortizes ONE kernel launch. Per-request tile partitioning, block shapes, and
+accumulation order are identical to the unbatched kernels, which keeps batched
+selections bit-compatible with the unbatched engine; ragged-k masking rides in
+the per-request ``w_valid`` gate, so padded requests never fold.
+
 A third kernel serves the streaming sieve engine:
 
 * :func:`sieve_gain_eval` — the fused gain of a whole sieve cache *table*
@@ -217,6 +225,142 @@ def gain_update_eval(
         out_shape=(
             jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
             jax.ShapeDtypeStruct((n_pad, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(V, C, cache, winner, w_valid)
+
+
+def _gain_kernel_batched(v_ref, c_ref, cache_ref, out_ref, *,
+                         n_total: int, policy: PrecisionPolicy, rbf_gamma,
+                         fold: str, affine):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    v = v_ref[0].astype(policy.compute_dtype)        # (Bn, d)
+    c = c_ref[0].astype(policy.compute_dtype)        # (Bm, d)
+    d2 = _dist_tile(v, c, policy, rbf_gamma)         # (Bn, Bm)
+    partial = _score_tile(cache_ref[0], d2, n_total, fold, affine)
+    out_ref[...] += partial[None, :, None]
+
+
+def gain_eval_batched(
+    V: jax.Array,          # (B, n_pad, d_pad)
+    C: jax.Array,          # (B, m_pad, d_pad)
+    cache: jax.Array,      # (B, n_pad, 1) float32
+    *,
+    n_total: int,
+    policy: PrecisionPolicy,
+    block_n: int,
+    block_m: int,
+    rbf_gamma: Optional[float] = None,
+    fold: str = "min",
+    affine: Optional[tuple] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched :func:`gain_eval` — B independent requests, ONE kernel launch.
+
+    The grid grows a leading batch axis: ``(B, m_tiles, n_tiles)`` with n
+    still innermost, so each (b, i) output block accumulates over its own
+    request's V tiles exactly as the unbatched kernel does — per-request tile
+    partitioning and accumulation order are identical, which is what makes
+    batched selections bit-compatible with the unbatched engine. Returns
+    (B, m_pad, 1) float32 gains.
+    """
+    B, n_pad, d_pad = V.shape
+    m_pad = C.shape[1]
+    grid = (B, m_pad // block_m, n_pad // block_n)
+    kern = functools.partial(
+        _gain_kernel_batched, n_total=n_total, policy=policy,
+        rbf_gamma=rbf_gamma, fold=fold, affine=affine)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d_pad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_m, d_pad), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_n, 1), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, 1), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(V, C, cache)
+
+
+def _gain_update_kernel_batched(v_ref, c_ref, cache_ref, w_ref, wv_ref,
+                                gain_ref, cache_out_ref,
+                                *, n_total: int, policy: PrecisionPolicy,
+                                rbf_gamma, fold: str, affine):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        gain_ref[...] = jnp.zeros_like(gain_ref)
+
+    v = v_ref[0].astype(policy.compute_dtype)        # (Bn, d)
+    w = w_ref[0].astype(policy.compute_dtype)        # (1, d) request's winner
+    cache = cache_ref[0].astype(jnp.float32)         # (Bn, 1)
+    dw = _dist_tile(v, w, policy, rbf_gamma)         # (Bn, 1)
+    # per-request w_valid gate: requests whose previous round was masked
+    # (ragged k) or round 0 must not fold
+    new_cache = jnp.where(wv_ref[0, 0, 0] > 0,
+                          _fold_tile(cache, dw, fold, affine), cache)
+    cache_out_ref[...] = new_cache[None]             # idempotent across m tiles
+
+    c = c_ref[0].astype(policy.compute_dtype)        # (Bm, d)
+    d2 = _dist_tile(v, c, policy, rbf_gamma)         # (Bn, Bm)
+    partial = _score_tile(new_cache, d2, n_total, fold, affine)
+    gain_ref[...] += partial[None, :, None]
+
+
+def gain_update_eval_batched(
+    V: jax.Array,          # (B, n_pad, d_pad)
+    C: jax.Array,          # (B, m_pad, d_pad)
+    cache: jax.Array,      # (B, n_pad, 1) float32 — caches *before* winners
+    winner: jax.Array,     # (B, 1, d_pad) — per-request previous winner
+    w_valid: jax.Array,    # (B, 1, 1) float32 — per-request fold gate
+    *,
+    n_total: int,
+    policy: PrecisionPolicy,
+    block_n: int,
+    block_m: int,
+    rbf_gamma: Optional[float] = None,
+    fold: str = "min",
+    affine: Optional[tuple] = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched :func:`gain_update_eval`: per-request fold + score, one launch.
+
+    Every request carries its own winner row and its own ``w_valid`` gate
+    (round 0, and rounds past a request's effective k under ragged-k
+    masking, pass 0 so the fold is a no-op for that request only). Returns
+    ``(gains (B, m_pad, 1), new_cache (B, n_pad, 1))``.
+    """
+    B, n_pad, d_pad = V.shape
+    m_pad = C.shape[1]
+    grid = (B, m_pad // block_m, n_pad // block_n)
+    kern = functools.partial(
+        _gain_update_kernel_batched, n_total=n_total, policy=policy,
+        rbf_gamma=rbf_gamma, fold=fold, affine=affine)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, d_pad), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_m, d_pad), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_n, 1), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, d_pad), lambda b, i, j: (b, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, i, j: (b, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_m, 1), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_n, 1), lambda b, i, j: (b, j, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, m_pad, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, n_pad, 1), jnp.float32),
         ),
         interpret=interpret,
     )(V, C, cache, winner, w_valid)

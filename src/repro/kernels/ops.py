@@ -211,6 +211,21 @@ def _pad_gain_operands(V, C, cache, block_n, block_m, cache_pad: float = 0.0):
     return Vp, Cp, cache_p, d_pad
 
 
+def _pad_gain_operands_batched(V, C, cache, block_n, block_m,
+                               cache_pad: float = 0.0):
+    """Batched (B-leading) analogue of :func:`_pad_gain_operands` — pads the
+    row/candidate/feature axes; the batch axis is never padded here (bucket
+    padding is the serving layer's job)."""
+    d_pad = _round_up(V.shape[2], LANE)
+    n_pad = _round_up(V.shape[1], block_n)
+    m_pad = _round_up(C.shape[1], block_m)
+    Vp = _pad_axis(_pad_axis(V, n_pad, 1), d_pad, 2)
+    Cp = _pad_axis(_pad_axis(C, m_pad, 1), d_pad, 2)
+    cache_p = _pad_axis(cache.astype(jnp.float32), n_pad, 1,
+                        value=cache_pad)[:, :, None]
+    return Vp, Cp, cache_p, d_pad
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
@@ -253,9 +268,23 @@ def marginal_gain(
     :mod:`repro.kernels.marginal_gain`): the default ``"min"`` scores the
     exemplar min-distance cache; ``("max", (α, β))`` scores
     relu((α + β·d) − cache) against a max-similarity cache.
+
+    Batched dispatch: pass ``V (B, n, d)``, ``C (B, m, d)``, and
+    ``mincache (B, n)`` and the call routes to the grid-over-B kernel —
+    one launch scores all B requests with per-request block shapes identical
+    to the unbatched path (bit-compatible per-request gains).
     """
     if interpret is None:
         interpret = _is_cpu()
+    if V.ndim == 3:
+        n = V.shape[1]
+        bn = min(block_n, _round_up(n, SUBLANE))
+        bm = min(block_m, _round_up(C.shape[1], SUBLANE))
+        return _marginal_gain_padded_batched(
+            V, C, mincache, policy=policy, interpret=interpret,
+            rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
+            block_n=bn, block_m=bm, fold=fold,
+            score_affine=None if score_affine is None else tuple(score_affine))
     n = V.shape[0]
     bn = min(block_n, _round_up(n, SUBLANE))
     bm = min(block_m, _round_up(C.shape[0], SUBLANE))
@@ -264,6 +293,25 @@ def marginal_gain(
         rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
         block_n=bn, block_m=bm, fold=fold,
         score_affine=None if score_affine is None else tuple(score_affine))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
+                     "block_n", "block_m", "fold", "score_affine"),
+)
+def _marginal_gain_padded_batched(V, C, cache, *, policy, interpret,
+                                  rbf_gamma, n_total, block_n, block_m,
+                                  fold, score_affine):
+    m = C.shape[1]
+    Vp, Cp, cache_p, _ = _pad_gain_operands_batched(
+        V, C, cache, block_n, block_m,
+        cache_pad=float("inf") if fold == "max" else 0.0)
+    out = _mg.gain_eval_batched(
+        Vp, Cp, cache_p, n_total=n_total, policy=policy,
+        block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
+        fold=fold, affine=score_affine, interpret=interpret)
+    return out[:, :m, 0]
 
 
 @functools.partial(
@@ -315,9 +363,27 @@ def fused_gain_update(
     round-0 step where no previous winner exists. The min fold is idempotent
     against its own seed so exemplar callers may omit it, but the max fold
     is not — generic callers must gate.
+
+    Batched dispatch: pass ``V (B, n, d)``, ``C (B, m, d)``,
+    ``mincache (B, n)``, ``winner (B, d)``, and ``w_valid (B,)`` — one
+    launch folds+scores all B requests; the per-request ``w_valid`` lane
+    doubles as the ragged-k gate (a request past its effective k passes 0
+    and its cache stays frozen in-kernel).
     """
     if interpret is None:
         interpret = _is_cpu()
+    if V.ndim == 3:
+        n = V.shape[1]
+        bn = min(block_n, _round_up(n, SUBLANE))
+        bm = min(block_m, _round_up(C.shape[1], SUBLANE))
+        if w_valid is None:
+            w_valid = jnp.ones((V.shape[0],), jnp.float32)
+        return _fused_gain_update_padded_batched(
+            V, C, mincache, winner, w_valid, policy=policy,
+            interpret=interpret, rbf_gamma=rbf_gamma,
+            n_total=n_total if n_total is not None else n,
+            block_n=bn, block_m=bm, fold=fold,
+            score_affine=None if score_affine is None else tuple(score_affine))
     n = V.shape[0]
     bn = min(block_n, _round_up(n, SUBLANE))
     bm = min(block_m, _round_up(C.shape[0], SUBLANE))
@@ -328,6 +394,27 @@ def fused_gain_update(
         rbf_gamma=rbf_gamma, n_total=n_total if n_total is not None else n,
         block_n=bn, block_m=bm, fold=fold,
         score_affine=None if score_affine is None else tuple(score_affine))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("policy", "interpret", "rbf_gamma", "n_total",
+                     "block_n", "block_m", "fold", "score_affine"),
+)
+def _fused_gain_update_padded_batched(V, C, cache, winner, w_valid, *,
+                                      policy, interpret, rbf_gamma, n_total,
+                                      block_n, block_m, fold, score_affine):
+    n, m = V.shape[1], C.shape[1]
+    Vp, Cp, cache_p, d_pad = _pad_gain_operands_batched(
+        V, C, cache, block_n, block_m,
+        cache_pad=float("inf") if fold == "max" else 0.0)
+    w_p = _pad_axis(winner[:, None, :], d_pad, 2)
+    wv = jnp.reshape(w_valid.astype(jnp.float32), (-1, 1, 1))
+    gains, new_cache = _mg.gain_update_eval_batched(
+        Vp, Cp, cache_p, w_p, wv, n_total=n_total, policy=policy,
+        block_n=block_n, block_m=block_m, rbf_gamma=rbf_gamma,
+        fold=fold, affine=score_affine, interpret=interpret)
+    return gains[:, :m, 0], new_cache[:, :n, 0]
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,8 @@ and evaluation counts across the full product
   × candidate strategies {dense, stochastic, lazy}
   × evaluation backends {jnp, pallas_interpret}
   × n ∈ {1024, 8192} (exemplar; the zoo axis runs at n = 1024)
+  × batch B ∈ {1, 4} (the batched device plan: B per-tenant-distinct
+    requests in one dispatch, each compared against ITS OWN host run)
 
 replacing the ad-hoc per-plan parity tests previously scattered across
 test_device_optimizers.py / test_engine_sharded.py. Every cell runs all
@@ -139,6 +141,69 @@ def test_plan_parity_matrix_function_axis(fname, strategy, backend):
             err_msg=f"{plan} trajectory under {fname}/{strategy}/{backend}")
         np.testing.assert_allclose(
             res.value, ref.value, atol=TRAJ_ATOL[backend])
+
+
+# ---------------------------------------------------------------------------
+# Batch axis: run_selection_batch is the device plan's multi-tenant form —
+# B requests with DISTINCT per-tenant data in one dispatch, each demuxed
+# result compared against that tenant's own host reference. This is the
+# serving layer's correctness contract (batching changes throughput, not
+# output); the fine-grained B × ragged-k × eval-count matrix lives in
+# test_batched_engine.py.
+# ---------------------------------------------------------------------------
+
+BATCH_N = 1024
+_BATCH_FUNCS: dict = {}
+
+
+def _batch_funcs(backend: str, b: int):
+    key = (backend, b)
+    if key not in _BATCH_FUNCS:
+        cfg = EvalConfig(backend=backend)
+        _BATCH_FUNCS[key] = [
+            ExemplarClustering(
+                jnp.asarray(blobs(BATCH_N, 24, centers=12, seed=40 + t)[0]),
+                cfg)
+            for t in range(b)]
+    return _BATCH_FUNCS[key]
+
+
+HOST_REF = {
+    "dense": lambda f, seed: greedy(f, K, mode="host"),
+    "stochastic": lambda f, seed: stochastic_greedy(
+        f, K, eps=0.05, seed=seed, mode="host"),
+    "lazy": lambda f, seed: lazy_greedy(f, K, mode="host"),
+}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+@pytest.mark.parametrize("b", (1, 4))
+def test_plan_parity_matrix_batch_axis(b, strategy, backend):
+    from repro.core import run_selection_batch
+    from repro.core.service import _stochastic_samples
+
+    fs = _batch_funcs(backend, b)
+    cand = None
+    if strategy == "stochastic":
+        cand = np.stack([_stochastic_samples(BATCH_N, K, 0.05, seed=t)
+                         for t in range(b)])
+    results = run_selection_batch(
+        fs, kind=strategy, k=K, cand_rounds=cand,
+        counter_key=f"parity_batch_{strategy}")
+    assert len(results) == b
+    for t, (f, res) in enumerate(zip(fs, results)):
+        ref = HOST_REF[strategy](f, t)
+        assert res.indices == ref.indices, (
+            f"batched request {t} diverges from host under "
+            f"{strategy}/{backend}/B={b}: {res.indices} != {ref.indices}")
+        assert res.evaluations == ref.evaluations, (
+            f"batched request {t} evaluation count diverges under "
+            f"{strategy}/{backend}/B={b}")
+        np.testing.assert_allclose(
+            res.trajectory, ref.trajectory, atol=TRAJ_ATOL[backend],
+            err_msg=f"batched request {t} trajectory under "
+                    f"{strategy}/{backend}/B={b}")
 
 
 def test_feature_based_runs_host_plans_only():

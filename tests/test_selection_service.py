@@ -1,0 +1,186 @@
+"""SelectionService: the multi-tenant front end over run_selection_batch.
+
+Certifies the serving pipeline end to end — submit → signature bucket →
+padded batched dispatch → per-request demux — returns exactly what direct
+engine calls return, amortizes dispatches as promised by the bucketing
+policy, isolates bucket failures, and applies backpressure.
+"""
+import asyncio
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import EvalConfig, SelectionService, run_selection
+from repro.core.functions import FUNCTIONS
+from repro.core.optimizers import stochastic_greedy
+from repro.core.service import _SelectionRequest, _next_pow2
+from repro.data.synthetic import blobs
+
+N, D, K = 48, 8, 3
+
+
+def _tenants(count, n=N, seed0=200):
+    return [blobs(n, D, centers=4, seed=seed0 + t)[0] for t in range(count)]
+
+
+def _ref(X, kind, k, seed=0, **kw):
+    f = FUNCTIONS["exemplar"](jnp.asarray(X))
+    if kind == "stochastic":
+        return stochastic_greedy(f, k, eps=kw.get("eps", 0.05), seed=seed,
+                                 mode="device")
+    cand = np.arange(X.shape[0], dtype=np.int32)[None, :] \
+        if kind == "dense" else None
+    return run_selection(f, kind=kind, k=k, cand_rounds=cand,
+                         top_b=kw.get("top_b", 0), counter_key="svc_ref")
+
+
+def test_served_results_match_direct_engine_calls():
+    """Mixed kinds, ragged k, per-request stochastic seeds — every tenant
+    gets exactly its direct-call result."""
+    Xs = _tenants(9)
+    kinds = [["dense", "lazy", "stochastic"][i % 3] for i in range(9)]
+    ks = [2 + i % 3 for i in range(9)]
+
+    async def main():
+        async with SelectionService(max_batch=8) as svc:
+            res = await asyncio.gather(*[
+                svc.submit(X, k=kb, kind=kind, seed=i, top_b=16)
+                for i, (X, kind, kb) in enumerate(zip(Xs, kinds, ks))])
+            return res, dict(svc.stats)
+
+    res, stats = asyncio.run(main())
+    for i, (X, kind, kb) in enumerate(zip(Xs, kinds, ks)):
+        ref = _ref(X, kind, kb, seed=i, top_b=16)
+        assert res[i].indices == ref.indices, (i, kind)
+        assert res[i].evaluations == ref.evaluations, (i, kind)
+        np.testing.assert_allclose(res[i].trajectory, ref.trajectory,
+                                   atol=1e-5)
+    assert stats["requests"] == 9
+
+
+def test_bucketing_amortizes_dispatches():
+    """16 same-signature tenants submitted concurrently ride few batched
+    dispatches (1 when the burst lands in one worker drain), never 16."""
+    Xs = _tenants(16)
+
+    async def main():
+        async with SelectionService(max_batch=16) as svc:
+            res = await asyncio.gather(*[svc.submit(X, k=K) for X in Xs])
+            return res, dict(svc.stats)
+
+    res, stats = asyncio.run(main())
+    assert stats["batched_requests"] == 16
+    assert stats["dispatches"] < 16 / 2, stats
+    for X, r in zip(Xs, res):
+        assert r.indices == _ref(X, "dense", K).indices
+
+
+def test_bucket_signature_policy():
+    """Dense/lazy pool k up to the next power of two (ragged masking makes
+    them exact); stochastic buckets by exact (k, eps) because the sample
+    width enters the dispatch shape; seeds stay out of the signature."""
+    X = _tenants(1)[0]
+    fut = None  # signature() never touches the future
+
+    def sig(**kw):
+        base = dict(X=X, k=3, fn="exemplar", params=(), kind="dense",
+                    seed=0, eps=0.05, top_b=0, future=fut)
+        return _SelectionRequest(**{**base, **kw}).signature()
+
+    assert sig(k=3) == sig(k=4)                      # pow2 pooling
+    assert sig(k=4) != sig(k=5)
+    assert sig() != sig(kind="lazy")
+    assert sig() != sig(fn="graph_cut")
+    assert sig() != sig(params=(("lam", 0.25),))
+    assert sig(kind="stochastic", k=3) != sig(kind="stochastic", k=4)
+    assert sig(kind="stochastic", eps=0.05) != sig(kind="stochastic",
+                                                   eps=0.2)
+    assert sig(kind="stochastic", seed=1) == sig(kind="stochastic", seed=2)
+    assert _next_pow2(1) == 1 and _next_pow2(5) == 8
+
+
+def test_padding_slots_are_accounted_and_inert():
+    """A 3-tenant bucket pads to B=4 with one k_eff=0 slot; the padding is
+    visible in stats and invisible in results."""
+    Xs = _tenants(3)
+
+    async def main():
+        async with SelectionService(max_batch=8) as svc:
+            res = await asyncio.gather(*[svc.submit(X, k=K) for X in Xs])
+            return res, dict(svc.stats)
+
+    res, stats = asyncio.run(main())
+    assert len(res) == 3
+    assert stats["padded_slots"] >= 1
+    for X, r in zip(Xs, res):
+        assert r.indices == _ref(X, "dense", K).indices
+
+
+def test_bucket_error_isolated_and_service_survives():
+    """A bad request fails ITS bucket's future with the real error; other
+    buckets and later submissions are unaffected."""
+    Xs = _tenants(2)
+
+    async def main():
+        async with SelectionService(max_batch=8) as svc:
+            good = svc.submit(Xs[0], k=K)
+            bad = svc.submit(Xs[0], k=K, fn="feature_based")  # host-only fn
+            g = await good
+            with pytest.raises(ValueError, match="host execution plans"):
+                await bad
+            g2 = await svc.submit(Xs[1], k=K)
+            return g, g2
+
+    g, g2 = asyncio.run(main())
+    assert g.indices == _ref(Xs[0], "dense", K).indices
+    assert g2.indices == _ref(Xs[1], "dense", K).indices
+
+
+def test_submit_validates_before_queueing():
+    X = _tenants(1)[0]
+
+    async def main():
+        async with SelectionService() as svc:
+            with pytest.raises(ValueError, match="unknown strategy"):
+                await svc.submit(X, k=2, kind="eager")
+            with pytest.raises(ValueError, match="unknown function"):
+                await svc.submit(X, k=2, fn="nope")
+            with pytest.raises(ValueError, match="cannot select"):
+                await svc.submit(X, k=N + 1)
+            # k=0 short-circuits without a dispatch
+            r = await svc.submit(X, k=0)
+            return r, dict(svc.stats)
+
+    r, stats = asyncio.run(main())
+    assert r.indices == [] and r.evaluations == 0
+    assert stats["dispatches"] == 0 and stats["requests"] == 1
+
+
+def test_backpressure_bounded_queue():
+    """More in-flight submissions than max_pending: producers block on the
+    queue instead of buffering without bound, and everything still gets
+    served."""
+    Xs = _tenants(10)
+
+    async def main():
+        async with SelectionService(max_batch=4, max_pending=2) as svc:
+            res = await asyncio.gather(
+                *[svc.submit(Xs[i], k=2) for i in range(10)])
+            return res, dict(svc.stats)
+
+    res, stats = asyncio.run(main())
+    assert len(res) == 10 and stats["requests"] == 10
+    ref = _ref(Xs[0], "dense", 2)
+    assert res[0].indices == ref.indices
+
+
+def test_unstarted_service_refuses():
+    svc = SelectionService()
+
+    async def main():
+        with pytest.raises(RuntimeError, match="not started"):
+            await svc.submit(_tenants(1)[0], k=2)
+
+    asyncio.run(main())
