@@ -1,0 +1,61 @@
+"""Contract-audit metrics as benchmark rows — the perf trajectory records
+contract state alongside timings.
+
+Each audited entry point emits one row: ``us_per_call`` is the mean
+abstract-trace + lower time per signature (the compile-time cost the
+recompilation-hazard sweep bounds), and ``derived`` carries the structural
+numbers the contracts pin — traced-signature count, worst-case static
+collective count, largest collective operand bytes, donated bytes, and the
+violation count (0 on a green tree; a regression here fails CI via
+``python -m repro.analysis.audit`` *and* shows up in BENCH_pr.json).
+"""
+from __future__ import annotations
+
+import time
+
+
+def run(quick: bool = False):
+    from repro.analysis import report as rep
+    from repro.analysis.registry import build_cases
+    from repro.core import distributed, engine, service, streaming  # noqa: F401
+
+    rows = []
+    per: dict[str, dict] = {}
+    t_all = time.perf_counter()
+    for case in build_cases(quick=quick):
+        t0 = time.perf_counter()
+        result = rep.evaluate_case(case)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        m = per.setdefault(case.contract, {
+            "signatures": 0, "us": 0.0, "collectives": 0,
+            "max_collective_bytes": 0, "donated_bytes": 0, "violations": 0})
+        m["signatures"] += 1
+        m["us"] += dt_us
+        m["collectives"] = max(m["collectives"],
+                               result.metrics.get("collective_total", 0))
+        m["max_collective_bytes"] = max(
+            m["max_collective_bytes"],
+            result.metrics.get("max_collective_bytes", 0))
+        m["donated_bytes"] = max(m["donated_bytes"], rep.donated_bytes(case))
+        m["violations"] += len(result.violations)
+    total_us = (time.perf_counter() - t_all) * 1e6
+
+    for name in sorted(per):
+        m = per[name]
+        rows.append((
+            f"audit/{name}",
+            m["us"] / max(m["signatures"], 1),
+            f"signatures={m['signatures']};collectives={m['collectives']};"
+            f"max_collective_bytes={m['max_collective_bytes']};"
+            f"donated_bytes={m['donated_bytes']};"
+            f"violations={m['violations']}"))
+    rows.append((
+        "audit/all", total_us,
+        f"contracts={len(per)};"
+        f"signatures={sum(m['signatures'] for m in per.values())};"
+        f"violations={sum(m['violations'] for m in per.values())}"))
+
+    from benchmarks.common import emit
+
+    emit(rows)
+    return rows

@@ -11,6 +11,8 @@ CSV rows: name,us_per_call,derived. Mapping to the paper:
   optimizers      — §IV-A optimizer evaluation-count profile + engine plans
   streaming       — sieve family: per-element host loop vs device block offer
   functions       — zoo objectives through the shared engine at n ∈ {4k, 32k}
+  contracts       — compiled-contract audit metrics (traced signatures,
+                    collective census, donated bytes) per audited entry point
 
 ``--json`` additionally writes the rows as a machine-readable artifact
 (``{module: [{name, us_per_call, derived, backend, peak_device_bytes,
@@ -25,17 +27,22 @@ objective the row scored ("exemplar" unless the module tagged it), so the
 function-zoo rows chart per-objective slopes. The sharded plans' O(n/p)
 per-device memory claim is certified by the analytic
 ``*_bytes_per_device`` columns those rows carry in ``derived``. ``--only``
-takes a comma-separated module list.
+takes a comma-separated module list. A module that raises (or emits no
+rows) is recorded under ``_errors`` in the JSON artifact and the run
+exits non-zero — an errored benchmark must fail CI, not flatline the
+trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import sys
+import traceback
 
 MODULES = ["sweeps", "precision", "chunking", "greedy_modes",
            "kernel_roofline", "optimizers", "streaming", "functions",
-           "serving"]
+           "serving", "contracts"]
 
 
 def main() -> None:
@@ -50,9 +57,19 @@ def main() -> None:
     print("name,us_per_call,derived,backend,peak_device_bytes,function,"
           "n_batch")
     collected: dict[str, list[dict]] = {}
+    errors: dict[str, str] = {}
     for m in mods:
-        mod = importlib.import_module(f"benchmarks.{m}")
-        rows = mod.run(quick=args.quick)
+        try:
+            mod = importlib.import_module(f"benchmarks.{m}")
+            rows = mod.run(quick=args.quick)
+            if not rows:
+                raise RuntimeError(f"module {m!r} emitted no rows")
+        except Exception:
+            # a failing module must fail the job — a silently-empty
+            # BENCH_pr.json would read as a flat perf trajectory
+            errors[m] = traceback.format_exc()
+            collected[m] = []
+            continue
         collected[m] = [
             {"name": row[0], "us_per_call": row[1], "derived": row[2],
              # 4th column = the evaluation backend the entry scored
@@ -67,9 +84,16 @@ def main() -> None:
             for row in (rows or [])
         ]
     if args.json:
+        payload: dict = dict(collected)
+        if errors:
+            payload["_errors"] = errors
         with open(args.json, "w") as fh:
-            json.dump(collected, fh, indent=2)
+            json.dump(payload, fh, indent=2)
         print(f"# wrote {args.json}")
+    if errors:
+        for m, tb in errors.items():
+            print(f"# benchmark module {m!r} FAILED:\n{tb}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

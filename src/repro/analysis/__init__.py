@@ -1,0 +1,25 @@
+"""Static analysis of the engine's compiled artifacts and source tree.
+
+Two layers:
+
+* **Compiled-artifact audit** (:mod:`repro.analysis.jaxpr_audit`,
+  :mod:`repro.analysis.registry`) — every jitted entry point carries a
+  :func:`repro.analysis.contracts.contract` declaring its structural
+  invariants (one-dispatch scan count, per-round collective budget,
+  donation set, precision flow, analytic per-device byte bound). The
+  auditor traces each entry point with abstract values over the documented
+  signature grid, walks the jaxpr and the lowered StableHLO text, and
+  proves the claims hold in the artifact XLA actually compiles.
+* **Source lint** (:mod:`repro.analysis.lint`) — an AST pass over
+  ``src/repro`` catching trace-unsafe idioms before they reach a tracer:
+  Python branches on scan-body operands, host casts of tracers, float
+  equality, ``np.`` compute inside jitted code, missing ``static_argnames``.
+
+CLI: ``python -m repro.analysis.audit [--json OUT] [--lint-only]
+[--audit-only]`` — exits non-zero on any violation. The negative-fixture
+suite in ``tests/test_analysis.py`` proves each checker actually detects
+the defect class it exists for.
+"""
+from repro.analysis.contracts import CONTRACTS, Contract, contract
+
+__all__ = ["CONTRACTS", "Contract", "contract"]

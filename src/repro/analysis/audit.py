@@ -1,0 +1,138 @@
+"""CLI: prove the engine's compiled-artifact contracts and lint the tree.
+
+    python -m repro.analysis.audit [--json OUT] [--lint-only]
+                                   [--audit-only] [--quick]
+                                   [--filter SUBSTR]
+
+Exit status is non-zero on ANY violation: a traced case whose artifact
+breaks its contract, a runtime check failure (retrace on a same-signature
+call, donation mismatch), a lint finding, or a registered contract with no
+audit coverage. CI runs this as a blocking job.
+
+Run it with 2 forced host devices to exercise the sharded-plan contracts:
+
+    JAX_PLATFORMS=cpu XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        python -m repro.analysis.audit
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def _load_contracts():
+    """Import the core modules so their @contract decorators register."""
+    from repro.core import distributed, engine, service, streaming  # noqa: F401
+    from repro.analysis.contracts import CONTRACTS
+
+    return CONTRACTS
+
+
+def run_audit(quick: bool = False, case_filter: str = ""):
+    from repro.analysis import report as rep
+    from repro.analysis.registry import build_cases, runtime_checks
+
+    contracts = _load_contracts()
+    cases = build_cases(quick=quick)
+    if case_filter:
+        cases = [c for c in cases if case_filter in c.label]
+    results = []
+    t0 = time.perf_counter()
+    for i, case in enumerate(cases):
+        try:
+            r = rep.evaluate_case(case)
+        except Exception as e:  # a case that cannot even trace is a failure
+            r = rep.CaseResult(
+                label=case.label, contract=case.contract,
+                violations=[rep.Violation("trace", f"{type(e).__name__}: {e}")],
+                metrics={})
+        results.append(r)
+        if not r.ok:
+            print(f"FAIL {r.label}", file=sys.stderr)
+            for v in r.violations:
+                print(f"     {v}", file=sys.stderr)
+    elapsed = time.perf_counter() - t0
+
+    covered = {c.contract for c in cases}
+    uncovered = [] if case_filter else sorted(
+        name for name, c in contracts.items()
+        if name not in covered and not c.extra.get("runtime_only"))
+
+    rt_results = []
+    if not case_filter:
+        for check in runtime_checks():
+            try:
+                ok, detail = check.run()
+            except Exception as e:
+                ok, detail = False, f"{type(e).__name__}: {e}"
+            rt_results.append({"name": check.name, "ok": ok,
+                               "detail": detail})
+            if not ok:
+                print(f"FAIL runtime {check.name}: {detail}",
+                      file=sys.stderr)
+    return results, rt_results, uncovered, elapsed
+
+
+def run_lint():
+    from repro.analysis.lint import lint_tree
+
+    root = Path(__file__).resolve().parents[1]   # src/repro
+    findings = lint_tree(root)
+    for f in findings:
+        print(f"LINT {f}", file=sys.stderr)
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="compiled-contract audit + source lint")
+    ap.add_argument("--json", metavar="OUT", default=None,
+                    help="write the machine-readable report to OUT")
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--audit-only", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="one case per contract (smoke run)")
+    ap.add_argument("--filter", default="",
+                    help="only audit cases whose label contains SUBSTR")
+    args = ap.parse_args(argv)
+
+    results, rt_results, uncovered, elapsed = [], [], [], 0.0
+    findings = []
+    if not args.lint_only:
+        results, rt_results, uncovered, elapsed = run_audit(
+            quick=args.quick, case_filter=args.filter)
+    if not args.audit_only:
+        findings = run_lint()
+
+    import jax
+
+    from repro.analysis import report as rep
+
+    payload = rep.build_report(results, rt_results, findings,
+                               device_count=jax.device_count())
+    payload["summary"]["uncovered_contracts"] = uncovered
+    payload["summary"]["audit_seconds"] = round(elapsed, 2)
+    if args.json:
+        Path(args.json).write_text(json.dumps(payload, indent=2))
+
+    s = payload["summary"]
+    ok = s["ok"] and not uncovered
+    print(f"contracts audited : {s['contracts']}")
+    print(f"cases traced      : {s['cases']} "
+          f"({s['cases_failed']} failed, {elapsed:.1f}s)")
+    print(f"runtime checks    : {s['runtime_checks']} "
+          f"({s['runtime_failed']} failed)")
+    print(f"lint findings     : {s['lint_findings']}")
+    if uncovered:
+        print(f"UNCOVERED contracts (registered, no audit case): "
+              f"{uncovered}", file=sys.stderr)
+    print("AUDIT " + ("OK" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

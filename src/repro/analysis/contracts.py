@@ -1,0 +1,110 @@
+"""Performance-contract declarations for jitted entry points.
+
+A :class:`Contract` is the machine-readable form of the claims CHANGES.md
+states in prose — "all k rounds in ONE dispatch", "ONE psum of O(m) bytes
+per scored batch", "the cache seed is donated", "gains stay in the compute
+dtype". The :func:`contract` decorator registers one against a jitted entry
+point (or a factory that builds one); the audit registry
+(:mod:`repro.analysis.registry`) turns each into concrete traced cases and
+:mod:`repro.analysis.jaxpr_audit` proves the invariants against the jaxpr
+and the lowered StableHLO.
+
+This module is imported by ``repro.core.*`` at definition time, so it must
+stay dependency-free: no jax, no numpy, no core imports — just the registry
+dict and the dataclass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+#: Global contract registry, keyed by contract name. Populated at import
+#: time by the ``@contract`` decorators on the core entry points; the audit
+#: imports the core modules and reads this.
+CONTRACTS: Dict[str, "Contract"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Declared structural invariants of one jitted entry point.
+
+    The fields are the *vocabulary*; exact per-case expected numbers (a
+    graph-cut round carries one extra owner-gather psum, a sharded-pool
+    round streams one take per block, ...) are derived by the audit
+    registry from the case's (plan, strategy, function, backend) — the
+    contract pins the shape of the claim, the registry pins the arithmetic.
+    """
+
+    name: str
+    #: the registered callable: the jitted entry point itself, or — when
+    #: ``factory`` — a builder returning one (mesh-sharded scans are built
+    #: per (mesh, statics) and cached; the audit calls the real factory so
+    #: it audits the exact executable production code runs).
+    fn: Callable = dataclasses.field(compare=False, repr=False)
+    factory: bool = False
+    #: number of jitted *dispatches* one logical call costs. Always 1 here —
+    #: the whole point of the engine — and the audit additionally proves the
+    #: inside: the k rounds (or the B stream elements) drive exactly
+    #: ``driving_scans`` top-level ``lax.scan``s whose length is the
+    #: case's round/block count, never an unrolled or re-dispatched loop.
+    dispatches: int = 1
+    #: expected number of top-level scans driven by the round/element axis.
+    #: GreeDi's two-phase dispatch legitimately drives three (partition
+    #: greedy, the p-solution evaluation map, merge greedy).
+    driving_scans: int = 1
+    #: collective kinds allowed anywhere in the artifact. Empty = the
+    #: artifact must be collective-free (single-device plans); the audit
+    #: checks *exact* per-case counts for the allowed kinds, so both a
+    #: sneaked-in extra collective and a silently-dropped one fail.
+    collective_kinds: Tuple[str, ...] = ()
+    #: names of donated arguments. The audit asserts the lowered module
+    #: aliases exactly this many inputs onto outputs and — the silent
+    #: failure mode — that NO donated buffer is left un-aliased (XLA only
+    #: warns; ``jax.buffer_donor`` without ``tf.aliasing_output`` in the
+    #: StableHLO is the dropped-donation signature).
+    donate: Tuple[str, ...] = ()
+    #: apply the precision-flow rule: under a half-precision policy no
+    #: ``convert_element_type`` may widen a distance-tile-sized half value
+    #: to fp32 — only the declared O(n)-and-smaller accumulators (cache
+    #: rows, psum payloads, trajectory scalars) may widen.
+    precision: bool = True
+    #: check the compiled executable's ``memory_analysis()`` temp bytes
+    #: against the case's analytic per-device working-set bound (where the
+    #: backend reports one) — the machine-checked half of ROADMAP item 5.
+    memory: bool = False
+    #: short human description for the README table / report.
+    claim: str = ""
+    extra: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def contract(
+    name: str,
+    *,
+    factory: bool = False,
+    dispatches: int = 1,
+    driving_scans: int = 1,
+    collective_kinds: Tuple[str, ...] = (),
+    donate: Tuple[str, ...] = (),
+    precision: bool = True,
+    memory: bool = False,
+    claim: str = "",
+    **extra: Any,
+) -> Callable:
+    """Register a performance contract against the decorated entry point.
+
+    Stack it *above* ``@jax.jit`` so the registered object is the jitted
+    callable (jit wrappers reject attribute writes, so the registry holds
+    the reference — the decorator returns its target untouched).
+    """
+
+    def register(fn: Callable) -> Callable:
+        if name in CONTRACTS:
+            raise ValueError(f"duplicate contract {name!r}")
+        CONTRACTS[name] = Contract(
+            name=name, fn=fn, factory=factory, dispatches=dispatches,
+            driving_scans=driving_scans,
+            collective_kinds=tuple(collective_kinds), donate=tuple(donate),
+            precision=precision, memory=memory, claim=claim, extra=extra)
+        return fn
+
+    return register

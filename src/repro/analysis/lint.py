@@ -1,0 +1,270 @@
+"""Source lint: AST pass over ``src/repro`` for trace-unsafe idioms.
+
+A traced function sees :class:`~jax.core.Tracer` values, not numbers, so a
+class of perfectly ordinary Python is silently wrong (or a loud
+``TracerBoolConversionError``) once it reaches a scan body or a jitted
+function. These rules catch the idioms *before* a trace does:
+
+``tracer-branch``
+    Python ``if``/``while`` on a parameter of a function handed to
+    ``lax.scan`` / ``while_loop`` / ``fori_loop`` / ``cond`` / ``map`` /
+    ``switch``. The body runs ONCE at trace time — branching on a traced
+    operand either crashes or, worse, bakes one branch into every
+    iteration. Use ``jnp.where`` / ``lax.cond``.
+``tracer-cast``
+    ``float()`` / ``int()`` / ``bool()`` on such a parameter — a host
+    round-trip that cannot exist inside a traced loop body.
+``float-eq``
+    ``==`` / ``!=`` against a float literal. Threshold grids and gain
+    comparisons must use tolerance or integer exponents (the exact bug
+    class behind the sieve threshold-grid fix).
+``np-in-jit``
+    ``np.`` calls fed a *parameter* of a jitted function. NumPy on a
+    tracer forces a concretization error at best; at worst it constant-
+    folds a value that should be data. (``np`` used for static shape
+    arithmetic on non-parameters is fine and not flagged.)
+``missing-static``
+    A ``str``- or ``bool``-defaulted parameter of a jitted function that
+    is not listed in ``static_argnames`` — it would be traced as data and
+    fail on the first call (or silently retrace per value if hashable).
+
+Suppress a finding with a trailing ``# lint: allow(<rule>)`` comment on
+the offending line.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterator, Optional
+
+#: control-flow entry points whose function operands become traced bodies
+_TRACE_CALLERS = frozenset(
+    {"scan", "while_loop", "fori_loop", "cond", "map", "switch"})
+
+_ALLOW = re.compile(r"#\s*lint:\s*allow\(([\w\-,\s]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.lax.scan' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _param_names(fn: ast.AST) -> set[str]:
+    a = fn.args
+    params = [*a.posonlyargs, *a.args, *a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg)
+    if a.kwarg:
+        params.append(a.kwarg)
+    return {p.arg for p in params}
+
+
+def _jit_static_argnames(dec: ast.expr) -> Optional[set[str]]:
+    """static_argnames if ``dec`` is a jit decorator, else None.
+
+    Recognizes ``@jax.jit``, ``@jit``, ``@partial(jax.jit, ...)`` and the
+    direct-call form ``@jax.jit(...)``.
+    """
+    if _dotted(dec) in ("jax.jit", "jit"):
+        return set()
+    if not isinstance(dec, ast.Call):
+        return None
+    head = _dotted(dec.func)
+    if head in ("jax.jit", "jit"):
+        call = dec
+    elif head in ("partial", "functools.partial") and dec.args \
+            and _dotted(dec.args[0]) in ("jax.jit", "jit"):
+        call = dec
+    else:
+        return None
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            names: set[str] = set()
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    names.add(el.value)
+            return names
+    return set()
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: list[LintFinding] = []
+        #: names of defs handed to lax control flow, + inline lambdas
+        self.trace_called: set[str] = set()
+        self.trace_lambdas: list[ast.Lambda] = []
+        self._defs: list[ast.AST] = []
+
+    # -- pass 1: collect ----------------------------------------------------
+
+    def visit_Call(self, node: ast.Call):
+        head = _dotted(node.func)
+        parts = head.split(".")
+        # only lax control flow traces its operand (jax.tree.map does not)
+        if parts[-1] in _TRACE_CALLERS and \
+                parts[:-1] in (["lax"], ["jax", "lax"]):
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    self.trace_called.add(arg.id)
+                elif isinstance(arg, ast.Lambda):
+                    self.trace_lambdas.append(arg)
+                elif isinstance(arg, ast.Call) and \
+                        _dotted(arg.func) in ("partial", "functools.partial"):
+                    for inner in arg.args[:1]:
+                        if isinstance(inner, ast.Name):
+                            self.trace_called.add(inner.id)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node):
+        self._defs.append(node)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- findings -----------------------------------------------------------
+
+    def _allowed(self, line: int, rule: str) -> bool:
+        if 1 <= line <= len(self.lines):
+            m = _ALLOW.search(self.lines[line - 1])
+            if m and rule in {s.strip() for s in m.group(1).split(",")}:
+                return True
+        return False
+
+    def _emit(self, node: ast.AST, rule: str, message: str):
+        if not self._allowed(node.lineno, rule):
+            self.findings.append(
+                LintFinding(self.path, node.lineno, rule, message))
+
+    def _check_traced_body(self, fn: ast.AST, label: str):
+        params = _param_names(fn)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                # nested defs get their own pass iff also trace-called
+                if isinstance(node, (ast.If, ast.While)):
+                    hot = _names_in(node.test) & params
+                    if hot:
+                        self._emit(
+                            node, "tracer-branch",
+                            f"Python {'if' if isinstance(node, ast.If) else 'while'}"
+                            f" on traced operand(s) {sorted(hot)} in scan body"
+                            f" {label!r} — use jnp.where / lax.cond")
+                elif isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int", "bool"):
+                    hot = params & set().union(
+                        *(_names_in(a) for a in node.args)) if node.args \
+                        else set()
+                    if hot:
+                        self._emit(
+                            node, "tracer-cast",
+                            f"{node.func.id}() on traced operand(s) "
+                            f"{sorted(hot)} in scan body {label!r} — a host "
+                            f"round-trip cannot run inside a traced loop")
+
+    def _check_float_eq(self, tree: ast.AST):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            operands = [node.left, *node.comparators]
+            if any(isinstance(o, ast.Constant) and isinstance(o.value, float)
+                   for o in operands) and \
+                    any(isinstance(op, (ast.Eq, ast.NotEq)) for op in node.ops):
+                self._emit(node, "float-eq",
+                           "exact ==/!= against a float literal — compare "
+                           "with a tolerance or an integer exponent")
+
+    def _check_jitted(self, fn: ast.AST):
+        statics: Optional[set[str]] = None
+        for dec in fn.decorator_list:
+            s = _jit_static_argnames(dec)
+            if s is not None:
+                statics = s
+        if statics is None:
+            return
+        params = _param_names(fn)
+        traced = params - statics
+        # str/bool defaults are config, not data: they must be static
+        a = fn.args
+        pos = [*a.posonlyargs, *a.args]
+        for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+            self._flag_config_default(fn, p, d, statics)
+        for p, d in zip(a.kwonlyargs, a.kw_defaults):
+            if d is not None:
+                self._flag_config_default(fn, p, d, statics)
+        for node in ast.walk(ast.Module(body=fn.body, type_ignores=[])):
+            if isinstance(node, ast.Call):
+                head = _dotted(node.func)
+                if head.startswith("np.") or head.startswith("numpy."):
+                    hot = traced & set().union(
+                        set(), *(_names_in(arg) for arg in node.args))
+                    if hot:
+                        self._emit(
+                            node, "np-in-jit",
+                            f"np call {head!r} on traced argument(s) "
+                            f"{sorted(hot)} inside jitted "
+                            f"{getattr(fn, 'name', '<fn>')!r} — use jnp")
+
+    def _flag_config_default(self, fn, param, default, statics):
+        if isinstance(default, ast.Constant) and \
+                isinstance(default.value, (str, bool)) and \
+                param.arg not in statics:
+            self._emit(
+                param, "missing-static",
+                f"parameter {param.arg!r} of jitted "
+                f"{getattr(fn, 'name', '<fn>')!r} defaults to "
+                f"{default.value!r} but is not in static_argnames — it "
+                f"would be traced as data")
+
+    # -- driver -------------------------------------------------------------
+
+    def run(self, tree: ast.AST) -> list[LintFinding]:
+        self.visit(tree)
+        for fn in self._defs:
+            if fn.name in self.trace_called:
+                self._check_traced_body(fn, fn.name)
+            self._check_jitted(fn)
+        for lam in self.trace_lambdas:
+            self._check_traced_body(lam, "<lambda>")
+        self._check_float_eq(tree)
+        self.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+        return self.findings
+
+
+def lint_source(source: str, path: str = "<string>") -> list[LintFinding]:
+    return _Linter(path, source).run(ast.parse(source))
+
+
+def lint_tree(root) -> list[LintFinding]:
+    """Lint every ``.py`` under ``root`` (the audit runs it on src/repro)."""
+    root = Path(root)
+    findings: list[LintFinding] = []
+    for p in sorted(root.rglob("*.py")):
+        findings.extend(lint_source(p.read_text(), str(p)))
+    return findings

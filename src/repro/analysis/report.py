@@ -1,0 +1,184 @@
+"""Case evaluation + machine-readable audit report.
+
+:func:`evaluate_case` traces one :class:`~repro.analysis.registry.AuditCase`
+and compares the artifact against its :class:`~repro.analysis.registry.\
+Expect` — every mismatch becomes a :class:`Violation` string pair. The
+report collects per-case results, runtime-check outcomes, and lint
+findings into one JSON-serializable dict (the CLI's ``--json`` payload and
+the CI job's artifact).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Any, Optional
+
+from repro.analysis import jaxpr_audit as ja
+from repro.analysis.registry import AuditCase
+
+
+@dataclasses.dataclass
+class Violation:
+    check: str       #: which claim failed (scans/collectives/donation/...)
+    detail: str
+
+    def __str__(self) -> str:
+        return f"[{self.check}] {self.detail}"
+
+
+@dataclasses.dataclass
+class CaseResult:
+    label: str
+    contract: str
+    violations: list[Violation]
+    metrics: dict[str, Any]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def evaluate_case(case: AuditCase) -> CaseResult:
+    e = case.expect
+    fn, args, kwargs = case.build()
+    art = ja.trace_artifact(fn, args, kwargs)
+    v: list[Violation] = []
+
+    ss = ja.scan_structure(art.jaxpr, e.rounds)
+    if ss.top_scans != e.top_scans:
+        v.append(Violation(
+            "scans", f"top-level scans: {ss.top_scans} (want {e.top_scans}) "
+            f"— the one-dispatch loop structure changed"))
+    if ss.driving != e.driving:
+        v.append(Violation(
+            "scans", f"driving (length-{e.rounds}) scans: {ss.driving} "
+            f"(want {e.driving})"))
+    if ss.whiles != e.whiles:
+        v.append(Violation(
+            "scans", f"while loops: {ss.whiles} (want {e.whiles})"))
+
+    census = ja.collective_census(art.jaxpr)
+    if census.counts != e.collectives:
+        v.append(Violation(
+            "collectives", f"static collective census "
+            f"{dict(census.counts)} != declared {dict(e.collectives)}"))
+    if e.max_collective_bytes is not None and \
+            census.max_operand_bytes > e.max_collective_bytes:
+        v.append(Violation(
+            "collectives", f"largest collective operand "
+            f"{census.max_operand_bytes} B exceeds the O(m) bound "
+            f"{e.max_collective_bytes} B — an O(n·d) or O(n·m) payload is "
+            f"riding a collective"))
+    body_psums: Optional[int] = None
+    if e.body_psums is not None:
+        if ss.driving_body is None:
+            v.append(Violation(
+                "collectives", "no driving scan body to census"))
+        else:
+            body = ja.collective_census(ss.driving_body)
+            body_psums = body.total
+            if body.total != e.body_psums:
+                v.append(Violation(
+                    "collectives", f"driving-scan body carries {body.total} "
+                    f"collectives (want {e.body_psums} per round)"))
+
+    don = ja.donation_audit(art.hlo)
+    if don.aliased != e.donated:
+        v.append(Violation(
+            "donation", f"{don.aliased} input(s) aliased onto outputs "
+            f"(want {e.donated})"))
+    dropped = don.dropped + art.dropped_donations
+    if dropped:
+        v.append(Violation(
+            "donation", f"{dropped} donated input(s) silently dropped "
+            f"(jax.buffer_donor without tf.aliasing_output, or stripped "
+            f"at lowering with only a warning)"))
+
+    prec = None
+    if e.min_widen_elems is not None:
+        prec = ja.precision_flow(art.jaxpr,
+                                 min_widen_elems=e.min_widen_elems)
+        for shape, elems in prec.widens:
+            v.append(Violation(
+                "precision", f"half→fp32 convert_element_type on {shape} "
+                f"({elems} elems ≥ tile threshold {e.min_widen_elems}) — "
+                f"the payload widened outside the declared accumulators"))
+        if e.require_half_dot and prec.half_dots == 0:
+            v.append(Violation(
+                "precision", "no dot_general consumes half-dtype operands "
+                f"— the half-precision policy never reached the matmul"))
+
+    temp_bytes = None
+    if e.memory_bound is not None:
+        temp_bytes = ja.memory_temp_bytes(art.lowered)
+        if temp_bytes is not None and temp_bytes > e.memory_bound:
+            v.append(Violation(
+                "memory", f"compiled temp buffers {temp_bytes} B exceed the "
+                f"analytic working-set bound {e.memory_bound} B — the "
+                f"artifact materializes more than the blocked tile"))
+
+    return CaseResult(
+        label=case.label, contract=case.contract, violations=v,
+        metrics={
+            "top_scans": ss.top_scans, "driving_scans": ss.driving,
+            "whiles": ss.whiles, "collectives": dict(census.counts),
+            "collective_total": census.total,
+            "max_collective_bytes": census.max_operand_bytes,
+            "body_psums": body_psums,
+            "donated_aliased": don.aliased, "donated_dropped": don.dropped,
+            "half_dots": prec.half_dots if prec else None,
+            "temp_bytes": temp_bytes,
+        })
+
+
+def donated_bytes(case: AuditCase) -> int:
+    """Bytes of the case's donated inputs (metrics row material)."""
+    total = 0
+    _, args, _ = case.build()
+    if case.expect.donated:
+        # the donated arg is the cache seed: args[1] for both entry points
+        a = args[1]
+        total = int(a.size) * a.dtype.itemsize
+    return total
+
+
+def build_report(case_results, runtime_results, lint_findings,
+                 *, device_count: int) -> dict:
+    """One JSON-serializable dict for --json / CI artifacts."""
+    failed = [c for c in case_results if not c.ok]
+    rt_failed = [r for r in runtime_results if not r["ok"]]
+    contracts = sorted({c.contract for c in case_results})
+    return {
+        "device_count": device_count,
+        "cases": [
+            {"label": c.label, "contract": c.contract, "ok": c.ok,
+             "violations": [str(x) for x in c.violations],
+             "metrics": c.metrics}
+            for c in case_results],
+        "runtime": runtime_results,
+        "lint": [dataclasses.asdict(f) for f in lint_findings],
+        "summary": {
+            "contracts": len(contracts),
+            "cases": len(case_results),
+            "cases_failed": len(failed),
+            "runtime_checks": len(runtime_results),
+            "runtime_failed": len(rt_failed),
+            "lint_findings": len(lint_findings),
+            "ok": not failed and not rt_failed and not lint_findings,
+        },
+    }
+
+
+def contract_metrics(case_results) -> dict[str, dict]:
+    """Per-contract aggregates for the benchmark emitter."""
+    per: dict[str, dict] = {}
+    for c in case_results:
+        m = per.setdefault(c.contract, Counter(
+            traced_signatures=0, collectives=0, max_collective_bytes=0,
+            failed=0))
+        m["traced_signatures"] += 1
+        m["collectives"] = max(m["collectives"], c.metrics["collective_total"])
+        m["max_collective_bytes"] = max(
+            m["max_collective_bytes"], c.metrics["max_collective_bytes"])
+        m["failed"] += 0 if c.ok else 1
+    return {k: dict(v) for k, v in per.items()}

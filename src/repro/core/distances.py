@@ -33,8 +33,24 @@ def _dot(X: jax.Array, Y: jax.Array, accum_dtype) -> jax.Array:
 
 
 def sq_norms(X: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
-    Xa = X.astype(accum_dtype)
-    return jnp.sum(Xa * Xa, axis=-1)
+    """Row-wise ‖x‖² with explicit accumulation dtype.
+
+    A half-precision payload must NOT be up-cast wholesale (that
+    materializes a payload-sized fp32 copy — the exact traffic the
+    compute/accum split avoids); the self-inner-product routes through
+    ``dot_general`` so the widening rides ``preferred_element_type``
+    inside the unit, like the Gram matmul's. (Audit fixture:
+    ``precision.sq-norms-upcast`` in tests/test_analysis.py.)
+    """
+    if X.dtype == jnp.dtype(accum_dtype):
+        return jnp.sum(X * X, axis=-1)
+    contract = (X.ndim - 1,)
+    batch = tuple(range(X.ndim - 1))
+    return jax.lax.dot_general(
+        X, X,
+        dimension_numbers=((contract, contract), (batch, batch)),
+        preferred_element_type=accum_dtype,
+    )
 
 
 def sqeuclidean_pairwise(

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.analysis.contracts import contract
 from repro.core import distances as dist_mod
 from repro.core import functions as fx
 from repro.core.engine import (DEVICE_TRACE_COUNTS, _device_block_m,
@@ -167,6 +168,20 @@ def make_distributed_cache_update(mesh: Mesh, cfg: EvalConfig,
 _SELECTION_SCAN_CACHE: dict = {}
 
 
+@contract(
+    "distributed.selection_scan[sharded]",
+    factory=True,
+    collective_kinds=("psum",),
+    claim="one dispatch; the round body streams blocked O(Bm·d) takes and "
+          "ONE O(m) gains psum — no collective ever carries O(n·d) or "
+          "O(n·m) bytes; candidate payload resident O(n/p·d) per device")
+@contract(
+    "distributed.selection_scan[replicated]",
+    factory=True,
+    collective_kinds=("psum",),
+    claim="one dispatch; ONE O(m) gains psum per scored batch (plus graph "
+          "cut's owner-gather fold); v0 seeding and the final trajectory "
+          "value are the only round-independent collectives")
 def make_selection_scan(
     mesh: Mesh,
     data_axes: Sequence[str],
@@ -540,6 +555,14 @@ def run_sharded_selection(
 _GREEDI_SCAN_CACHE: dict = {}
 
 
+@contract(
+    "distributed.greedi_scan",
+    factory=True,
+    driving_scans=2,
+    collective_kinds=("psum",),
+    claim="both GreeDi phases in ONE dispatch (partition greedy + p-"
+          "solution global eval + merge greedy); the gathered solution "
+          "pool is the largest collective payload — O(p·k·d), never O(n)")
 def make_greedi_scan(
     mesh: Mesh,
     data_axes: Sequence[str],

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core import distances as dist_mod
 from repro.core import functions as fx
 from repro.core.evaluator import free_memory_bytes
@@ -653,6 +654,13 @@ def drive_selection_scan_batched(*, kind, k, top_b, n_global, pool, k_eff,
 # ---------------------------------------------------------------------------
 
 
+@contract(
+    "engine.select_scan",
+    donate=("seed",),
+    memory=True,
+    claim="all k rounds in ONE dispatch; collective-free; the cache seed "
+          "is donated and aliased onto the final cache output; gains stay "
+          "in the compute dtype; temp bytes stay at blocked-tile scale")
 @partial(jax.jit, static_argnames=("fn", "kind", "k", "top_b", "distance",
                                    "policy_name", "block_m", "backend",
                                    "rbf_gamma", "counter_key"),
@@ -758,6 +766,13 @@ def _select_scan(V, seed, row_aux, cand_rounds, w0, *, fn, kind, k, top_b,
     return sel, traj, n_scored, cache_f[0]
 
 
+@contract(
+    "engine.select_scan_batched",
+    donate=("seed",),
+    memory=True,
+    claim="all k rounds of B independent requests in ONE dispatch; "
+          "collective-free; the stacked (B, n) seed is donated; per-request "
+          "temp bytes stay at blocked-tile scale")
 @partial(jax.jit, static_argnames=("fn", "kind", "k", "top_b", "distance",
                                    "policy_name", "block_m", "backend",
                                    "rbf_gamma", "counter_key"),

@@ -50,6 +50,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core.engine import OptResult
 from repro.core.evaluator import EvalConfig
 from repro.core.functions import FUNCTIONS, ExemplarClustering
@@ -430,6 +431,14 @@ class SelectionService:
             if not req.future.done():
                 req.future.set_result(res)
 
+    @contract(
+        "service.bucket_dispatch",
+        runtime_only=True,
+        claim="every signature bucket rides ONE run_selection_batch "
+              "dispatch (pow2-padded with inert k_eff=0 slots); the traced "
+              "artifact is engine.select_scan_batched's, audited there — "
+              "this contract's own check is the runtime service round trip "
+              "(N concurrent tenants, 1 trace, bucket-count dispatches)")
     def _run_bucket(self, reqs: list["_SelectionRequest"]):
         """Synchronous batched dispatch for one signature bucket (runs in a
         thread; JAX work must not block the event loop)."""

@@ -68,6 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core import functions as fx
 from repro.core.engine import DEVICE_TRACE_COUNTS
 from repro.core.functions import FnSpec
@@ -318,6 +319,11 @@ def _element_step_jit(state, seed, idx, dvec, valid, *, spec, row_aux=None):
                          row_aux=aux)
 
 
+@contract(
+    "streaming.offer_scan",
+    claim="one dispatch consumes a whole stream block: ONE lax.scan over "
+          "its elements, collective-free, the sieve table updated in place "
+          "per element")
 @partial(jax.jit, static_argnames=("spec", "counter_key"))
 def _offer_block_scan(state, seed, row_aux, idxb, dmatb, validb, *, spec,
                       counter_key):
@@ -384,6 +390,13 @@ def _state_specs(axes):
         sizes=P(None), members=P(None, None), m_seen=P(), lb=P(), evals=P())
 
 
+@contract(
+    "streaming.offer_scan[sharded]",
+    factory=True,
+    collective_kinds=("psum",),
+    claim="one dispatch per stream block; each element's table update "
+          "costs O(S_max) psum'd scalars per reduction — collective bytes "
+          "scale with the sieve table, never the ground set")
 def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
                             n_total: int, distance: str, policy_name: str,
                             counter_key: str):
