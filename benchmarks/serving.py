@@ -29,6 +29,7 @@ import numpy as np
 from benchmarks.common import emit, time_call
 from repro.core import SelectionService, run_selection, run_selection_batch
 from repro.core.functions import ExemplarClustering
+from repro.core.service import MultiStreamIngestionService
 from repro.data.synthetic import blobs
 
 
@@ -96,5 +97,39 @@ def run(quick: bool = False):
                          f"dispatches={stats['dispatches']};"
                          f"identical={svc_identical}",
                          "jnp", None, "exemplar", b))
+    rows.append(_multistream_service_row(quick))
     emit(rows)
     return rows
+
+
+def _multistream_service_row(quick: bool):
+    """The streaming serving surface at many concurrent logical streams:
+    P producers offer into one :class:`MultiStreamIngestionService` (one
+    batched sieve dispatch per block across ALL partitions) and the row
+    reports end-to-end elements/sec through the async path, snapshot
+    (two-tier merge) included."""
+    P, m = (16, 512) if quick else (64, 2048)
+    n, d = 256, 16
+    X, _ = blobs(n, d, centers=8, seed=200)
+    f = ExemplarClustering(jnp.asarray(X))
+    rng = np.random.default_rng(5)
+    stream = rng.standard_normal((m, d)).astype(np.float32)
+
+    async def go():
+        async with MultiStreamIngestionService(
+                f, k=6, n_streams=P, block_size=16) as svc:
+            # warm the batched-scan trace before timing
+            for x in stream[:P * 16]:
+                await svc.offer(x)
+            await svc.drain()
+            t0 = time.perf_counter()
+            for x in stream:
+                await svc.offer(x)
+            await svc.drain()
+            snap = await svc.snapshot()
+            return time.perf_counter() - t0, snap
+
+    dt, snap = asyncio.run(go())
+    return (f"serve_multistream_p{P}", dt * 1e6 / m,
+            f"elements_per_sec={m / dt:.0f};streams={P};"
+            f"certified={snap.certified}", "jnp", None, "exemplar", P)

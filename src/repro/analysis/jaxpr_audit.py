@@ -19,8 +19,12 @@ The checks map one-to-one onto the engine's prose claims:
 * :func:`donation_audit` — "the cache seed is donated": the lowered
   module's entry signature must alias exactly the declared number of
   inputs onto outputs (``tf.aliasing_output``), and no donated buffer may
-  be left un-aliased (``jax.buffer_donor`` with no aliasing attribute is
-  XLA's silent drop — it only warns at run time).
+  be left un-aliased. A bare ``jax.buffer_donor`` marker is ambiguous:
+  on a multi-device mesh jax defers the aliasing decision to XLA's SPMD
+  partitioner, so :func:`resolve_deferred_donations` re-judges those
+  markers against the compiled ``input_output_alias`` table — only a
+  donor the compiled executable does not alias counts as silently
+  dropped (XLA's run-time-warning-only failure mode).
 * :func:`precision_flow` — "gains stay in the compute dtype": under a
   half-precision policy no ``convert_element_type`` may widen a
   distance-tile-sized half tensor to fp32 (widening rides the matmul's
@@ -193,6 +197,45 @@ def donation_audit(hlo_text: str) -> DonationTable:
     return DonationTable(
         aliased=len(re.findall(r"tf\.aliasing_output", sig)),
         dropped=len(re.findall(r"jax\.buffer_donor", sig)))
+
+
+_ALIAS_ENTRY = re.compile(r"\{\d+[^}]*\}:\s*\(\d+,")
+
+
+def resolve_deferred_donations(table: DonationTable,
+                               lowered) -> DonationTable:
+    """Re-judge ``jax.buffer_donor`` markers against the compiled executable.
+
+    Single-device lowering decides aliasing up front (``tf.aliasing_output``
+    in the entry signature). Under a multi-device mesh jax *defers* the
+    decision instead: the StableHLO carries only ``jax.buffer_donor`` and
+    XLA picks the aliasing after SPMD partitioning, so the marker alone is
+    ambiguous — it reads identically for "aliased at compile time" and
+    "dropped". Disambiguate by parsing the compiled module's
+    ``input_output_alias`` table: every donor that landed there is a real
+    alias; whatever the table does not cover stays dropped. Costs one
+    compile, so callers should only reach for this when the cheap static
+    pass reports deferred donors.
+    """
+    if table.dropped == 0:
+        return table
+    try:
+        text = lowered.compile().as_text()
+    except Exception:  # pragma: no cover — backend can't print: stay strict
+        return table
+    # the table lives on the HLO header line: ``input_output_alias={ {0}:
+    # (0, {}, may-alias), … }``; entry keys ``{N}: (M,`` are unambiguous on
+    # that line (layout suffixes like ``f32[8]{0}`` are never followed by a
+    # colon), so count keys rather than brace-balance the nested braces
+    m = re.search(r"input_output_alias=\{(?P<line>[^\n]*)", text)
+    if m is None:
+        return table
+    entries = len(_ALIAS_ENTRY.findall(m.group("line")))
+    # the compiled table covers tf.aliasing_output params too; only the
+    # surplus beyond the statically-aliased count vouches for donors
+    resolved = min(table.dropped, max(0, entries - table.aliased))
+    return DonationTable(aliased=table.aliased + resolved,
+                         dropped=table.dropped - resolved)
 
 
 # ---------------------------------------------------------------------------

@@ -337,7 +337,49 @@ def _stream_case(variant, fname, backend, sharded):
         expect=Expect(
             rounds=B_BLOCK, top_scans=1, driving=1, whiles=0,
             collectives=collectives, body_psums=body,
-            max_collective_bytes=max_bytes, donated=0,
+            max_collective_bytes=max_bytes,
+            donated=_sieve_donated(),   # every SieveState carry leaf
+            min_widen_elems=None))
+
+
+def _sieve_donated() -> int:
+    """The donated streaming carry is the whole SieveState — one aliased
+    input per leaf, so the expected arity tracks the NamedTuple."""
+    from repro.core import streaming as st
+
+    return len(st.SieveState._fields)
+
+
+SIEVE_P = 3     #: stream partitions in the batched audit case
+
+
+def _stream_batched_case(variant, fname, backend):
+    from repro.core import streaming as st
+
+    fspec = SPECS[fname]
+    spec = st.make_spec(SIEVE_K, SIEVE_EPS, variant, backend=backend,
+                        fn=fspec)
+
+    def build():
+        base = _sieve_state_structs(spec, N)
+        states = type(base)(*[
+            _sds((SIEVE_P,) + leaf.shape, leaf.dtype) for leaf in base])
+        args = (states, _sds((N,), np.float32), _sds((N,), np.float32),
+                _sds((B_BLOCK, SIEVE_P), np.int32),
+                _sds((B_BLOCK, SIEVE_P, N), np.float32),
+                _sds((B_BLOCK, SIEVE_P), np.bool_))
+        return st._offer_block_scan_batched, args, dict(
+            spec=spec, counter_key="audit_sieve_batched")
+
+    return AuditCase(
+        contract="streaming.offer_scan_batched",
+        label=f"sieve_{variant}.batched[P={SIEVE_P}].{fname}.{spec.backend}",
+        build=build,
+        expect=Expect(
+            rounds=B_BLOCK, top_scans=1, driving=1, whiles=0,
+            collectives=Counter(), body_psums=None,
+            max_collective_bytes=None,
+            donated=_sieve_donated(),
             min_widen_elems=None))
 
 
@@ -429,6 +471,7 @@ def build_cases(quick: bool = False) -> list[AuditCase]:
                 for sharded in (False, True):
                     cases.append(_stream_case(variant, fname, backend,
                                               sharded))
+                cases.append(_stream_batched_case(variant, fname, backend))
     cases.append(_memory_case())
     cases.append(_memory_case(batch=4))
     if quick:
@@ -545,6 +588,60 @@ def _rt_donation_live() -> tuple[bool, str]:
     return True, "seed donated and consumed; resident seed intact"
 
 
+def _rt_donation_sieve() -> tuple[bool, str]:
+    """The streaming carry's aliasing table must match live behavior: after
+    a block dispatch the engine's PRE-call state buffers are consumed
+    (``is_deleted``) and the rebound state is alive — the table aliased in
+    place instead of copying."""
+    import jax.numpy as jnp
+    from repro.core.evaluator import EvalConfig
+    from repro.core.functions import ExemplarClustering
+    from repro.core.streaming import make_sieve_engine
+
+    rng = np.random.default_rng(6)
+    V = jnp.asarray(rng.standard_normal((32, 4)).astype(np.float32))
+    f = ExemplarClustering(V, EvalConfig())
+    engine = make_sieve_engine(f, 3, 0.2, variant="sieve", mode="device",
+                               block_size=8)
+    old = engine.state
+    engine.offer(np.arange(8), rng.standard_normal((8, 4)))
+    jax.block_until_ready(engine.state)
+    if not old.caches.is_deleted():
+        return False, "pre-call cache table survived the dispatch (copied)"
+    if engine.state.caches.is_deleted():
+        return False, "the rebound cache table was consumed"
+    return True, "sieve carry donated and consumed; rebound table alive"
+
+
+def _rt_overlap_sieve() -> tuple[bool, str]:
+    """The overlapped offer pipeline must be free lunch: zero extra traces
+    versus the serialized baseline AND identical members/value/evals."""
+    import jax.numpy as jnp
+    from repro.core import engine as eng
+    from repro.core.evaluator import EvalConfig
+    from repro.core.functions import ExemplarClustering
+    from repro.core.streaming import make_sieve_engine
+
+    rng = np.random.default_rng(7)
+    V = jnp.asarray(rng.standard_normal((32, 4)).astype(np.float32))
+    stream = rng.standard_normal((40, 4)).astype(np.float32)
+    results = []
+    before = eng.DEVICE_TRACE_COUNTS["sieve_sieve"]
+    for overlap in (False, True):
+        f = ExemplarClustering(jnp.asarray(V), EvalConfig())
+        engine = make_sieve_engine(f, 3, 0.2, variant="sieve",
+                                   mode="device", block_size=8,
+                                   overlap=overlap, max_in_flight=2)
+        acc = engine.offer(np.arange(len(stream)), stream)
+        results.append((engine.best(), engine.evaluations(), acc.tolist()))
+    traces = eng.DEVICE_TRACE_COUNTS["sieve_sieve"] - before
+    if traces > 1:
+        return False, f"overlap pipeline retraced: {traces} traces (want ≤1)"
+    if results[0] != results[1]:
+        return False, "overlap-on diverged from the serialized baseline"
+    return True, "overlap-on == overlap-off (members/value/evals), ≤1 trace"
+
+
 def _rt_service_bucket() -> tuple[bool, str]:
     """One service round trip: concurrent same-signature tenants must ride
     ONE batched dispatch (and a second burst must not retrace)."""
@@ -584,5 +681,7 @@ def runtime_checks() -> list[RuntimeCheck]:
         RuntimeCheck("retrace.sharded", _rt_retrace_sharded),
         RuntimeCheck("retrace.sieve", _rt_retrace_sieve),
         RuntimeCheck("donation.live", _rt_donation_live),
+        RuntimeCheck("donation.sieve", _rt_donation_sieve),
+        RuntimeCheck("overlap.sieve", _rt_overlap_sieve),
         RuntimeCheck("service.bucket", _rt_service_bucket),
     ]

@@ -83,6 +83,11 @@ def evaluate_case(case: AuditCase) -> CaseResult:
                     f"collectives (want {e.body_psums} per round)"))
 
     don = ja.donation_audit(art.hlo)
+    if don.dropped:
+        # multi-device lowering defers aliasing to XLA (jax.buffer_donor in
+        # the StableHLO, decided after SPMD partitioning) — consult the
+        # compiled alias table before calling the donation dropped
+        don = ja.resolve_deferred_donations(don, art.lowered)
     if don.aliased != e.donated:
         v.append(Violation(
             "donation", f"{don.aliased} input(s) aliased onto outputs "
@@ -133,13 +138,17 @@ def evaluate_case(case: AuditCase) -> CaseResult:
 
 def donated_bytes(case: AuditCase) -> int:
     """Bytes of the case's donated inputs (metrics row material)."""
-    total = 0
+    import jax
+
     _, args, _ = case.build()
-    if case.expect.donated:
-        # the donated arg is the cache seed: args[1] for both entry points
-        a = args[1]
-        total = int(a.size) * a.dtype.itemsize
-    return total
+    if not case.expect.donated:
+        return 0
+    # selection contracts donate the cache seed (args[1]); streaming
+    # contracts donate the whole SieveState carry (args[0]) — a pytree, so
+    # sum its leaves
+    pos = 0 if case.contract.startswith("streaming.") else 1
+    return sum(int(a.size) * a.dtype.itemsize
+               for a in jax.tree_util.tree_leaves(args[pos]))
 
 
 def build_report(case_results, runtime_results, lint_findings,

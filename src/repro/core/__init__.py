@@ -36,13 +36,17 @@ from repro.core.optimizers import (
     three_sieves,
 )
 from repro.core.streaming import (
+    BatchedSieveEngine,
     DeviceSieveEngine,
     HostSieveMirror,
     SieveSpec,
     SieveState,
+    make_batched_sieve_engine,
     make_sieve_engine,
 )
 from repro.core.service import (
+    MultiStreamIngestionService,
+    MultiStreamSnapshot,
     SelectionService,
     SieveSnapshot,
     StreamIngestionService,
@@ -61,7 +65,9 @@ __all__ = [
     "pack_base_plus_candidates", "pack_sets", "OPTIMIZERS", "OptResult",
     "greedy", "lazy_greedy", "salsa", "sieve_streaming", "sieve_streaming_pp",
     "stochastic_greedy", "three_sieves", "ExemplarModel",
-    "fit_exemplar_clustering", "DeviceSieveEngine", "HostSieveMirror",
-    "SieveSpec", "SieveState", "make_sieve_engine", "SelectionService",
+    "fit_exemplar_clustering", "BatchedSieveEngine", "DeviceSieveEngine",
+    "HostSieveMirror", "SieveSpec", "SieveState",
+    "make_batched_sieve_engine", "make_sieve_engine",
+    "MultiStreamIngestionService", "MultiStreamSnapshot", "SelectionService",
     "SieveSnapshot", "StreamIngestionService",
 ]

@@ -321,13 +321,21 @@ def _element_step_jit(state, seed, idx, dvec, valid, *, spec, row_aux=None):
 
 @contract(
     "streaming.offer_scan",
+    donate=("state",),
     claim="one dispatch consumes a whole stream block: ONE lax.scan over "
           "its elements, collective-free, the sieve table updated in place "
-          "per element")
-@partial(jax.jit, static_argnames=("spec", "counter_key"))
+          "per element — and the carried SieveState is DONATED, so the "
+          "(S_max, n) table buffers alias block-to-block instead of copying")
+@partial(jax.jit, static_argnames=("spec", "counter_key"),
+         donate_argnums=(0,))
 def _offer_block_scan(state, seed, row_aux, idxb, dmatb, validb, *, spec,
                       counter_key):
-    """Consume a stream block: ONE jitted ``lax.scan`` over its elements."""
+    """Consume a stream block: ONE jitted ``lax.scan`` over its elements.
+
+    The ``state`` carry is donated: every leaf of the incoming SieveState
+    aliases the matching output leaf, so the table is updated in place and
+    the caller MUST rebind (``self.state = ...``) rather than reuse the
+    argument — which :class:`DeviceSieveEngine` does."""
     DEVICE_TRACE_COUNTS[counter_key] += 1
     seedf = seed.astype(jnp.float32)
     auxf = row_aux.astype(jnp.float32)
@@ -394,9 +402,12 @@ def _state_specs(axes):
     "streaming.offer_scan[sharded]",
     factory=True,
     collective_kinds=("psum",),
+    donate=("state",),
     claim="one dispatch per stream block; each element's table update "
           "costs O(S_max) psum'd scalars per reduction — collective bytes "
-          "scale with the sieve table, never the ground set")
+          "scale with the sieve table, never the ground set — and the "
+          "sharded SieveState carry is DONATED (the per-device table shard "
+          "aliases in place; V/seed/aux stay resident, never donated)")
 def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
                             n_total: int, distance: str, policy_name: str,
                             counter_key: str):
@@ -464,13 +475,89 @@ def make_sharded_offer_scan(mesh, data_axes, *, spec: SieveSpec,
         check_rep=False,
     )
 
-    @jax.jit
+    # donate ONLY the state carry: V/seed/aux are the function's resident
+    # shards, reused by every block (and shared with sharded selection runs)
+    @partial(jax.jit, donate_argnums=(0,))
     def run(state, V_sh, seed_sh, aux_sh, Xb, idxb, validb):
         DEVICE_TRACE_COUNTS[counter_key] += 1
         return smapped(state, V_sh, seed_sh, aux_sh, Xb, idxb, validb)
 
     _SHARDED_OFFER_CACHE[key] = run
     return run
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-stream consumption: P independent sieve tables advance through
+# ONE scan dispatch per block — the streaming analogue of the selection
+# engine's batched multi-tenant dispatch. The scan still runs over the B
+# elements of the block; each step advances all P partitions with a vmap of
+# the IDENTICAL _element_step (its jnp reductions are trailing-axis-wise, so
+# every partition's arithmetic is bit-identical to its own unbatched engine).
+# Kernel backends score all P tables in ONE grid-over-P fused kernel launch
+# (vmap cannot batch a pallas_call), injected through the step's table_gains
+# hook — the gains math is the same kernel body, batched like
+# gain_eval_batched.
+# ---------------------------------------------------------------------------
+
+
+@contract(
+    "streaming.offer_scan_batched",
+    donate=("states",),
+    claim="P independent stream partitions advance through ONE dispatch per "
+          "block: a lax.scan over the block's elements whose step vmaps the "
+          "identical element transition over partitions (kernel backends "
+          "score all P tables in one grid-over-P fused launch); the batched "
+          "SieveState carry is donated, so P tables alias in place")
+@partial(jax.jit, static_argnames=("spec", "counter_key"),
+         donate_argnums=(0,))
+def _offer_block_scan_batched(states, seed, row_aux, idxb, dmatb, validb, *,
+                              spec, counter_key):
+    """Consume one block across P partitions: ONE jitted ``lax.scan``.
+
+    ``states`` is a (P, …)-batched :class:`SieveState`; ``idxb``/``validb``
+    are (B, P) and ``dmatb`` (B, P, n) — element-major so the scan runs over
+    the block axis exactly like :func:`_offer_block_scan`. Returns
+    ``(states, accepted (B, P))``. The carry is donated (callers rebind).
+    """
+    DEVICE_TRACE_COUNTS[counter_key] += 1
+    seedf = seed.astype(jnp.float32)
+    auxf = row_aux.astype(jnp.float32)
+    v0 = jnp.mean(fx.stat_rows(spec.fn, seedf, auxf))
+    use_kernel = spec.backend != "jnp"
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        tmpl = fx.kernel_template(spec.fn)
+
+    def step(sts, xs):
+        idx, dmat, valid = xs            # (P,), (P, n), (P,)
+        if use_kernel:
+            # ONE batched kernel launch scores seed+table rows of all P
+            # partitions; each partition's _element_step then receives its
+            # own precomputed (S_max+1,) gains through the table_gains hook
+            # (the hook is called exactly once per step, on the same
+            # seed-stacked table the unbatched path builds).
+            tables = jnp.concatenate(
+                [jnp.broadcast_to(seedf, (idx.shape[0], 1, seedf.shape[0])),
+                 sts.caches], axis=1)
+            g_all = kops.sieve_gains_batched(
+                tables, dmat, fold=tmpl[0], score_affine=tmpl[1],
+                interpret=(spec.backend != "pallas"))
+
+            def elem(st, i, dv, va, g):
+                return _element_step(spec, seedf, v0, st, i, dv, va,
+                                     row_aux=auxf,
+                                     table_gains=lambda _t, _d: g)
+
+            return jax.vmap(elem)(sts, idx, dmat, valid, g_all)
+
+        def elem(st, i, dv, va):
+            return _element_step(spec, seedf, v0, st, i, dv, va,
+                                 row_aux=auxf)
+
+        return jax.vmap(elem)(sts, idx, dmat, valid)
+
+    return jax.lax.scan(step, states, (idxb, dmatb, validb))
 
 
 class _SieveEngineBase:
@@ -481,22 +568,58 @@ class _SieveEngineBase:
     — the bitwise-parity invariant is structural, not backend luck — and
     every block reuses one traced executable. Padded elements carry
     ``valid=False`` (their step is a no-op by construction).
+
+    ``overlap=True`` (the default) makes the block boundary sync-free:
+    ``offer`` stages block t+1's padded payload with ``jax.device_put`` and
+    issues its scan while block t's scan is still running — JAX's async
+    dispatch pipelines them, and the only host syncs are the final accept
+    masks (tiny (B,) bools, fetched once per ``offer`` call after every
+    block has been issued) plus the lazy evaluation-counter fold at
+    :meth:`evaluations`. ``max_in_flight`` bounds the pipeline depth so a
+    long offer cannot stage an unbounded number of payload blocks on
+    device. ``overlap=False`` restores the serialized baseline (block on
+    each block's mask + fold its evals before staging the next) — kept so
+    the overlap win stays benchmarkable.
     """
 
-    def __init__(self, f, spec: SieveSpec, block_size: int = 64):
+    def __init__(self, f, spec: SieveSpec, block_size: int = 64,
+                 overlap: bool = True, max_in_flight: int = 4):
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if max_in_flight < 1:
+            raise ValueError(
+                f"max_in_flight must be >= 1, got {max_in_flight}")
         self.f = f
         self.spec = spec
         self.block_size = block_size
+        self.overlap = overlap
+        self.max_in_flight = max_in_flight
         # the function's protocol arrays the element step consumes: the
         # empty-set cache row and the static per-row auxiliary
         self._seed = jnp.asarray(f.cache_seed, jnp.float32)
         self._aux = jnp.asarray(f.row_aux, jnp.float32)
         self.state = self._initial_state()
-        # device state counts in int32; folding into a Python int per offer
-        # keeps unbounded streams (the service's live-sensor case) exact
+        # device state counts in int32; folding into a Python int at drain
+        # points keeps unbounded streams (the service's live-sensor case)
+        # exact. The fold is LAZY under overlap: each element adds at most
+        # S_max evals, so int32 headroom covers tens of millions of
+        # elements between drains — and every read path drains.
         self._evals = 0
+
+    _I32 = np.iinfo(np.int32)
+
+    def _validate_ids(self, idx) -> np.ndarray:
+        """Stream ids live in the int32 member table; ids outside its range
+        (the service's unbounded int64 counter can exceed it on long-lived
+        streams) must raise, not silently wrap into colliding member ids."""
+        idx = np.atleast_1d(np.asarray(idx))
+        if idx.size and (int(idx.max()) > self._I32.max
+                         or int(idx.min()) < self._I32.min):
+            raise OverflowError(
+                f"stream ids must fit the int32 member table "
+                f"([{self._I32.min}, {self._I32.max}]); got range "
+                f"[{int(idx.min())}, {int(idx.max())}]")
+        return idx.astype(np.int32)
 
     def _initial_state(self) -> SieveState:
         """Hook: the mesh-sharded engine builds the table *born sharded* —
@@ -504,23 +627,59 @@ class _SieveEngineBase:
         regime the mesh exists for."""
         return init_state(self.f.n, self.spec)
 
-    def offer(self, idx, X) -> np.ndarray:
-        idx = np.atleast_1d(np.asarray(idx, np.int32))
-        X = jnp.atleast_2d(jnp.asarray(X))
+    def _stage_block(self, Xb, nb: int):
+        """Pad one block to ``block_size`` rows and start its host→device
+        transfer. For host-resident payloads the pad happens in numpy and
+        ``jax.device_put`` issues an async copy — under overlap, block t+1
+        stages while block t's scan runs. Device-resident payloads pad on
+        device (no transfer to hide)."""
         B = self.block_size
-        out = []
+        if isinstance(Xb, np.ndarray):
+            Xp = np.zeros((B, Xb.shape[1]), Xb.dtype)
+            Xp[:nb] = Xb
+            return jax.device_put(Xp)
+        return jnp.pad(Xb, ((0, B - nb), (0, 0)))
+
+    def offer(self, idx, X) -> np.ndarray:
+        idx = self._validate_ids(idx)
+        if not isinstance(X, jax.Array):
+            X = np.atleast_2d(np.asarray(X, np.float32))
+        else:
+            X = jnp.atleast_2d(X)
+        B = self.block_size
+        handles: list = []          # (accept handle, live count) per block
+        inflight: list = []         # un-awaited handles (depth bound)
         for s in range(0, len(idx), B):
             ib, Xb = idx[s:s + B], X[s:s + B]
             nb = len(ib)
-            payload = self._block_payload(jnp.pad(Xb, ((0, B - nb), (0, 0))))
+            payload = self._block_payload(self._stage_block(Xb, nb))
             idxp = np.full(B, -1, np.int32)
             idxp[:nb] = ib
             valid = np.zeros(B, bool)
             valid[:nb] = True
-            out.append(self._consume(idxp, payload, valid)[:nb])
-            self._evals += int(np.asarray(self.state.evals))
-            self.state = self.state._replace(evals=jnp.int32(0))
+            acc = self._consume(idxp, payload, valid)
+            handles.append((acc, nb))
+            if not self.overlap:
+                # serialized baseline: block on this block's mask and fold
+                # its evals before staging the next — the pre-overlap cost
+                jax.block_until_ready(acc)
+                self._fold_evals()
+            else:
+                inflight.append(acc)
+                if len(inflight) > self.max_in_flight:
+                    jax.block_until_ready(inflight.pop(0))
+        out = [np.asarray(acc)[:nb] for acc, nb in handles]
         return np.concatenate(out) if out else np.zeros(0, bool)
+
+    def _fold_evals(self) -> None:
+        """Drain the device-resident int32 evaluation counter into the exact
+        Python accumulator. A host sync — called per block only on the
+        serialized path; under overlap it runs lazily at read points."""
+        e = int(np.asarray(self.state.evals))
+        if e:
+            self._evals += e
+            self.state = self.state._replace(
+                evals=jnp.zeros_like(self.state.evals))
 
     def best(self) -> tuple[list[int], float]:
         """Members and value of the best live sieve ([], 0.0 when none).
@@ -543,7 +702,8 @@ class _SieveEngineBase:
                              fn=self.spec.fn)
 
     def evaluations(self) -> int:
-        return self._evals + int(np.asarray(self.state.evals))
+        self._fold_evals()
+        return self._evals
 
     def member_ids(self) -> list[int]:
         """Ids present in any live sieve's member table (service retention)."""
@@ -563,7 +723,9 @@ class _SieveEngineBase:
         and computes distances shard-locally inside its scan."""
         return self._distance_rows(X)
 
-    def _consume(self, idxp, payload, valid) -> np.ndarray:
+    def _consume(self, idxp, payload, valid):
+        """Advance the engine by one padded block; returns the accept mask —
+        a host array (mirror) or an un-synced device value (device plans)."""
         raise NotImplementedError
 
 
@@ -605,7 +767,8 @@ class DeviceSieveEngine(_SieveEngineBase):
     them with one fetch — never a per-shard gather."""
 
     def __init__(self, f, spec: SieveSpec, block_size: int = 64,
-                 mesh=None, data_axes: Sequence[str] = ("data",)):
+                 mesh=None, data_axes: Sequence[str] = ("data",),
+                 overlap: bool = True, max_in_flight: int = 4):
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         # mesh geometry first: _SieveEngineBase.__init__ asks the
@@ -621,7 +784,8 @@ class DeviceSieveEngine(_SieveEngineBase):
             self._n_total = f.n
             self._shardings = SieveState(
                 *[NamedSharding(mesh, s) for s in _state_specs(axes)])
-        super().__init__(f, spec, block_size)
+        super().__init__(f, spec, block_size, overlap=overlap,
+                         max_in_flight=max_in_flight)
         self._counter_key = f"sieve_{spec.variant}"
         if mesh is None:
             return
@@ -668,7 +832,12 @@ class DeviceSieveEngine(_SieveEngineBase):
                                     self._aux_sh, fn=self.spec.fn,
                                     n_total=self._n_total)
 
-    def _consume(self, idxp, payload, valid) -> np.ndarray:
+    def _consume(self, idxp, payload, valid):
+        # the scan donates the state carry: the pre-call ``self.state``
+        # buffers are consumed by the dispatch and the rebind below is the
+        # only live reference — the table aliases in place, never copies.
+        # The accept mask is returned as a DEVICE value (no host sync);
+        # ``offer`` drains masks after the whole pipeline is issued.
         if self.mesh is None:
             self.state, acc = _offer_block_scan(
                 self.state, self._seed, self._aux, jnp.asarray(idxp),
@@ -678,7 +847,169 @@ class DeviceSieveEngine(_SieveEngineBase):
             self.state, acc = self._offer_fn(
                 self.state, self._V_sh, self._seed_sh, self._aux_sh,
                 payload, jnp.asarray(idxp), jnp.asarray(valid))
-        return np.asarray(acc)
+        return acc
+
+
+class BatchedSieveEngine:
+    """P independent stream partitions advanced by ONE dispatch per block.
+
+    The streaming analogue of ``run_selection_batch``: each partition owns a
+    full fixed-capacity sieve table (a (P, …)-batched :class:`SieveState`),
+    and one :func:`_offer_block_scan_batched` dispatch per block advances
+    all of them — the per-partition transition is the IDENTICAL
+    :func:`_element_step` under ``vmap`` (its reductions are trailing-axis-
+    wise), so every partition's members, values, and evaluation counts are
+    bit-identical to a standalone :class:`DeviceSieveEngine` fed the same
+    sub-stream. Kernel backends score all P tables in one grid-over-P fused
+    launch (:func:`repro.kernels.ops.sieve_gains_batched`).
+
+    Shares the overlapped-offer pipeline semantics of
+    :class:`_SieveEngineBase`: staged payloads, donated state carry, deferred
+    accept masks, lazy evaluation fold.
+    """
+
+    _I32 = np.iinfo(np.int32)
+
+    def __init__(self, f, spec: SieveSpec, n_streams: int,
+                 block_size: int = 64, overlap: bool = True,
+                 max_in_flight: int = 4):
+        if n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.f = f
+        self.spec = spec
+        self.n_streams = int(n_streams)
+        self.block_size = block_size
+        self.overlap = overlap
+        self.max_in_flight = max_in_flight
+        self._seed = jnp.asarray(f.cache_seed, jnp.float32)
+        self._aux = jnp.asarray(f.row_aux, jnp.float32)
+        st0 = init_state(f.n, spec)
+        self.states = jax.tree.map(
+            lambda a: jnp.stack([a] * self.n_streams), st0)
+        self._evals = np.zeros(self.n_streams, np.int64)
+        self._counter_key = f"sieve_{spec.variant}_batched"
+
+    def offer(self, idx_parts: Sequence, X_parts: Sequence
+              ) -> list[np.ndarray]:
+        """Offer per-partition element runs (ragged; empty allowed) and
+        return per-partition accept masks. Partitions shorter than the
+        longest run ride the shared blocks as ``valid=False`` padding."""
+        P, B, d = self.n_streams, self.block_size, self.f.dim
+        if len(idx_parts) != P or len(X_parts) != P:
+            raise ValueError(
+                f"expected {P} partition runs, got "
+                f"{len(idx_parts)}/{len(X_parts)}")
+        idxs = [_SieveEngineBase._validate_ids(self, i) for i in idx_parts]
+        Xs = [np.asarray(x, np.float32).reshape(-1, d) for x in X_parts]
+        for p, (i, x) in enumerate(zip(idxs, Xs)):
+            if len(i) != len(x):
+                raise ValueError(
+                    f"partition {p}: {len(i)} ids vs {len(x)} vectors")
+        L = max((len(i) for i in idxs), default=0)
+        handles: list = []
+        inflight: list = []
+        for s in range(0, L, B):
+            idxp = np.full((B, P), -1, np.int32)
+            valid = np.zeros((B, P), bool)
+            Xb = np.zeros((P, B, d), np.float32)
+            nbs = []
+            for p in range(P):
+                part = idxs[p][s:s + B]
+                nb = len(part)
+                nbs.append(nb)
+                if nb:
+                    idxp[:nb, p] = part
+                    valid[:nb, p] = True
+                    Xb[p, :nb] = Xs[p][s:s + B]
+            # ONE distance dispatch for the whole (P, B) block — the same
+            # jitted executable the unbatched engines use, at P·B rows —
+            # then element-major layout for the scan
+            Xd = jax.device_put(Xb.reshape(P * B, d))
+            dmat = self.f.point_distances_block(Xd).astype(jnp.float32)
+            dmatb = dmat.reshape(P, B, -1).transpose(1, 0, 2)
+            self.states, acc = _offer_block_scan_batched(
+                self.states, self._seed, self._aux, jnp.asarray(idxp),
+                dmatb, jnp.asarray(valid), spec=self.spec,
+                counter_key=self._counter_key)
+            handles.append((acc, nbs))
+            if not self.overlap:
+                jax.block_until_ready(acc)
+                self._fold_evals()
+            else:
+                inflight.append(acc)
+                if len(inflight) > self.max_in_flight:
+                    jax.block_until_ready(inflight.pop(0))
+        out: list[list] = [[] for _ in range(P)]
+        for acc, nbs in handles:
+            a = np.asarray(acc)                      # (B, P)
+            for p, nb in enumerate(nbs):
+                if nb:
+                    out[p].append(a[:nb, p])
+        return [np.concatenate(o) if o else np.zeros(0, bool) for o in out]
+
+    def _fold_evals(self) -> None:
+        e = np.asarray(self.states.evals)
+        if e.any():
+            self._evals += e.astype(np.int64)
+            self.states = self.states._replace(
+                evals=jnp.zeros_like(self.states.evals))
+
+    def evaluations(self, p: Optional[int] = None) -> int:
+        self._fold_evals()
+        return int(self._evals.sum()) if p is None else int(self._evals[p])
+
+    def _values(self) -> np.ndarray:
+        """(P, S_max) per-sieve f-values — one dispatch for all partitions
+        (the flattened table rides the same jitted ``_table_values``)."""
+        P, S, n = self.states.caches.shape
+        vals = _table_values(self.states.caches.reshape(P * S, n),
+                             self._seed, self._aux, fn=self.spec.fn)
+        return np.asarray(vals).reshape(P, S)
+
+    def best_all(self) -> list[tuple[list[int], float]]:
+        """Per-partition (members, value) of each best live sieve."""
+        active = np.asarray(self.states.active)
+        sizes = np.asarray(self.states.sizes)
+        members = np.asarray(self.states.members)
+        vals = np.where(active, self._values(), -np.inf)
+        out = []
+        for p in range(self.n_streams):
+            if not active[p].any():
+                out.append(([], 0.0))
+                continue
+            b = int(np.argmax(vals[p]))
+            size = int(sizes[p, b])
+            out.append(([int(i) for i in members[p, b, :size]],
+                        float(vals[p][b])))
+        return out
+
+    def member_ids(self) -> list[int]:
+        """Ids live in any partition's member tables (service retention)."""
+        st = self.states
+        live = np.asarray(st.active)[:, :, None] & (
+            np.arange(self.spec.k)[None, None, :]
+            < np.asarray(st.sizes)[:, :, None])
+        return sorted({int(i) for i in np.asarray(st.members)[live]})
+
+
+def make_batched_sieve_engine(f, k: int, eps: float, n_streams: int,
+                              variant: str = "sieve",
+                              s_max: Optional[int] = None,
+                              block_size: int = 64,
+                              backend: Optional[str] = None,
+                              overlap: bool = True,
+                              max_in_flight: int = 4) -> BatchedSieveEngine:
+    """Build the P-partition batched sieve engine (see
+    :class:`BatchedSieveEngine`). ``backend=None`` inherits ``f.cfg.backend``
+    exactly like :func:`make_sieve_engine`."""
+    if backend is None:
+        backend = f.cfg.backend \
+            if f.cfg.backend in ("pallas", "pallas_interpret") else "jnp"
+    spec = make_spec(k, eps, variant, s_max, backend=backend, fn=f.spec)
+    return BatchedSieveEngine(f, spec, n_streams, block_size=block_size,
+                              overlap=overlap, max_in_flight=max_in_flight)
 
 
 def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
@@ -686,8 +1017,9 @@ def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
                       block_size: int = 64,
                       backend: Optional[str] = None,
                       mesh=None,
-                      data_axes: Sequence[str] = ("data",)
-                      ) -> _SieveEngineBase:
+                      data_axes: Sequence[str] = ("data",),
+                      overlap: bool = True,
+                      max_in_flight: int = 4) -> _SieveEngineBase:
     """Build a sieve engine under an execution plan (``host`` | ``device`` |
     ``device_sharded``), mirroring the selection engine's strategy×plan
     composition. The engine streams whatever SIEVE_ELIGIBLE objective ``f``
@@ -723,9 +1055,11 @@ def make_sieve_engine(f, k: int, eps: float, variant: str = "sieve",
             raise ValueError(
                 "the host mirror is the per-element reference; it does not "
                 "take a mesh")
-        return HostSieveMirror(f, spec, block_size=block_size)
+        return HostSieveMirror(f, spec, block_size=block_size,
+                               overlap=overlap, max_in_flight=max_in_flight)
     if mode == "device":
         return DeviceSieveEngine(f, spec, block_size=block_size, mesh=mesh,
-                                 data_axes=data_axes)
+                                 data_axes=data_axes, overlap=overlap,
+                                 max_in_flight=max_in_flight)
     raise ValueError(f"unknown streaming mode {mode!r}; 'host', 'device' "
                      f"or 'device_sharded'")

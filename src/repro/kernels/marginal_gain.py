@@ -420,3 +420,57 @@ def sieve_gain_eval(
         out_shape=jax.ShapeDtypeStruct((s_pad, 1), jnp.float32),
         interpret=interpret,
     )(T, dvec)
+
+
+def _sieve_gain_kernel_batched(t_ref, dvec_ref, out_ref, *, n_total: int,
+                               fold: str, affine):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    t = t_ref[0].astype(jnp.float32)                 # (Bs, Bn) cache rows
+    dv = dvec_ref[0].astype(jnp.float32)             # (1, Bn) element row
+    if fold == "min":
+        g = jnp.maximum(t - dv, 0.0)
+    else:
+        a, b = affine
+        g = jnp.maximum((a + b * dv) - t, 0.0)
+    out_ref[...] += (jnp.sum(g, axis=1) / n_total)[None, :, None]
+
+
+def sieve_gain_eval_batched(
+    T: jax.Array,          # (P, s_pad, n_pad) float32 per-partition tables
+    dvec: jax.Array,       # (P, 1, n_pad) float32 per-partition element rows
+    *,
+    n_total: int,
+    block_s: int,
+    block_n: int,
+    fold: str = "min",
+    affine: Optional[tuple] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Batched :func:`sieve_gain_eval` — P partition tables, ONE launch.
+
+    The grid grows a leading partition axis ``(P, s_tiles, n_tiles)``
+    mirroring :func:`gain_eval_batched`: each (p, i) output block
+    accumulates over its own partition's n tiles in the same order as the
+    unbatched kernel, so per-partition gains are bit-identical to P separate
+    :func:`sieve_gain_eval` calls. Returns (P, s_pad, 1) float32.
+    """
+    P, s_pad, n_pad = T.shape
+    grid = (P, s_pad // block_s, n_pad // block_n)
+    kern = functools.partial(_sieve_gain_kernel_batched, n_total=n_total,
+                             fold=fold, affine=affine)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_n), lambda p, i, j: (p, i, j)),
+            pl.BlockSpec((1, 1, block_n), lambda p, i, j: (p, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, 1), lambda p, i, j: (p, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, s_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(T, dvec)

@@ -467,3 +467,44 @@ def sieve_gains(
         affine=None if score_affine is None else tuple(score_affine),
         interpret=interpret)
     return out[:r, 0]
+
+
+def sieve_gains_batched(
+    tables: jax.Array,     # (P, r, n) float32 per-partition cache rows
+    dvecs: jax.Array,      # (P, n) float32 per-partition element distances
+    *,
+    n_total: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    block_s: int = 64,
+    block_n: int = 512,
+    fold: str = "min",
+    score_affine: Optional[tuple] = None,
+) -> jax.Array:
+    """Batched :func:`sieve_gains` — P partition tables scored against P
+    stream elements in ONE grid-over-P kernel launch; returns (P, r).
+
+    Tile sizes, padding sentinels, and per-partition accumulation order
+    match the unbatched wrapper exactly, so each partition's gains are
+    bit-identical to its own :func:`sieve_gains` call — the invariant the
+    batched multi-stream sieve engine's parity rests on. Like the unbatched
+    wrapper it is NOT jit-wrapped (it traces inside the batched per-block
+    scan).
+    """
+    if interpret is None:
+        interpret = _is_cpu()
+    P, r, n = tables.shape
+    bs = min(block_s, _round_up(r, SUBLANE))
+    bn = min(block_n, _round_up(n, LANE))
+    pad = float("inf") if fold == "max" else 0.0
+    Tp = _pad_axis(
+        _pad_axis(tables.astype(jnp.float32), _round_up(r, bs), 1,
+                  value=pad),
+        _round_up(n, bn), 2, value=pad)
+    dp = _pad_axis(dvecs.astype(jnp.float32), _round_up(n, bn), 1,
+                   value=pad)[:, None, :]
+    out = _mg.sieve_gain_eval_batched(
+        Tp, dp, n_total=n_total if n_total is not None else n,
+        block_s=bs, block_n=bn, fold=fold,
+        affine=None if score_affine is None else tuple(score_affine),
+        interpret=interpret)
+    return out[:, :r, 0]

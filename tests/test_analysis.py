@@ -164,6 +164,43 @@ def test_donation_aliased_and_dropped_detected():
     assert not bad.ok(expected_aliased=1)
 
 
+def test_deferred_donation_resolved_against_compiled_alias_table():
+    """Multi-device lowering leaves only ``jax.buffer_donor`` markers and
+    lets XLA pick the aliasing after SPMD partitioning; the resolver must
+    credit exactly the donors the compiled ``input_output_alias`` table
+    covers and keep the rest dropped."""
+    header = ("HloModule jit_run, is_scheduled=true, "
+              "input_output_alias={ {0}: (0, {}, may-alias), "
+              "{1}: (1, {}, may-alias) }, entry_computation_layout="
+              "{(f32[14,24]{1,0}, s32[14]{0})->(f32[14,24]{1,0})}, "
+              "num_partitions=2\n\n%body {\n}\n")
+
+    class _Compiled:
+        def as_text(self):
+            return header
+
+    class _Lowered:
+        def compile(self):
+            return _Compiled()
+
+    both = ja.resolve_deferred_donations(
+        ja.DonationTable(aliased=0, dropped=2), _Lowered())
+    assert both.aliased == 2 and both.dropped == 0
+    # a donor the compiled table does not cover stays dropped
+    partial_ = ja.resolve_deferred_donations(
+        ja.DonationTable(aliased=0, dropped=3), _Lowered())
+    assert partial_.aliased == 2 and partial_.dropped == 1
+    # statically-aliased params already own their table entries: no
+    # double-credit for deferred donors
+    mixed = ja.resolve_deferred_donations(
+        ja.DonationTable(aliased=2, dropped=1), _Lowered())
+    assert mixed.aliased == 2 and mixed.dropped == 1
+    # nothing deferred → no compile, table unchanged
+    clean = ja.resolve_deferred_donations(
+        ja.DonationTable(aliased=1, dropped=0), lowered=None)
+    assert clean.aliased == 1 and clean.dropped == 0
+
+
 def test_engine_seed_donation_live():
     """satellite fixture: ``seed.is_deleted()`` matches the aliasing table
     (the donated buffer is consumed; the function's resident seed is not)."""

@@ -1,0 +1,144 @@
+"""Batched multi-stream sieve engine and its serving surface: per-partition
+parity with standalone engines, donation, and the two-tier merge's certified
+(1/2−ε)-composed bound."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EvalConfig, ExemplarClustering, greedy
+from repro.core.engine import DEVICE_TRACE_COUNTS
+from repro.core.service import MultiStreamIngestionService
+from repro.core.streaming import (make_batched_sieve_engine,
+                                  make_sieve_engine)
+from repro.data.synthetic import blobs
+
+P = 3
+
+
+@pytest.fixture(scope="module")
+def f():
+    X, _ = blobs(240, 12, centers=8, seed=4)
+    return ExemplarClustering(jnp.asarray(X))
+
+
+def _split_stream(f, n=90, seed=9):
+    """A synthetic stream round-robined into P partition runs."""
+    rng = np.random.default_rng(seed)
+    base = np.asarray(f.V)[rng.choice(f.n, size=n)]
+    stream = (base + 0.03 * rng.normal(size=base.shape)).astype(np.float32)
+    ids = np.arange(n)
+    parts = [(ids[p::P], stream[p::P]) for p in range(P)]
+    return stream, parts
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_interpret"])
+def test_batched_matches_standalone_engines(f, backend):
+    """Each partition of the batched engine is bit-identical to a standalone
+    DeviceSieveEngine fed the same sub-stream: accept masks, members,
+    values, and evaluation counts — on the jnp path AND through the
+    grid-over-P fused kernel."""
+    _, parts = _split_stream(f)
+    eng = make_batched_sieve_engine(f, 4, 0.15, P, block_size=8,
+                                    backend=backend)
+    masks = eng.offer([i for i, _ in parts], [x for _, x in parts])
+    bests = eng.best_all()
+    for p, (ids, X) in enumerate(parts):
+        ref = make_sieve_engine(f, 4, 0.15, mode="device", block_size=8,
+                                backend=backend)
+        ref_mask = ref.offer(ids, X)
+        np.testing.assert_array_equal(masks[p], ref_mask)
+        members, value = bests[p]
+        r_members, r_value = ref.best()
+        assert members == r_members
+        assert value == r_value
+        assert eng.evaluations(p) == ref.evaluations()
+
+
+def test_batched_engine_donates_and_reuses_trace(f):
+    """The (P, …)-batched carry is donated (pre-call buffers consumed) and a
+    second same-shape block re-dispatches the one traced executable."""
+    _, parts = _split_stream(f, n=60)
+    eng = make_batched_sieve_engine(f, 4, 0.15, P, block_size=8)
+    old = eng.states
+    before = DEVICE_TRACE_COUNTS["sieve_sieve_batched"]
+    eng.offer([i for i, _ in parts], [x for _, x in parts])
+    jax.block_until_ready(eng.states)
+    assert old.caches.is_deleted()
+    assert not eng.states.caches.is_deleted()
+    _, parts2 = _split_stream(f, n=60, seed=10)
+    eng.offer([i + 60 for i, _ in parts2], [x for _, x in parts2])
+    assert DEVICE_TRACE_COUNTS["sieve_sieve_batched"] - before <= 1
+
+
+def test_batched_ragged_and_empty_partitions(f):
+    """Ragged per-partition runs (including empty) ride shared blocks as
+    padding without perturbing the other partitions."""
+    rng = np.random.default_rng(12)
+    X = np.asarray(f.V)
+    idxs = [np.arange(11), np.arange(100, 103), np.zeros(0, np.int64)]
+    Xs = [X[:11], X[20:23], np.zeros((0, f.dim), np.float32)]
+    eng = make_batched_sieve_engine(f, 3, 0.2, P, block_size=4)
+    masks = eng.offer(idxs, Xs)
+    assert [len(m) for m in masks] == [11, 3, 0]
+    ref = make_sieve_engine(f, 3, 0.2, mode="device", block_size=4)
+    np.testing.assert_array_equal(masks[0], ref.offer(idxs[0], Xs[0]))
+    assert eng.best_all()[2] == ([], 0.0)
+    assert eng.evaluations(2) == 0
+
+
+def test_multistream_service_certified_merge(f):
+    """End-to-end: P logical streams through one service; the snapshot's
+    two-tier merge carries the runtime certificate
+    value ≥ (1/2−ε)·max_p stream value, and the composed guarantee
+    value ≥ ((1/2−ε)²/P)·OPT holds against the greedy reference when the
+    stream is exactly V's rows."""
+    eps = 0.1
+    order = np.random.default_rng(13).permutation(f.n)
+    X = np.asarray(f.V)[order]
+
+    async def main():
+        async with MultiStreamIngestionService(
+                f, k=5, n_streams=P, eps=eps, block_size=8) as svc:
+            for j, x in enumerate(X):
+                await svc.offer(x, stream=j % P)
+            await svc.drain()
+            return await svc.snapshot()
+
+    snap = asyncio.run(main())
+    assert snap.n_offered == snap.n_ingested == f.n
+    assert snap.certified
+    assert snap.value >= snap.bound - 1e-5
+    assert len(snap.stream_values) == len(snap.stream_members) == P
+    assert all(v > 0 for v in snap.stream_values)
+    assert 1 <= len(snap.indices) <= 5
+    assert snap.exemplars.shape == (len(snap.indices), f.dim)
+    # merged members come from the per-partition exemplar sets
+    union = {i for m in snap.stream_members for i in m}
+    assert set(snap.indices) <= union
+    # composed bound vs the greedy proxy for OPT (greedy ≤ OPT)
+    ref = greedy(f, 5)
+    assert snap.value >= (0.5 - eps) ** 2 / P * ref.value
+
+
+def test_multistream_round_robin_and_validation(f):
+    """Default routing round-robins by id; bad stream indices raise."""
+    X = np.asarray(f.V)
+
+    async def main():
+        async with MultiStreamIngestionService(
+                f, k=3, n_streams=P, block_size=4) as svc:
+            ids = [await svc.offer(X[j]) for j in range(12)]
+            with pytest.raises(ValueError, match="stream"):
+                await svc.offer(X[0], stream=P)
+            await svc.drain()
+            snap = await svc.snapshot()
+            return ids, snap
+
+    ids, snap = asyncio.run(main())
+    assert ids == list(range(12))
+    assert snap.n_ingested == 12
+    # every partition saw 12/P elements (round-robin)
+    assert sum(len(m) > 0 for m in snap.stream_members) == P

@@ -239,3 +239,193 @@ def test_service_accepts_external_vectors(f):
     assert 1 <= len(snap.indices) <= 4
     np.testing.assert_allclose(snap.exemplars, stream[snap.indices], atol=0)
     assert snap.n_accepted >= len(snap.indices)
+
+
+# ---------------------------------------------------------------------------
+# Donation + overlapped ingestion (PR 9)
+# ---------------------------------------------------------------------------
+
+
+def test_offer_scan_donates_carry(f):
+    """The block scan consumes the pre-call SieveState buffers (donation):
+    the engine's rebind is the only live table — no block-to-block copy."""
+    eng = make_sieve_engine(f, 4, 0.2, mode="device", block_size=8)
+    old = eng.state
+    eng.offer(np.arange(8), np.asarray(f.V)[:8])
+    import jax
+    jax.block_until_ready(eng.state)
+    assert old.caches.is_deleted()
+    assert old.members.is_deleted()
+    assert not eng.state.caches.is_deleted()
+
+
+def test_overlap_parity_and_single_trace(f):
+    """The overlapped pipeline is a free lunch: identical accepts, members,
+    value and evaluation counts vs the serialized baseline, and no extra
+    traces (both paths dispatch the one block-scan executable)."""
+    rng = np.random.default_rng(21)
+    stream = rng.standard_normal((70, 16)).astype(np.float32)
+    before = DEVICE_TRACE_COUNTS["sieve_sieve"]
+    runs = []
+    for overlap in (False, True):
+        eng = make_sieve_engine(f, 5, 0.1, mode="device", block_size=16,
+                                overlap=overlap, max_in_flight=2)
+        acc = eng.offer(np.arange(len(stream)), stream)
+        runs.append((acc.tolist(), eng.best(), eng.evaluations()))
+    assert DEVICE_TRACE_COUNTS["sieve_sieve"] - before <= 1
+    assert runs[0] == runs[1]
+
+
+def test_offer_rejects_int32_overflow(f):
+    """Stream ids outside the int32 member table must raise, not wrap: the
+    service's unbounded int64 counter can exceed int32 on long streams."""
+    eng = make_sieve_engine(f, 3, 0.2, mode="device", block_size=4)
+    X1 = np.asarray(f.V)[:1]
+    i_max = np.iinfo(np.int32).max
+    acc = eng.offer(np.array([i_max], np.int64), X1)   # boundary id: fine
+    assert bool(acc[0]) and i_max in eng.member_ids()
+    with pytest.raises(OverflowError):
+        eng.offer(np.array([i_max + 1], np.int64), X1)
+    with pytest.raises(OverflowError):
+        eng.offer(np.array([np.iinfo(np.int32).min - 1], np.int64), X1)
+
+
+# ---------------------------------------------------------------------------
+# Service race regressions (PR 9)
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_survives_worker_cancel_mid_ingest(f):
+    """Regression: cancelling the worker while an engine dispatch is in
+    flight must not desync the engine from the retention map. The thread
+    backing ``asyncio.to_thread`` runs to completion even when the awaiting
+    task is cancelled, so the engine records accepts either way — if the
+    ``_vecs`` writes live on the event-loop side of that await (the pre-fix
+    code), they are skipped and the next snapshot's exemplar gather raises
+    KeyError on an accepted-but-unretained id."""
+    import threading
+    import time
+
+    X = np.asarray(f.V)
+    started = threading.Event()
+    finished = threading.Event()
+
+    async def main():
+        svc = StreamIngestionService(f, k=4, mode="device", block_size=8)
+        await svc.start()
+        orig = svc._engine.offer
+
+        def slow_offer(ids, vecs):
+            started.set()
+            time.sleep(0.3)     # hold the dispatch so the cancel wins
+            try:
+                return orig(ids, vecs)
+            finally:
+                finished.set()
+
+        svc._engine.offer = slow_offer
+        for j in range(8):      # early elements: guaranteed accepts
+            await svc.offer(X[j])
+        await asyncio.to_thread(started.wait, 5.0)
+        svc._task.cancel()
+        await asyncio.gather(svc._task, return_exceptions=True)
+        # the orphaned thread runs to completion: the engine HAS recorded
+        # the block's accepts by the time the snapshot gathers exemplars.
+        # Post-fix the retention writes ride the same thread — give them a
+        # bounded window to land; pre-fix they never do.
+        await asyncio.to_thread(finished.wait, 10.0)
+        for _ in range(100):
+            if svc._n_ingested >= 8:
+                break
+            await asyncio.sleep(0.01)
+        return await svc.snapshot()
+
+    snap = asyncio.run(main())      # pre-fix: KeyError
+    assert snap.n_accepted == len(snap.indices) or snap.n_accepted >= 1
+    assert snap.exemplars.shape[0] == len(snap.indices)
+
+
+def test_cancelled_producer_leaks_no_id(f):
+    """Regression: a producer cancelled while awaiting backpressure must
+    not consume a stream id (pre-fix, the id was assigned BEFORE the
+    blocking put, so the next snapshot undercounted assigned ids)."""
+    import threading
+    import time
+
+    X = np.asarray(f.V)
+    busy = threading.Event()
+
+    async def main():
+        svc = StreamIngestionService(f, k=3, mode="device", block_size=1,
+                                     max_pending=1)
+        await svc.start()
+        orig = svc._engine.offer
+
+        def slow_offer(ids, vecs):
+            busy.set()
+            time.sleep(0.3)
+            return orig(ids, vecs)
+
+        svc._engine.offer = slow_offer
+        assert await svc.offer(X[0]) == 0
+        await asyncio.to_thread(busy.wait, 5.0)
+        assert await svc.offer(X[1]) == 1   # waits out block 0's dispatch
+        blocked = asyncio.create_task(svc.offer(X[2]))
+        await asyncio.sleep(0.05)           # let it park on backpressure
+        blocked.cancel()
+        await asyncio.gather(blocked, return_exceptions=True)
+        await svc.drain()
+        i = await svc.offer(X[3])           # pre-fix: 3 (id 2 leaked)
+        await svc.drain()
+        snap = await svc.snapshot()
+        await svc.stop()
+        return i, snap
+
+    i, snap = asyncio.run(main())
+    assert i == 2
+    assert snap.n_offered == snap.n_ingested == 3
+
+
+def test_snapshot_under_load_soak(f):
+    """Producers and snapshot consumers race for many blocks: no KeyError,
+    counters stay monotone, and every snapshot is internally consistent
+    (exemplar rows match member ids, value from live sieves only)."""
+    rng = np.random.default_rng(23)
+    stream = np.asarray(f.V)[rng.choice(f.n, size=240)]
+    stream = (stream + 0.02 * rng.normal(size=stream.shape)
+              ).astype(np.float32)
+
+    async def main():
+        async with StreamIngestionService(f, k=5, mode="device",
+                                          block_size=8,
+                                          max_pending=16) as svc:
+            done = asyncio.Event()
+            seen: list[tuple] = []
+
+            async def producer():
+                for x in stream:
+                    await svc.offer(x)
+                await svc.drain()
+                done.set()
+
+            async def snapper():
+                last = (0, 0, 0)
+                while not done.is_set():
+                    snap = await svc.snapshot()
+                    cur = (snap.n_offered, snap.n_ingested, snap.n_accepted)
+                    assert cur >= last       # monotone counters
+                    assert snap.n_offered >= snap.n_ingested
+                    assert len(snap.indices) <= 5
+                    assert snap.exemplars.shape == (len(snap.indices),
+                                                    f.dim)
+                    last = cur
+                    seen.append(cur)
+                    await asyncio.sleep(0)
+
+            await asyncio.gather(producer(), snapper(), snapper())
+            return seen, await svc.snapshot()
+
+    seen, snap = asyncio.run(main())
+    assert len(seen) > 2
+    assert snap.n_offered == snap.n_ingested == len(stream)
+    assert snap.value > 0
