@@ -235,6 +235,61 @@ def _sharded_case(kind, fname, backend, policy, pool_plan):
             donated=0, min_widen_elems=widen, require_half_dot=half_dot))
 
 
+def _batched_sharded_case(kind, fname, backend, policy, pool_plan, batch):
+    from repro.core import distributed as dist
+
+    spec = SPECS[fname]
+    be = _eff_backend(spec, backend)
+    gc = 1 if fname == "graph_cut" else 0
+    nb = batch
+    plan = "device_sharded" if pool_plan == "replicated" \
+        else "device_sharded_pool"
+
+    def build():
+        mesh = audit_mesh()
+        run = dist.make_selection_scan_batched(
+            mesh, ("data",), fn=spec, kind=kind, k=K, top_b=TOP_B,
+            n_total=N, block_m=BLOCK_M, distance="sqeuclidean",
+            policy_name=policy, counter_key=f"audit_b{batch}_{plan}",
+            backend=be, rbf_gamma=None, pool_plan=pool_plan)
+        args = (_sds((nb, N, D), np.float32), _sds((nb, N, D), np.float32),
+                _sds((nb, N), np.float32), _sds((nb, N), np.float32),
+                _sds(_cand_shape(kind, nb), np.int32),
+                _sds((nb, D), np.float32), _sds((nb,), np.int32))
+        return run, args, {}
+
+    # The batched factory's psum census is STRUCTURALLY IDENTICAL to the
+    # unbatched one (_sharded_case): every per-request collective batches
+    # its OPERAND to (B, …) — the vmapped fold_aux gather, the stacked
+    # gains+stat payload, the (B, bm, d) take slabs — so the batch axis
+    # multiplies collective BYTES, never collective COUNT. That equality is
+    # exactly the tentpole claim ("one psum of O(B·m), not B collectives");
+    # a per-tenant psum migration would show up here as count × B.
+    if pool_plan == "replicated":
+        total = (4 if kind == "lazy" else 3) + 2 * gc
+        body = 1 + gc
+        max_bytes = nb * (_m_scored_max(kind) + 1) * 4
+        extra_scans = 1 if (kind == "lazy" and be == "jnp") else 0
+    else:
+        total = (7 if kind == "lazy" else 5) + 2 * gc
+        body = 3 + gc
+        bm = min(BLOCK_M, max(8, N))    # run_sharded_selection_batch's cap
+        max_bytes = max(nb * (_m_scored_max(kind) + 1) * 4, nb * bm * D * 4)
+        extra_scans = 1 if kind == "lazy" else 0
+    widen, half_dot = _precision_fields(policy, nb)
+    return AuditCase(
+        contract=f"distributed.selection_scan_batched[{pool_plan}]",
+        label=f"{plan}.batched[B={batch}].{kind}.{fname}.{be}.{policy}",
+        build=build,
+        expect=Expect(
+            rounds=K, top_scans=1 + extra_scans, driving=1,
+            whiles=1 if kind == "lazy" else 0,
+            collectives=Counter({"psum": total}),
+            body_psums=body, max_collective_bytes=max_bytes,
+            donated=1,                  # the (B, n/p) cache seed
+            min_widen_elems=widen, require_half_dot=half_dot))
+
+
 def _greedi_case(fname, backend, policy):
     from repro.core import distributed as dist
 
@@ -456,6 +511,10 @@ def build_cases(quick: bool = False) -> list[AuditCase]:
                     for pool_plan in ("replicated", "sharded"):
                         cases.append(_sharded_case(kind, fname, backend,
                                                    policy, pool_plan))
+                        for batch in (1, 4):
+                            cases.append(_batched_sharded_case(
+                                kind, fname, backend, policy, pool_plan,
+                                batch))
     for fname in fnames:
         for backend in BACKENDS:
             for policy in POLICIES:

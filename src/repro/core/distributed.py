@@ -47,6 +47,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
@@ -55,6 +56,7 @@ from repro.core import distances as dist_mod
 from repro.core import functions as fx
 from repro.core.engine import (DEVICE_TRACE_COUNTS, _device_block_m,
                                _score_blocked, drive_selection_scan,
+                               drive_selection_scan_batched,
                                mesh_tiles_per_memory)
 from repro.core.evaluator import EvalConfig
 from repro.core.functions import FnSpec, gains_formula
@@ -540,6 +542,407 @@ def run_sharded_selection(
         policy_name=f.cfg.resolved_policy().name, counter_key=counter_key,
         backend=backend, rbf_gamma=rbf_gamma, pool_plan=pool_plan)
     return scan(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0)
+
+
+# ---------------------------------------------------------------------------
+# Batched × sharded composition — B tenants in one (B, n/p) mesh dispatch.
+# Every per-request (n,) state from the single-device batched engine gains
+# its mesh layout here: the B min-caches row-shard WITH V ((B, n_loc) per
+# device), and each scored batch's B per-request gain partials stack into
+# the SAME psum (O(B·m) bytes, trajectory scalars riding along) instead of
+# issuing B collectives. Ragged k stays the k_eff freeze mask, so bucket
+# padding is inert on every shard.
+# ---------------------------------------------------------------------------
+
+_SELECTION_SCAN_BATCHED_CACHE: dict = {}
+
+
+@contract(
+    "distributed.selection_scan_batched[sharded]",
+    factory=True,
+    collective_kinds=("psum",),
+    donate=("seed_sh",),
+    claim="B tenants, one dispatch, O(B·n/p·d) resident per device; the "
+          "round body streams blocked O(B·m·d) takes and ONE O(B·m) gains "
+          "psum — per-tenant partials stack into the same collective, "
+          "never B collectives; the (B, n/p) cache seed is donated")
+@contract(
+    "distributed.selection_scan_batched[replicated]",
+    factory=True,
+    collective_kinds=("psum",),
+    donate=("seed_sh",),
+    claim="B tenants, one dispatch; ONE O(B·m) gains psum per scored batch "
+          "(every tenant's partials + trajectory scalars in one collective "
+          "— not B psums); the (B, n/p) sharded cache seed is donated and "
+          "aliased onto the final cache output")
+def make_selection_scan_batched(
+    mesh: Mesh,
+    data_axes: Sequence[str],
+    *,
+    fn: FnSpec = FnSpec(),   # the function's static identity
+    kind: str,               # "dense" | "stochastic" | "lazy"
+    k: int,                  # shared scan length (max per-request k)
+    top_b: int,              # CELF re-score width (lazy only)
+    n_total: int,            # global ground-set size (the gain normalizer)
+    block_m: int,            # per-shard candidate block (bounds the tile)
+    distance: str,
+    policy_name: str,
+    counter_key: str,
+    backend: str = "jnp",    # "jnp" | "pallas" | "pallas_interpret"
+    rbf_gamma: Optional[float] = None,
+    pool_plan: str = "replicated",  # "replicated" | "sharded"
+):
+    """Build (and cache) the jitted batched mesh-sharded k-round scan.
+
+    The batched composition of :func:`make_selection_scan`: B same-signature
+    requests lay their state out as (B, n/p) per device — ``V_sh`` is
+    (B, n_pad, d) sharded ``P(None, data_axes, None)``, the B per-tenant
+    cache seeds / row auxiliaries row-shard with it, and ``cand_rounds`` is
+    the (B, k, m) per-request candidate indices. Returns ``run(V_sh, pool,
+    seed_sh, aux_sh, cand_rounds, w0, k_eff) -> (sel (k, B), traj (k, B),
+    n_scored (B,), cache_vec (B, n_pad))``.
+
+    Collective budget: each scored candidate batch reduces ALL B requests'
+    (m,) per-shard gain partials in ONE psum of O(B·m) bytes — the batch
+    axis rides the collective's payload, never its count — with each
+    request's stat row-sum (the trajectory scalar) concatenated into the
+    same payload. The per-request column of that payload is byte-identical
+    to the unbatched plan's (m+1,) psum, which is why batched-sharded
+    selections, trajectories, AND per-request eval counts are bit-equal to
+    B separate sharded runs. Batched CELF shares the unbatched step's
+    certification loop via :func:`engine.make_batched_lazy_step_val` (the
+    trajectory value rides the re-score psum; frozen requests' values
+    emerge from the same collective, masked out of bound/count updates).
+
+    ``seed_sh`` is DONATED: the final folded (B, n_pad) cache vector rides
+    out with the same NamedSharding, so XLA aliases the carry onto the
+    seed's per-device buffers — warm buckets reuse O(B·n/p) bytes instead
+    of allocating per dispatch. ``k_eff`` (B,) int32 is the ragged-k freeze
+    mask (0 = inert bucket-padding slot).
+
+    On kernel backends each shard scores its local (B, n_loc, m) tile
+    through the grid-over-(B, m_tiles, n_tiles) batched Pallas kernels
+    (:mod:`repro.kernels.marginal_gain`) with the *global* ``n_total``
+    normalizer, so per-shard tiles stay exact psum partials exactly like
+    the unbatched sharded kernels. ``pool_plan`` has the same two memory
+    plans as the unbatched factory — ``"sharded"`` passes V's own (B, n/p)
+    shard as the pool and psum-materializes (B, block) candidate slabs
+    from their owning shards.
+    """
+    axes = tuple(data_axes)
+    key = (mesh, axes, fn, kind, k, top_b, n_total, block_m, distance,
+           policy_name, counter_key, backend, rbf_gamma, pool_plan)
+    if key in _SELECTION_SCAN_BATCHED_CACHE:
+        return _SELECTION_SCAN_BATCHED_CACHE[key]
+    if pool_plan not in ("replicated", "sharded"):
+        raise ValueError(f"unknown pool_plan {pool_plan!r}")
+    policy = resolve_policy(policy_name)
+    pair = dist_mod.resolve_pairwise(distance)
+    tmpl = fx.kernel_template(fn)
+    use_kernel = backend in ("pallas", "pallas_interpret") and tmpl is not None
+    sharded_pool = pool_plan == "sharded"
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+    def local_scan(V_loc, pool, seed_loc, aux_loc, cand_rounds, w0, k_eff):
+        B, n_loc, _d = V_loc.shape
+        off = jax.lax.axis_index(axes) * n_loc
+        seedf = seed_loc.astype(jnp.float32)
+        # (B,) per-request v0 in ONE psum — the batch axis is payload
+        v0 = jax.lax.psum(
+            jnp.sum(fx.stat_rows(fn, seedf, aux_loc), axis=1), axes) / n_total
+        psum_ = lambda x: jax.lax.psum(x, axes)  # noqa: E731
+
+        def value_of(cache):
+            vec, aux = cache
+            mean_stat = jax.lax.psum(
+                jnp.sum(fx.stat_rows(fn, vec, aux_loc), axis=1) / n_total,
+                axes)
+            return fx.value_from_stat(fn, v0, mean_stat, aux, n_total)
+
+        def fold(cache, w):
+            vec, aux = cache
+            row, gidx = w
+            dw = jax.vmap(
+                lambda Vb, rb: pair(Vb, rb[None, :], policy)[:, 0])(V_loc, row)
+            folded = fx.fold_vec_rows(fn, vec, dw.astype(jnp.float32))
+            # aux advances from the PRE-fold vec. vmapping the per-request
+            # fold batches graph cut's owner-gather psum OPERAND to (B,) —
+            # still ONE collective — and every shard executes it
+            # unconditionally before the gate, exactly like unbatched
+            new_aux = jax.vmap(
+                lambda vb, ab, gb: fx.fold_aux(fn, vb, ab, gb, off, n_loc,
+                                               psum=psum_))(vec, aux, gidx)
+            ok = gidx >= 0
+            return (jnp.where(ok[:, None], folded, vec),
+                    jnp.where(ok, new_aux, aux))
+
+        def psum_gains_val(g_part, cache):
+            """ONE O(B·m)-byte collective per scored batch: all B requests'
+            (m,) gain partials plus their stat row-sums ride one psum —
+            each request's column is byte-identical to the unbatched
+            plan's (m+1,) payload."""
+            vec, aux = cache
+            stat = (jnp.sum(fx.stat_rows(fn, vec, aux_loc), axis=1)
+                    / n_total)[:, None]
+            out = jax.lax.psum(
+                jnp.concatenate([g_part.astype(jnp.float32), stat], axis=1),
+                axes)
+            return out[:, :-1], fx.value_from_stat(fn, v0, out[:, -1], aux,
+                                                   n_total)
+
+        def score_part(vec, C):
+            # per-shard (B, m) gain partials: the batched kernels tile
+            # grid-over-(B, m_tiles, n_tiles) VMEM blocks themselves; the
+            # jnp path vmaps the (n_loc, block_m)-streamed reduction —
+            # neither materializes a (B, n_loc, m) block on any shard
+            sc = fx.score_cache_rows(fn, vec, aux_loc)
+            if use_kernel:
+                return kops.marginal_gain(
+                    V_loc, C, sc, policy=policy, rbf_gamma=rbf_gamma,
+                    fold=tmpl[0], score_affine=tmpl[1],
+                    interpret=(backend != "pallas"), n_total=n_total)
+            return jax.vmap(
+                lambda Vb, Cb, scb, rb: _score_blocked(
+                    Vb, Cb, scb, pair, policy, block_m, n_total=n_total,
+                    fn=fn, row_aux=rb))(V_loc, C, sc, aux_loc)
+
+        def gains_extra(vec, idx):
+            # graph cut's index-addressed per-shard partial, per request
+            # (None for every other function — vmap passes None through)
+            return jax.vmap(
+                lambda vb, ib: fx.gains_index_extra(fn, vb, ib, off, n_loc,
+                                                    n_total))(vec, idx)
+
+        cache0 = (seedf, jnp.zeros((B,), jnp.float32))
+        w0c = (w0.astype(pool.dtype), jnp.full((B,), -1, jnp.int32))
+
+        if sharded_pool:
+            n_loc_pool = pool.shape[1]
+            off_pool = jax.lax.axis_index(axes) * n_loc_pool
+
+            def take_rows(idxv):
+                """Materialize (B, mb, d) pool slabs for *global* indices:
+                one psum of each owner's rows against everyone else's
+                zeros, all B requests in the same collective."""
+                rel = idxv - off_pool
+                own = (rel >= 0) & (rel < n_loc_pool)
+                rows = jnp.take_along_axis(
+                    pool, jnp.clip(rel, 0, n_loc_pool - 1)[:, :, None],
+                    axis=1)
+                return jax.lax.psum(
+                    jnp.where(own[:, :, None], rows, jnp.zeros_like(rows)),
+                    axes)
+
+            def take(j):
+                return take_rows(j[:, None])[:, 0], j
+
+            def score_idx(cache, idx):
+                # stream per-request index blocks in lockstep: one
+                # take-materialized (B, bm, d) slab at a time, never two
+                vec, _aux = cache
+                m = idx.shape[1]
+                bm = min(block_m, m)
+                m_pad = -(-m // bm) * bm
+                idx_p = jnp.pad(idx, ((0, 0), (0, m_pad - m)))
+                blocks = jnp.moveaxis(idx_p.reshape(B, -1, bm), 1, 0)
+                parts = jax.lax.map(
+                    lambda ib: score_part(vec, take_rows(ib)), blocks)
+                parts = jnp.moveaxis(parts, 0, 1).reshape(B, -1)[:, :m]
+                extra = gains_extra(vec, idx)
+                return parts if extra is None else parts + extra
+
+            def score_idx_val(cache, idx):
+                return psum_gains_val(score_idx(cache, idx), cache)
+
+            def fold_score_val(cache, w_prev, cand_t):
+                cache = fold(cache, w_prev)
+                gains, val = score_idx_val(cache, cand_t)
+                return gains, cache, val
+
+            def seed_val(cache):
+                return score_idx_val(cache, jnp.broadcast_to(
+                    jnp.arange(n_total, dtype=jnp.int32), (B, n_total)))
+
+            sel, traj, n_scored, cache_f = drive_selection_scan_batched(
+                kind=kind, k=k, top_b=top_b, n_global=n_total, k_eff=k_eff,
+                take=take, n_pool=n_total, seed_val=seed_val,
+                cand_rounds=cand_rounds, cache0=cache0, w0=w0c, fold=fold,
+                score_idx_val=score_idx_val, fold_score_val=fold_score_val,
+                value_of=value_of)
+            return sel, traj, n_scored, cache_f[0]
+
+        def score_idx_val(cache, idx):
+            vec, _aux = cache
+            g = score_part(vec, jnp.take_along_axis(
+                pool, idx[:, :, None], axis=1))
+            extra = gains_extra(vec, idx)
+            return psum_gains_val(g if extra is None else g + extra, cache)
+
+        if use_kernel and fx.kernel_fused_ok(fn):
+
+            def fold_score_val(cache, w_prev, cand_t):
+                # fused dense/stochastic round: each request's winner fold
+                # happens inside the batched kernel on its local shard tile
+                vec, aux = cache
+                row, gidx = w_prev
+                g_part, vec2 = kops.fused_gain_update(
+                    V_loc, jnp.take_along_axis(
+                        pool, cand_t[:, :, None], axis=1),
+                    vec, row, policy=policy, rbf_gamma=rbf_gamma,
+                    fold=tmpl[0], score_affine=tmpl[1],
+                    interpret=(backend != "pallas"), n_total=n_total,
+                    w_valid=(gidx >= 0).astype(jnp.float32))
+                cache2 = (vec2, aux)
+                gains, val = psum_gains_val(g_part, cache2)
+                return gains, cache2, val
+        else:
+
+            def fold_score_val(cache, w_prev, cand_t):
+                cache2 = fold(cache, w_prev)
+                gains, val = score_idx_val(cache2, cand_t)
+                return gains, cache2, val
+
+        sel, traj, n_scored, cache_f = drive_selection_scan_batched(
+            kind=kind, k=k, top_b=top_b, n_global=n_total, k_eff=k_eff,
+            pool=pool, cand_rounds=cand_rounds, cache0=cache0, w0=w0c,
+            fold=fold, score_idx_val=score_idx_val,
+            fold_score_val=fold_score_val, value_of=value_of)
+        return sel, traj, n_scored, cache_f[0]
+
+    smapped = shard_map(
+        local_scan,
+        mesh=mesh,
+        in_specs=(P(None, axes, None),
+                  P(None, axes, None) if sharded_pool else P(None, None, None),
+                  P(None, axes), P(None, axes), P(None, None, None),
+                  P(None, None), P(None)),
+        out_specs=(P(None), P(None), P(None), P(None, axes)),
+        check_rep=False,
+    )
+
+    @partial(jax.jit, donate_argnums=(2,))
+    def run(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0, k_eff):
+        DEVICE_TRACE_COUNTS[counter_key] += 1
+        return smapped(V_sh, pool, seed_sh, aux_sh, cand_rounds, w0, k_eff)
+
+    _SELECTION_SCAN_BATCHED_CACHE[key] = run
+    return run
+
+
+def stage_sharded_batch(
+    fs,                      # Sequence[SubmodularFunction]
+    *,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+    pool_plan: str = "replicated",
+):
+    """Pad, stack, and shard-place a bucket of B same-signature requests.
+
+    Host-stacks each request's V/seed/aux (padding rows to the mesh extent
+    with the function's inert sentinels, exactly like the unbatched
+    :func:`_placed_sharded`) and issues ONE ``jax.device_put`` per operand
+    with its (B, n/p) NamedSharding — async on accelerators, so a serving
+    loop can stage the NEXT bucket while the current dispatch runs. No
+    placement is cached on the functions: the seed must be FRESH per
+    dispatch (the batched scan donates it) and bucket composition changes
+    call to call. The returned payload is single-use and carries the
+    (mesh, axes, pool_plan) it was staged for.
+    """
+    mesh = _resolve_mesh(mesh, data_axes)
+    axes = tuple(data_axes)
+    ndev = _mesh_extent(mesh, axes)
+    f0 = fs[0]
+    n = f0.n
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    V_np = [np.asarray(f.V) for f in fs]
+    Vp = np.stack([np.pad(v, ((0, n_pad - n), (0, 0))) for v in V_np])
+    seedp = np.stack([
+        np.pad(np.asarray(f.cache_seed, np.float32), (0, n_pad - n),
+               constant_values=fx.pad_seed(f.spec)) for f in fs])
+    auxp = np.stack([
+        np.pad(np.asarray(f.row_aux), (0, n_pad - n),
+               constant_values=fx.pad_row_aux(f.spec)) for f in fs])
+    if all(f.e0 is None for f in fs):
+        w0_b = np.zeros((len(fs), f0.dim), V_np[0].dtype)
+    else:
+        w0_b = np.stack([
+            np.asarray(f.e0, V_np[0].dtype) if f.e0 is not None
+            else np.zeros((f.dim,), V_np[0].dtype) for f in fs])
+    payload = {
+        "mesh": mesh, "axes": axes, "pool_plan": pool_plan,
+        "V_sh": jax.device_put(Vp, NamedSharding(mesh, P(None, axes, None))),
+        "seed_sh": jax.device_put(seedp, NamedSharding(mesh, P(None, axes))),
+        "aux_sh": jax.device_put(auxp, NamedSharding(mesh, P(None, axes))),
+        "w0": jax.device_put(w0_b, NamedSharding(mesh, P(None, None))),
+    }
+    if pool_plan == "replicated":
+        # UNPADDED (B, n, d): the replicated pool is candidate payload, and
+        # lazy's ub0 seeding scores every pool row — a padded row would be
+        # a real-looking candidate (matches the unbatched "pool" entry)
+        payload["pool"] = jax.device_put(
+            np.stack(V_np), NamedSharding(mesh, P(None, None, None)))
+    return payload
+
+
+def run_sharded_selection_batch(
+    fs,                      # Sequence[SubmodularFunction]
+    cand_rounds: jax.Array,  # (B, k, m) int32 global candidate indices
+    ks: Sequence[int],
+    *,
+    kind: str,
+    k: int,
+    top_b: int,
+    counter_key: str,
+    m_widest: int,
+    block_m: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    data_axes: Sequence[str] = ("data",),
+    backend: str = "jnp",
+    rbf_gamma: Optional[float] = None,
+    pool_plan: str = "replicated",
+    staged: Optional[dict] = None,
+):
+    """Place a bucket's (B, n/p) operands and run the batched sharded scan.
+
+    The gain tile autotunes from B·n_loc rows — the LOCAL shard height
+    times the batch (never B·n global, which would under-fill every shard
+    p×) — divided once by the number of shard tiles that share one
+    physical memory space; under the sharded pool the take-slab width is
+    additionally capped at n_loc so the (B, bm, d) transient never exceeds
+    the resident shard. ``staged`` optionally passes the payload a prior
+    :func:`stage_sharded_batch` already transferred (it is re-staged here
+    if its mesh/axes/pool_plan disagree). Returns ``(sel (k, B),
+    traj (k, B), n_scored (B,))`` device arrays.
+    """
+    mesh = _resolve_mesh(mesh, data_axes)
+    axes = tuple(data_axes)
+    ndev = _mesh_extent(mesh, axes)
+    f0 = fs[0]
+    B = len(fs)
+    n = f0.n
+    n_pad = ((n + ndev - 1) // ndev) * ndev
+    n_loc = n_pad // ndev
+    bm = block_m if block_m is not None \
+        else _device_block_m(n_loc, m_widest, mesh_tiles_per_memory(mesh),
+                             n_batch=B)
+    if pool_plan == "sharded":
+        bm = min(bm, max(8, n_loc))
+    if staged is None or staged["mesh"] != mesh or staged["axes"] != axes \
+            or staged["pool_plan"] != pool_plan:
+        staged = stage_sharded_batch(fs, mesh=mesh, data_axes=axes,
+                                     pool_plan=pool_plan)
+    V_sh = staged["V_sh"]
+    pool = staged["pool"] if pool_plan == "replicated" else V_sh
+    scan = make_selection_scan_batched(
+        mesh, axes, fn=f0.spec, kind=kind, k=k, top_b=top_b, n_total=n,
+        block_m=bm, distance=f0.cfg.distance,
+        policy_name=f0.cfg.resolved_policy().name, counter_key=counter_key,
+        backend=backend, rbf_gamma=rbf_gamma, pool_plan=pool_plan)
+    sel, traj, n_scored, _ = scan(
+        V_sh, pool, staged["seed_sh"], staged["aux_sh"], cand_rounds,
+        staged["w0"], jnp.asarray(np.asarray(ks, np.int32)))
+    return sel, traj, n_scored
 
 
 # ---------------------------------------------------------------------------

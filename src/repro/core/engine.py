@@ -591,10 +591,83 @@ def make_batched_lazy_step(take, fold, score_idx, value_of, top_b: int,
     return step
 
 
-def drive_selection_scan_batched(*, kind, k, top_b, n_global, pool, k_eff,
-                                 cand_rounds, cache0, w0, fold,
-                                 score_idx=None, fold_score_val=None,
-                                 value_of=None):
+def make_batched_lazy_step_val(take, fold, score_idx_val, top_b: int,
+                               max_iters: int, k_eff):
+    """Batched CELF step whose trajectory value RIDES the re-score callback
+    — the mesh-sharded form of :func:`make_batched_lazy_step`.
+
+    ``score_idx_val(cache, idx (B, m)) -> ((B, m) gains, (B,) value)`` is
+    the sharded plans' one-psum-per-batch callback: every request's gain
+    partials and its stat row-sum cross the mesh in the SAME collective, so
+    a round body issues exactly one O(B·m) psum per re-score iteration and
+    no separate value collective. The value part is computed from the
+    (loop-invariant) folded cache, so whichever iteration runs last yields
+    the same per-request f(S_t) — including frozen requests, whose
+    transient fold still produces their f(S_{k_eff}).
+
+    The one structural difference from the single-device batched step: the
+    while loop runs AT LEAST one iteration even when every request is
+    frozen (``it == 0`` keeps the condition alive), because the frozen
+    requests' trajectory values only exist inside the psum the loop body
+    issues. The extra iteration is inert — ``live`` masks every lane, so
+    bounds, freshness, and per-request eval counts are untouched — and on
+    rounds where any request is active the trip count is identical to the
+    single-device batched step's.
+    """
+    B = k_eff.shape[0]
+    rows = jnp.arange(B)[:, None]
+
+    def step(carry, t):
+        cache, taken, w_prev, ub = carry
+        cache2 = fold(cache, w_prev)
+        act = t < k_eff
+
+        def request_active(ub_c, fresh):
+            stale_max = jnp.max(
+                jnp.where(fresh | taken, -jnp.inf, ub_c), axis=1)
+            fresh_best = jnp.max(
+                jnp.where(fresh & ~taken, ub_c, -jnp.inf), axis=1)
+            return (fresh_best < stale_max) & act
+
+        def invariant_fails(st):
+            ub_c, fresh, _, _, it = st
+            return (jnp.any(request_active(ub_c, fresh)) | (it == 0)) \
+                & (it < max_iters)
+
+        def rescore_top_b(st):
+            ub_c, fresh, scored, _, it = st
+            active = request_active(ub_c, fresh)
+            stale = jnp.where(fresh | taken, -jnp.inf, ub_c)
+            top_ub, top_idx = jax.lax.top_k(stale, top_b)
+            live = (top_ub > -jnp.inf) & active[:, None]
+            gains_b, val = score_idx_val(cache2, top_idx)
+            gains_b = jnp.where(live, gains_b, -jnp.inf)
+            prev = jnp.take_along_axis(ub_c, top_idx, axis=1)
+            ub_c = ub_c.at[rows, top_idx].set(
+                jnp.where(live, gains_b, prev))
+            fresh = fresh.at[rows, top_idx].set(
+                jnp.take_along_axis(fresh, top_idx, axis=1) | live)
+            scored = scored + jnp.sum(live, axis=1).astype(jnp.int32)
+            return ub_c, fresh, scored, val, it + 1
+
+        ub2, fresh, scored, val, _ = jax.lax.while_loop(
+            invariant_fails, rescore_top_b,
+            (ub, jnp.zeros(taken.shape, bool), jnp.zeros((B,), jnp.int32),
+             jnp.zeros((B,), jnp.float32), jnp.asarray(0, jnp.int32)))
+        j = jnp.argmax(jnp.where(fresh & ~taken, ub2, -jnp.inf), axis=1)
+        new_carry = (cache2, taken.at[rows[:, 0], j].set(True), take(j), ub2)
+        carry = _freeze_where(act, new_carry, carry)
+        return carry, (jnp.where(act, j, -1), val,
+                       jnp.where(act, scored, 0))
+
+    return step
+
+
+def drive_selection_scan_batched(*, kind, k, top_b, n_global, pool=None,
+                                 k_eff, take=None, n_pool=None,
+                                 seed_val=None, cand_rounds, cache0, w0,
+                                 fold, score_idx=None, score_idx_val=None,
+                                 fold_score_val=None, value_of=None):
     """Batched :func:`drive_selection_scan` — one scan, B requests.
 
     ``pool`` is the (B, n, d) stacked payload; ``cand_rounds`` is
@@ -606,23 +679,45 @@ def drive_selection_scan_batched(*, kind, k, top_b, n_global, pool, k_eff,
     ``fold_score_val(cache, w_prev, cand_t) -> (gains, cache, (B,) value)``,
     ``value_of(cache) -> (B,)``.
 
+    Like the unbatched driver, plans with no resident per-request payload
+    pass an explicit ``take(idx (B,)) -> ((B, d) rows, idx)`` + ``n_pool``
+    instead of ``pool`` (the batched sharded pool psum-materializes each
+    request's columns from their owning shards), and ``seed_val`` overrides
+    CELF's ub0 seeding pass. Mesh plans pass ``score_idx_val`` (gains and
+    per-request trajectory values riding ONE psum —
+    :func:`make_batched_lazy_step_val`) where single-device plans pass
+    ``score_idx``/``value_of`` separately.
+
     Returns ``(sel (k, B), traj (k, B), n_scored (B,), final cache)`` —
     the final cache rides out so the jitted dispatch can alias its vec
     onto the donated seed buffer.
     """
-    B, n_pool = pool.shape[0], pool.shape[1]
-    rows = jnp.arange(B)
-    take = lambda idx: (pool[rows, idx], idx)  # noqa: E731
+    B = k_eff.shape[0]
+    if take is None:
+        rows = jnp.arange(B)
+        take = lambda idx: (pool[rows, idx], idx)  # noqa: E731
+        n_pool = pool.shape[1]
     taken_init = jnp.zeros((B, n_pool), bool)
     ts = jnp.arange(k, dtype=jnp.int32)
     if kind == "lazy":
-        step = make_batched_lazy_step(
-            take, fold, score_idx, value_of, top_b,
-            celf_max_iters(n_global, top_b), k_eff)
+        if score_idx_val is not None:
+            step = make_batched_lazy_step_val(
+                take, fold, score_idx_val, top_b,
+                celf_max_iters(n_global, top_b), k_eff)
+        else:
+            step = make_batched_lazy_step(
+                take, fold, score_idx, value_of, top_b,
+                celf_max_iters(n_global, top_b), k_eff)
         # round -1: per-request singleton gains seed the bounds (counts one
         # eval per pool row for every request that runs ≥ 1 round)
-        ub0 = score_idx(cache0, jnp.broadcast_to(
-            jnp.arange(n_pool, dtype=jnp.int32), (B, n_pool)))
+        if seed_val is not None:
+            ub0, _ = seed_val(cache0)
+        elif score_idx_val is not None:
+            ub0, _ = score_idx_val(cache0, jnp.broadcast_to(
+                jnp.arange(n_pool, dtype=jnp.int32), (B, n_pool)))
+        else:
+            ub0 = score_idx(cache0, jnp.broadcast_to(
+                jnp.arange(n_pool, dtype=jnp.int32), (B, n_pool)))
         init = (cache0, taken_init, w0, ub0)
         (cache, _, w_last, _), (sel, vals, scored) = jax.lax.scan(
             step, init, ts)
@@ -1011,6 +1106,65 @@ def run_selection(
     return OptResult(sel, traj[-1] if traj else 0.0, traj, int(n_scored))
 
 
+def _stack_batch_payload(fs: Sequence[SubmodularFunction]) -> dict:
+    """Host-stack B same-signature requests into one (B, …) device payload.
+
+    Stacks through NumPy, not jnp.stack: an XLA concat over B small device
+    arrays costs a dispatch per operand, which at serving batch sizes
+    dwarfs the scan itself (~20ms vs ~2ms at B=64 on CPU). np.asarray of a
+    committed array is a cheap transfer, np.stack is one memcpy, and the
+    single jnp.asarray builds one fresh device buffer — which also keeps
+    the seed donation-safe (cache_seed may alias each f's resident d_e0).
+    Factored out of :func:`run_selection_batch` so the serving layer can
+    stage the NEXT bucket's transfer while the current dispatch runs
+    (:func:`stage_selection_batch`).
+    """
+    f0 = fs[0]
+    B = len(fs)
+    V_b = jnp.asarray(np.stack([np.asarray(f.V) for f in fs]))
+    seed_b = jnp.asarray(
+        np.stack([np.asarray(f.cache_seed, np.float32) for f in fs]))
+    aux_b = jnp.asarray(np.stack([np.asarray(f.row_aux) for f in fs]))
+    if all(f.e0 is None for f in fs):
+        w0_b = jnp.zeros((B, f0.dim), f0.V.dtype)
+    else:
+        w0_b = jnp.asarray(np.stack([
+            np.asarray(f.e0 if f.e0 is not None
+                       else jnp.zeros((f.dim,), f.V.dtype))
+            for f in fs]), f0.V.dtype)
+    return {"V": V_b, "seed": seed_b, "aux": aux_b, "w0": w0_b}
+
+
+def stage_selection_batch(
+    fs: Sequence[SubmodularFunction],
+    *,
+    plan: str = "device",
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+) -> Optional[dict]:
+    """Pre-stage a bucket's stacked payload ahead of its dispatch.
+
+    Issues the host→device transfers (``jax.device_put`` under the hood —
+    async on accelerators) for the payload :func:`run_selection_batch`
+    would otherwise build inline, so a serving loop can overlap the NEXT
+    bucket's staging with the CURRENT bucket's running dispatch. The
+    returned dict is single-use: it contains the fresh donation-safe cache
+    seed for exactly one ``run_selection_batch(..., staged=...)`` call.
+    """
+    if not fs:
+        return None
+    if plan == "device":
+        return _stack_batch_payload(fs)
+    if plan in ("device_sharded", "device_sharded_pool"):
+        from repro.core import distributed as dist_engine
+
+        return dist_engine.stage_sharded_batch(
+            fs, mesh=mesh, data_axes=tuple(data_axes),
+            pool_plan="sharded" if plan == "device_sharded_pool"
+            else "replicated")
+    raise ValueError(f"unknown batched execution plan {plan!r}")
+
+
 def run_selection_batch(
     fs: Sequence[SubmodularFunction],
     *,
@@ -1021,10 +1175,14 @@ def run_selection_batch(
     top_b: int = 0,
     counter_key: str,
     block_m: Optional[int] = None,
+    plan: str = "device",
+    mesh=None,
+    data_axes: Sequence[str] = ("data",),
+    staged: Optional[dict] = None,
 ) -> list[OptResult]:
     """Solve B independent selection requests in ONE jitted dispatch.
 
-    The batched ``plan="device"`` entry point: every request in ``fs`` must
+    The batched device-plan entry point: every request in ``fs`` must
     share the jit signature — same function spec, same (n, d), same
     ``EvalConfig`` — which is exactly what the serving layer's bucketing
     guarantees. ``k`` is the shared scan length; ``ks`` optionally gives
@@ -1037,6 +1195,16 @@ def run_selection_batch(
     full-ground-set default. Per-request selections, trajectories, and
     evaluation counts are identical to B :func:`run_selection` calls —
     only the dispatch is amortized.
+
+    ``plan`` composes the batch axis with the execution plans:
+    ``"device"`` (single-device, state (B, n) resident), or
+    ``"device_sharded"`` / ``"device_sharded_pool"`` (state laid out
+    (B, n/p) per device on ``mesh`` — B per-tenant min-caches row-shard
+    with V, each round issues ONE psum of O(B·m) bytes with every
+    request's partials stacked into the same collective, and per-request
+    results stay bit-identical to each request's unbatched sharded run).
+    ``staged`` optionally passes a payload pre-transferred by
+    :func:`stage_selection_batch` (same fs, same plan).
     """
     if not fs:
         return []
@@ -1109,31 +1277,28 @@ def run_selection_batch(
                     f"{n_cand} distinct candidates")
         m_widest = cand_rounds.shape[2]
 
-    bm = block_m if block_m is not None \
-        else _device_block_m(n, m_widest, n_batch=B)
-    # Stack the per-request payloads through NumPy, not jnp.stack: an XLA
-    # concat over B small device arrays costs a dispatch per operand, which
-    # at serving batch sizes dwarfs the scan itself (~20ms vs ~2ms at
-    # B=64 on CPU). np.asarray of a committed array is a cheap transfer,
-    # np.stack is one memcpy, and the single jnp.asarray builds one fresh
-    # device buffer — which also keeps the seed donation-safe
-    # (cache_seed may alias each f's resident d_e0).
-    V_b = jnp.asarray(np.stack([np.asarray(f.V) for f in fs]))
-    seed_b = jnp.asarray(
-        np.stack([np.asarray(f.cache_seed, np.float32) for f in fs]))
-    aux_b = jnp.asarray(np.stack([np.asarray(f.row_aux) for f in fs]))
-    if all(f.e0 is None for f in fs):
-        w0_b = jnp.zeros((B, f0.dim), f0.V.dtype)
+    if plan in ("device_sharded", "device_sharded_pool"):
+        from repro.core import distributed as dist_engine
+
+        sel, traj, n_scored = dist_engine.run_sharded_selection_batch(
+            fs, jnp.asarray(cand_rounds, jnp.int32), ks, kind=kind, k=k,
+            top_b=top_b, counter_key=counter_key, m_widest=m_widest,
+            block_m=block_m, mesh=mesh, data_axes=tuple(data_axes),
+            backend=backend, rbf_gamma=rbf_gamma,
+            pool_plan="sharded" if plan == "device_sharded_pool"
+            else "replicated", staged=staged)
+    elif plan == "device":
+        bm = block_m if block_m is not None \
+            else _device_block_m(n, m_widest, n_batch=B)
+        payload = staged if staged is not None else _stack_batch_payload(fs)
+        sel, traj, n_scored, _ = _select_scan_batched(
+            payload["V"], payload["seed"], payload["aux"],
+            jnp.asarray(cand_rounds, jnp.int32), payload["w0"],
+            jnp.asarray(ks, jnp.int32), fn=fn, kind=kind, k=k, top_b=top_b,
+            distance=f0.cfg.distance, policy_name=policy.name, block_m=bm,
+            backend=backend, rbf_gamma=rbf_gamma, counter_key=counter_key)
     else:
-        w0_b = jnp.asarray(np.stack([
-            np.asarray(f.e0 if f.e0 is not None
-                       else jnp.zeros((f.dim,), f.V.dtype))
-            for f in fs]), f0.V.dtype)
-    sel, traj, n_scored, _ = _select_scan_batched(
-        V_b, seed_b, aux_b, jnp.asarray(cand_rounds, jnp.int32), w0_b,
-        jnp.asarray(ks, jnp.int32), fn=fn, kind=kind, k=k, top_b=top_b,
-        distance=f0.cfg.distance, policy_name=policy.name, block_m=bm,
-        backend=backend, rbf_gamma=rbf_gamma, counter_key=counter_key)
+        raise ValueError(f"unknown batched execution plan {plan!r}")
     sel = np.asarray(sel)            # (k, B)
     traj = np.asarray(traj)          # (k, B)
     n_scored = np.asarray(n_scored)  # (B,)

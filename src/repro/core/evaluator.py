@@ -102,6 +102,15 @@ def free_memory_bytes(device=None) -> Optional[int]:
     Uses the runtime's allocator statistics (``Device.memory_stats``), which
     accelerator backends expose and CPU does not. Returns None when the
     backend has no stats — callers fall back to their static heuristics.
+
+    This probe is shared by the engine's gain-tile autotuner
+    (``engine._device_block_m``), whose cap likewise freezes at first use.
+    Its two sizing factors compose multiplicatively on top of the probed
+    cap: the batched-sharded plans score (B·n_loc)-row slabs per device, so
+    the tile is sized from ``n_loc`` rows × ``n_batch=B`` with the cap
+    divided ONCE by ``mesh_tiles_per_memory`` (forced host devices share
+    this one probed allocator; a real accelerator mesh owns one memory per
+    device and divides by 1).
     """
     try:
         dev = device if device is not None else jax.local_devices()[0]

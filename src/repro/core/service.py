@@ -561,18 +561,31 @@ class SelectionService:
 
     def __init__(self, cfg: Optional[EvalConfig] = None, *,
                  max_batch: int = 64, max_pending: int = 1024,
-                 linger_s: float = 0.0):
+                 linger_s: float = 0.0, plan: str = "device",
+                 mesh=None, data_axes: Sequence[str] = ("data",)):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if plan not in ("device", "device_sharded", "device_sharded_pool"):
+            raise ValueError(
+                f"unknown batched execution plan {plan!r}; the service "
+                f"serves 'device', 'device_sharded' or 'device_sharded_pool'")
         self._cfg = cfg if cfg is not None else EvalConfig()
         self._max_batch = max_batch
         self._max_pending = max_pending
         self._linger_s = linger_s
+        # ``plan``/``mesh``: same-signature buckets dispatch ONCE across all
+        # mesh devices on the sharded plans — state is (B, n/p) per device
+        self._plan = plan
+        self._mesh = mesh
+        self._data_axes = tuple(data_axes)
         #: dispatches: batched engine calls issued; batched_requests: live
-        #: requests they carried; padded_slots: inert k_eff=0 fill. The
-        #: amortization ratio is batched_requests / dispatches.
+        #: requests they carried; padded_slots: inert k_eff=0 fill (the
+        #: amortization ratio is batched_requests / dispatches);
+        #: staged_buckets: dispatches whose padded stacks were device-put
+        #: WHILE the previous bucket's dispatch ran (issue-and-go overlap).
         self.stats = {"requests": 0, "dispatches": 0,
-                      "batched_requests": 0, "padded_slots": 0}
+                      "batched_requests": 0, "padded_slots": 0,
+                      "staged_buckets": 0}
         self._queue: Optional[asyncio.Queue] = None
         self._task: Optional[asyncio.Task] = None
         self._error: Optional[BaseException] = None
@@ -664,9 +677,30 @@ class SelectionService:
                 buckets: dict[tuple, list[_SelectionRequest]] = {}
                 for req in batch:
                     buckets.setdefault(req.signature(), []).append(req)
-                for reqs in buckets.values():
-                    for lo in range(0, len(reqs), self._max_batch):
-                        await self._serve_bucket(reqs[lo:lo + self._max_batch])
+                chunks = [reqs[lo:lo + self._max_batch]
+                          for reqs in buckets.values()
+                          for lo in range(0, len(reqs), self._max_batch)]
+                # Issue-and-go (PR 9's ingestion overlap, applied to
+                # serving): dispatch the current bucket as a task, then
+                # stage the NEXT bucket's padded stacks (host stacking +
+                # jax.device_put — async on accelerators) in a second
+                # thread while that dispatch occupies the device. The
+                # dispatches themselves stay strictly sequential.
+                staged = None
+                for i, chunk in enumerate(chunks):
+                    serving = asyncio.create_task(
+                        self._serve_bucket(chunk, staged))
+                    staged = None
+                    if i + 1 < len(chunks):
+                        try:
+                            staged = await asyncio.to_thread(
+                                self._stage_bucket, chunks[i + 1])
+                        except asyncio.CancelledError:
+                            raise
+                        except BaseException:
+                            staged = None  # staging is an optimization:
+                            # the serve path rebuilds inline on fallback
+                    await serving
             except asyncio.CancelledError:
                 raise
             except BaseException as e:  # worker-level fault: fail fast
@@ -678,9 +712,10 @@ class SelectionService:
                 for _ in batch:
                     self._queue.task_done()
 
-    async def _serve_bucket(self, reqs: list["_SelectionRequest"]) -> None:
+    async def _serve_bucket(self, reqs: list["_SelectionRequest"],
+                            staged: Optional[dict] = None) -> None:
         try:
-            results = await asyncio.to_thread(self._run_bucket, reqs)
+            results = await asyncio.to_thread(self._run_bucket, reqs, staged)
         except asyncio.CancelledError:
             raise
         except BaseException as e:      # bucket-level fault: this bucket's
@@ -692,18 +727,11 @@ class SelectionService:
             if not req.future.done():
                 req.future.set_result(res)
 
-    @contract(
-        "service.bucket_dispatch",
-        runtime_only=True,
-        claim="every signature bucket rides ONE run_selection_batch "
-              "dispatch (pow2-padded with inert k_eff=0 slots); the traced "
-              "artifact is engine.select_scan_batched's, audited there — "
-              "this contract's own check is the runtime service round trip "
-              "(N concurrent tenants, 1 trace, bucket-count dispatches)")
-    def _run_bucket(self, reqs: list["_SelectionRequest"]):
-        """Synchronous batched dispatch for one signature bucket (runs in a
-        thread; JAX work must not block the event loop)."""
-        from repro.core import engine as eng
+    def _build_bucket(self, reqs: list["_SelectionRequest"]):
+        """Deterministic bucket assembly: padded function stack, ragged ks,
+        per-request stochastic samples, scan length. Shared by the inline
+        dispatch path and the ahead-of-dispatch staging path (the seeded
+        sample draw makes both produce identical payloads)."""
         r0 = reqs[0]
         n = r0.X.shape[0]
         fs = [FUNCTIONS[r.fn](jnp.asarray(r.X), self._cfg,
@@ -720,9 +748,49 @@ class SelectionService:
             cand = np.stack(rows + [rows[0]] * pad)
         else:
             k_scan = _next_pow2(max(ks))       # ragged k, padded scan
+        return fs, ks, cand, k_scan, pad
+
+    def _stage_bucket(self, reqs: list["_SelectionRequest"]) -> dict:
+        """Assemble one bucket and issue its host→device transfers (runs in
+        a thread while the PREVIOUS bucket's dispatch holds the device)."""
+        from repro.core import engine as eng
+        fs, ks, cand, k_scan, pad = self._build_bucket(reqs)
+        payload = eng.stage_selection_batch(
+            fs, plan=self._plan, mesh=self._mesh,
+            data_axes=self._data_axes)
+        return {"reqs": reqs, "fs": fs, "ks": ks, "cand": cand,
+                "k_scan": k_scan, "pad": pad, "payload": payload}
+
+    @contract(
+        "service.bucket_dispatch",
+        runtime_only=True,
+        claim="every signature bucket rides ONE run_selection_batch "
+              "dispatch (pow2-padded with inert k_eff=0 slots); the traced "
+              "artifact is engine.select_scan_batched's, audited there — "
+              "this contract's own check is the runtime service round trip "
+              "(N concurrent tenants, 1 trace, bucket-count dispatches)")
+    def _run_bucket(self, reqs: list["_SelectionRequest"],
+                    staged: Optional[dict] = None):
+        """Synchronous batched dispatch for one signature bucket (runs in a
+        thread; JAX work must not block the event loop). ``staged`` is a
+        payload :meth:`_stage_bucket` pre-transferred for exactly these
+        requests; anything else rebuilds inline."""
+        from repro.core import engine as eng
+        r0 = reqs[0]
+        if staged is not None and staged["reqs"] is reqs:
+            fs, ks, cand, k_scan, pad = (staged["fs"], staged["ks"],
+                                         staged["cand"], staged["k_scan"],
+                                         staged["pad"])
+            payload = staged["payload"]
+            self.stats["staged_buckets"] += 1
+        else:
+            fs, ks, cand, k_scan, pad = self._build_bucket(reqs)
+            payload = None
         res = eng.run_selection_batch(
             fs, kind=r0.kind, k=k_scan, ks=ks, cand_rounds=cand,
-            top_b=r0.top_b, counter_key=f"serve_{r0.kind}")
+            top_b=r0.top_b, counter_key=f"serve_{r0.kind}",
+            plan=self._plan, mesh=self._mesh, data_axes=self._data_axes,
+            staged=payload)
         self.stats["dispatches"] += 1
         self.stats["batched_requests"] += len(reqs)
         self.stats["padded_slots"] += pad

@@ -268,6 +268,14 @@ def gain_eval_batched(
     partitioning and accumulation order are identical, which is what makes
     batched selections bit-compatible with the unbatched engine. Returns
     (B, m_pad, 1) float32 gains.
+
+    Under the batched-sharded plans this runs INSIDE shard_map on each
+    device's (B, n_loc, d) row shard: the grid is (B, m_tiles,
+    local-n_tiles), ``n_total`` stays the GLOBAL ground-set size so each
+    shard's normalized gain tile is an exact psum partial (zero-padded rows
+    score exact-zero partials), and the per-shard outputs stack into the
+    round's single O(B·m) collective — same template as the unbatched
+    sharded path, with the batch axis riding the grid and the payload.
     """
     B, n_pad, d_pad = V.shape
     m_pad = C.shape[1]

@@ -262,7 +262,11 @@ def marginal_gain(
 
     ``n_total`` overrides the |V| normalizer: pass the *global* ground-set
     size when V is one row-shard of a mesh-sharded ground set, so per-shard
-    partial gains ``psum`` to the exact global gains.
+    partial gains ``psum`` to the exact global gains. The two axes compose:
+    a 3-D ``V`` of shape (B, n_loc, d) inside shard_map is B tenants' row
+    shards scored by ONE grid-over-(B, m_tiles, local-n_tiles) launch whose
+    (B, m) output is that shard's exact partial of the round's single
+    O(B·m) psum (the batched-sharded plans in core/distributed.py).
 
     ``fold``/``score_affine`` select the kernel template (see
     :mod:`repro.kernels.marginal_gain`): the default ``"min"`` scores the

@@ -115,7 +115,48 @@ def test_oversized_collective_operand_detected():
 
     x = jax.ShapeDtypeStruct((8,), np.float32)
     census = ja.collective_census(_artifact(_shmap(big), x).jaxpr)
-    assert census.max_operand_bytes >= 64 * 8 * 4
+    # the psum operand is the LOCAL (64, n/p) block — 8/p rows per shard
+    assert census.max_operand_bytes >= 64 * (8 // jax.device_count()) * 4
+
+
+def test_per_tenant_psum_migration_detected():
+    """The batched-sharded O(B·m) budget: stacking B tenants' partials into
+    ONE (B, m+1) psum keeps the collective count at 1. The regression this
+    fixture pins is the per-tenant migration — a Python loop (or unrolled
+    vmap) issuing B separate psums — which the census must report as B
+    collectives, busting the batched contracts' count budget."""
+    B, m = 4, 6
+
+    def stacked(parts):                     # parts: (B, n_loc) per shard
+        g = parts[:, :m]
+        stat = jnp.sum(parts, axis=1)
+        return jax.lax.psum(
+            jnp.concatenate([g, stat[:, None]], axis=1), "data")
+
+    def per_tenant(parts):
+        out = []
+        for b in range(B):                  # the migration under test
+            g = parts[b, :m]
+            stat = jnp.sum(parts[b])
+            out.append(jax.lax.psum(
+                jnp.concatenate([g, stat[None]]), "data"))
+        return jnp.stack(out)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((jax.device_count(),), ("data",))
+
+    def _sh(fn):
+        return jax.jit(shard_map(fn, mesh=mesh, in_specs=(P(None, "data"),),
+                                 out_specs=P(None, None), check_rep=False))
+
+    x = jax.ShapeDtypeStruct((B, 8 * jax.device_count()), np.float32)
+    good = ja.collective_census(_artifact(_sh(stacked), x).jaxpr)
+    assert good.counts["psum"] == 1
+    assert good.max_operand_bytes == B * (m + 1) * 4   # O(B·m), one payload
+    bad = ja.collective_census(_artifact(_sh(per_tenant), x).jaxpr)
+    assert bad.counts["psum"] == B
 
 
 def test_psum_inside_scan_body_censused_per_region():

@@ -127,6 +127,61 @@ def test_sharded_pool_matches_single_device_all_strategies():
     assert "SHARDED_POOL_OK" in out
 
 
+def test_batched_sharded_8_devices():
+    """Batched × sharded composition at real mesh width: B=3 tenants with
+    DISTINCT data and ragged ks laid out as (B, n/p) over 8 forced devices,
+    one dispatch per (plan, strategy) signature. Every demuxed tenant must
+    reproduce its own unbatched sharded run — selections, trajectories, AND
+    evaluation counts — on both sharded plans, with exactly one trace per
+    signature (a repeat batch must not retrace)."""
+    out = run_with_devices("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core import ExemplarClustering, greedy, lazy_greedy, \\
+            run_selection_batch
+        from repro.core.distributed import DEVICE_TRACE_COUNTS
+        from repro.data.synthetic import blobs
+
+        assert jax.device_count() == 8
+        # n = 300 is not a multiple of 8 → (B, n_pad/8) zero-row padding on
+        # every shard; ragged ks → the k_eff freeze mask on two tenants
+        fs = [ExemplarClustering(
+                  jnp.asarray(blobs(300, 16, centers=8, seed=30 + t)[0]))
+              for t in range(3)]
+        ks = [6, 2, 4]
+
+        for plan in ("device_sharded", "device_sharded_pool"):
+            mode = plan
+            for kind, ref in (
+                    ("dense", lambda f, kk: greedy(f, kk, mode=mode)),
+                    ("lazy", lambda f, kk: lazy_greedy(f, kk, mode=mode))):
+                key = f"bsh8_{plan}_{kind}"
+                results = run_selection_batch(
+                    fs, kind=kind, k=max(ks), ks=ks, counter_key=key,
+                    plan=plan)
+                assert DEVICE_TRACE_COUNTS[key] == 1, (
+                    key, DEVICE_TRACE_COUNTS)
+                for t, (f, res) in enumerate(zip(fs, results)):
+                    single = ref(f, ks[t])
+                    assert res.indices == single.indices, (
+                        plan, kind, t, res.indices, single.indices)
+                    assert res.evaluations == single.evaluations, (
+                        plan, kind, t)
+                    np.testing.assert_allclose(
+                        res.trajectory, single.trajectory, atol=1e-5)
+                # repeat batch: same signature, no retrace
+                again = run_selection_batch(
+                    fs, kind=kind, k=max(ks), ks=ks, counter_key=key,
+                    plan=plan)
+                assert DEVICE_TRACE_COUNTS[key] == 1, (
+                    key, DEVICE_TRACE_COUNTS)
+                assert [r.indices for r in again] == \\
+                    [r.indices for r in results]
+        print("BATCHED_SHARDED_OK")
+    """)
+    assert "BATCHED_SHARDED_OK" in out
+
+
 def test_greedi_partition_merge_8_devices():
     """GreeDi at real mesh width: 8 partitions solved independently, the
     8·k partials merged under the sharded cache. Certify the (1−1/e)²

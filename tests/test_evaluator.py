@@ -160,6 +160,60 @@ def test_sharded_selection_sizes_tile_from_local_height(monkeypatch):
     assert calls == [(n_loc, 250, ndev)], calls
 
 
+def test_device_block_m_batch_mesh_composition(monkeypatch):
+    """Regression (batched × sharded autotuning): when BOTH factors apply,
+    the tile must be sized from B·n_loc rows — the (B, n/p) slab a shard
+    actually scores — with the shared-memory-space cap divided ONCE by the
+    coexisting-tile count. Sizing from B·n GLOBAL rows (or dividing the cap
+    again per factor) under-fills every shard p×."""
+    from repro.core import engine as eng
+
+    monkeypatch.setattr(eng, "_GAIN_TILE_CAP_ELEMS", None)
+    monkeypatch.setattr(eng, "free_memory_bytes", lambda device=None: None)
+    # fallback cap 2^25 elems, 4 coexisting tiles → 2^23 each; B·n_loc =
+    # 4·2^16 = 2^18 rows → a 32-wide tile fits exactly
+    assert eng._device_block_m(1 << 16, 64, tiles_per_memory=4,
+                               n_batch=4) == 32
+    # the regression shapes: sized from B·n GLOBAL (n = n_loc·p = 2^18)
+    # the same problem collapses to an 8-wide tile — 4× under-filled
+    assert eng._device_block_m((1 << 16) * 4, 64, tiles_per_memory=4,
+                               n_batch=4) == 8
+    # each factor alone reduces to the already-pinned single-axis behavior
+    assert eng._device_block_m(1 << 18, 64, n_batch=4) == \
+        eng._device_block_m(1 << 20, 64)
+    assert eng._device_block_m(1 << 16, 64, tiles_per_memory=4) == 64
+
+
+def test_batched_sharded_selection_sizes_tile_from_local_height(monkeypatch):
+    """End to end: run_selection_batch on a sharded plan must hand the
+    autotuner (n_loc, m_widest, tiles_per_memory, B) — local shard height
+    AND batch width, cap split once by the mesh."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import distributed as dist
+    from repro.core.engine import run_selection_batch
+    from repro.core.functions import ExemplarClustering
+
+    calls = []
+    real = dist._device_block_m
+
+    def spy(n, m, tiles=1, n_batch=1):
+        calls.append((n, m, tiles, n_batch))
+        return real(n, m, tiles, n_batch=n_batch)
+
+    monkeypatch.setattr(dist, "_device_block_m", spy)
+    rng = np.random.default_rng(3)
+    fs = [ExemplarClustering(
+              jnp.asarray((rng.normal(size=(250, 8)) + 2).astype(np.float32)))
+          for _ in range(3)]
+    run_selection_batch(fs, kind="dense", k=3, plan="device_sharded",
+                        counter_key="eval_spy_bsh")
+    ndev = jax.device_count()
+    n_loc = -(-250 // ndev)
+    assert calls == [(n_loc, 250, ndev, 3)], calls
+
+
 def test_fp16_strict_reduces_mu():
     """The paper's remediation: FP16 shrinks the per-set footprint."""
     assert bytes_per_set(1000, 10, 100, FP16_STRICT, "fused") < \

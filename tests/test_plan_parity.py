@@ -10,6 +10,9 @@ and evaluation counts across the full product
   × n ∈ {1024, 8192} (exemplar; the zoo axis runs at n = 1024)
   × batch B ∈ {1, 4} (the batched device plan: B per-tenant-distinct
     requests in one dispatch, each compared against ITS OWN host run)
+  × batched-sharded B ∈ {1, 4} × {device_sharded, device_sharded_pool}
+    (the (B, n/p) mesh composition: each demuxed tenant compared against
+    ITS OWN unbatched sharded run — selections and eval counts exact)
 
 replacing the ad-hoc per-plan parity tests previously scattered across
 test_device_optimizers.py / test_engine_sharded.py. Every cell runs all
@@ -203,6 +206,55 @@ def test_plan_parity_matrix_batch_axis(b, strategy, backend):
         np.testing.assert_allclose(
             res.trajectory, ref.trajectory, atol=TRAJ_ATOL[backend],
             err_msg=f"batched request {t} trajectory under "
+                    f"{strategy}/{backend}/B={b}")
+
+
+# ---------------------------------------------------------------------------
+# Batched × sharded composition: the same B-tenant dispatch laid out as
+# (B, n/p) across the mesh. Each tenant's column rides the SAME per-round
+# psum (one O(B·m) collective, not B), so every demuxed result must be
+# bit-identical — selections AND eval counts — to that tenant's own
+# unbatched sharded run. Under plain pytest this is a 1-device mesh; the CI
+# pallas-interpret job re-runs it on 2 forced devices and the 8-device
+# subprocess case lives in test_engine_sharded.py.
+# ---------------------------------------------------------------------------
+
+SHARDED_REF = {
+    "dense": lambda f, seed, plan: greedy(f, K, mode=plan),
+    "stochastic": lambda f, seed, plan: stochastic_greedy(
+        f, K, eps=0.05, seed=seed, mode=plan),
+    "lazy": lambda f, seed, plan: lazy_greedy(f, K, mode=plan),
+}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("strategy", sorted(STRATEGIES))
+@pytest.mark.parametrize("plan", ("device_sharded", "device_sharded_pool"))
+@pytest.mark.parametrize("b", (1, 4))
+def test_plan_parity_matrix_batched_sharded(b, plan, strategy, backend):
+    from repro.core import run_selection_batch
+    from repro.core.service import _stochastic_samples
+
+    fs = _batch_funcs(backend, b)
+    cand = None
+    if strategy == "stochastic":
+        cand = np.stack([_stochastic_samples(BATCH_N, K, 0.05, seed=t)
+                         for t in range(b)])
+    results = run_selection_batch(
+        fs, kind=strategy, k=K, cand_rounds=cand, plan=plan,
+        counter_key=f"parity_bsh_{plan}_{strategy}")
+    assert len(results) == b
+    for t, (f, res) in enumerate(zip(fs, results)):
+        ref = SHARDED_REF[strategy](f, t, plan)
+        assert res.indices == ref.indices, (
+            f"batched {plan} request {t} diverges from unbatched under "
+            f"{strategy}/{backend}/B={b}: {res.indices} != {ref.indices}")
+        assert res.evaluations == ref.evaluations, (
+            f"batched {plan} request {t} evaluation count diverges under "
+            f"{strategy}/{backend}/B={b}")
+        np.testing.assert_allclose(
+            res.trajectory, ref.trajectory, atol=TRAJ_ATOL[backend],
+            err_msg=f"batched {plan} request {t} trajectory under "
                     f"{strategy}/{backend}/B={b}")
 
 
